@@ -1,0 +1,47 @@
+"""Bench 5 — Pallas kernel wrappers vs jnp oracles (interpret mode on CPU;
+numbers are correctness-path timings, the TPU perf story lives in the
+dry-run roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import row, timeit
+
+
+def main() -> list[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    B, S, H, Hkv, D = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    t = timeit(lambda: ops.flash_attention(q, k, v, causal=True).block_until_ready())
+    rows.append(row("kernels.flash_attention_interp", t * 1e6, f"S={S} H={H}"))
+
+    la = -jnp.abs(jnp.asarray(rng.normal(size=(2, 512, 256)), jnp.float32)) * 0.2
+    bb = jnp.asarray(rng.normal(size=(2, 512, 256)), jnp.float32)
+    t = timeit(lambda: ops.rglru_scan(la, bb, chunk=128).block_until_ready())
+    rows.append(row("kernels.rglru_scan_interp", t * 1e6, "S=512 D=256"))
+
+    r = jnp.asarray(rng.normal(size=(1, 128, 2, 64)) * 0.5, jnp.float32)
+    lw = -jnp.abs(jnp.asarray(rng.normal(size=(1, 128, 2, 64)), jnp.float32)) * 0.3
+    u = jnp.asarray(rng.normal(size=(2, 64)) * 0.1, jnp.float32)
+    t = timeit(lambda: ops.wkv6(r, r, r, lw, u, chunk=32).block_until_ready())
+    rows.append(row("kernels.wkv6_interp", t * 1e6, "S=128 H=2 D=64"))
+
+    x = jnp.asarray(rng.normal(size=(512, 1024)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(1024,)) * 0.1, jnp.float32)
+    t = timeit(lambda: ops.rmsnorm(x, s).block_until_ready())
+    t_ref = timeit(lambda: jax.jit(ref.rmsnorm_ref)(x, s).block_until_ready())
+    rows.append(row("kernels.rmsnorm_interp", t * 1e6,
+                    f"ref_jit={t_ref*1e6:.0f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

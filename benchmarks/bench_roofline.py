@@ -1,0 +1,43 @@
+"""Bench 6 — roofline table from the dry-run artifacts (reads
+experiments/dryrun/*.json; run `python -m repro.launch.dryrun --all` first).
+Emits one row per (arch x shape x mesh) cell; the EXPERIMENTS.md tables are
+generated from the same records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+
+def main() -> list[str]:
+    rows = []
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        return [row("roofline.missing", 0, "run repro.launch.dryrun first")]
+    n_ok = n_err = n_skip = 0
+    for f in files:
+        with open(f) as fh:
+            d = json.load(fh)
+        cell = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        if d["status"] == "skip":
+            n_skip += 1
+            continue
+        if d["status"] == "error":
+            n_err += 1
+            rows.append(row(f"roofline.{cell}", 0, "ERROR"))
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        rows.append(row(
+            f"roofline.{cell}", r["step_s"] * 1e6,
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_flops_ratio']:.2f} "
+            f"fits16g={d['memory']['fits_16gb']}"))
+    rows.append(row("roofline.summary", n_ok, f"ok={n_ok} err={n_err} skip={n_skip}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,59 @@
+"""Shared benchmark helpers + the demo application (the paper's 既存アプリ:
+numeric Python with matmul / DFT / iterative loops)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+DEMO_SRC = """
+def app(a, b, x, sig_re, sig_im, n, m, k, iters, fftn):
+    c = np.zeros((n, m))
+    for i in range(n):           # naive matmul -> function-block offload
+        for j in range(m):
+            acc = 0.0
+            for t in range(k):
+                acc = acc + a[i, t] * b[t, j]
+            c[i, j] = acc
+    out_re = np.zeros((fftn,))
+    out_im = np.zeros((fftn,))
+    for kk in range(fftn):       # naive DFT -> fft block offload
+        sr = 0.0
+        si = 0.0
+        for t in range(fftn):
+            ang = -2.0 * math.pi * kk * t / fftn
+            sr = sr + sig_re[t] * math.cos(ang) - sig_im[t] * math.sin(ang)
+            si = si + sig_re[t] * math.sin(ang) + sig_im[t] * math.cos(ang)
+        out_re[kk] = sr
+        out_im[kk] = si
+    y = np.zeros((n,))
+    for it in range(iters):      # vector iteration -> GA loop offload
+        y = y + np.tanh(c @ x) * 0.1
+    s = 0.0
+    for i in range(n):           # scalar reduction -> GA decides (stays)
+        s = s + y[i] * y[i]
+    return c, y, s, out_re, out_im
+"""
+
+DEMO_CONSTS = {"n": 20, "m": 20, "k": 20, "iters": 40, "fftn": 48}
+
+
+def demo_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(a=rng.random((20, 20)), b=rng.random((20, 20)),
+                x=rng.random(20), sig_re=rng.random(48), sig_im=rng.random(48))
+
+
+def timeit(fn, repeats=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

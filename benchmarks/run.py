@@ -1,0 +1,49 @@
+"""Benchmark driver — one bench per paper claim/table.
+
+  PYTHONPATH=src python -m benchmarks.run [--only ga,block,transfer,...]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: ga,block,transfer,frontends,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_block_offload, bench_frontends,
+                            bench_ga_offload, bench_kernels, bench_roofline,
+                            bench_transfer)
+    benches = {
+        "ga": bench_ga_offload.main,
+        "block": bench_block_offload.main,
+        "transfer": bench_transfer.main,
+        "frontends": bench_frontends.main,
+        "kernels": bench_kernels.main,
+        "roofline": bench_roofline.main,
+    }
+    only = {s for s in args.only.split(",") if s}
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            for line in fn():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}.FAILED,0,{type(e).__name__}: {e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

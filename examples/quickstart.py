@@ -1,0 +1,55 @@
+"""Quickstart: build a model, let the offload planner pick implementations,
+train a few steps, serve a few tokens.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import block_offload_pass, default_db
+from repro.core.frontends import module_frontend
+from repro.models import REFERENCE_PLAN, build_model
+from repro.models.plan import ExecPlan
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.optim import OptimizerConfig
+from repro.optim.schedule import make_schedule
+from repro.runtime.serve import ServeConfig, Server
+from repro.runtime.train import init_train_state, make_train_step
+
+
+def main():
+    # 1. a reduced qwen3 (any of the 10 assigned archs works: --arch style)
+    cfg = get_config("qwen3_0_6b").reduced()
+    model = build_model(cfg)
+    print(f"arch={cfg.arch_id} params={sum(x.size for x in jax.tree_util.tree_leaves(model.init(jax.random.key(0))))/1e6:.2f}M")
+
+    # 2. function-block offload: pattern DB picks accelerated implementations
+    graph = module_frontend.build_graph(cfg)
+    block = block_offload_pass(graph, default_db())
+    plan = ExecPlan(compute_dtype="float32").replace(**block.plan_updates)
+    print("block offload ->", block.plan_updates)
+
+    # 3. train a few steps
+    data = SyntheticLMDataset(DataConfig(seq_len=64, global_batch=4,
+                                         vocab=cfg.vocab, seed=0))
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(
+        model, plan, OptimizerConfig(lr=3e-3, weight_decay=0.0),
+        make_schedule("constant", peak_lr=3e-3, warmup_steps=1)))
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        state, metrics = step(state, batch)
+        if i % 3 == 0:
+            print(f"step {i}: loss={float(metrics['loss']):.4f}")
+
+    # 4. serve
+    server = Server(model, state.params, REFERENCE_PLAN,
+                    ServeConfig(max_new_tokens=8))
+    toks = jnp.asarray(data.batch(0)["tokens"][:2, :16])
+    out = server.generate({"tokens": toks})
+    print("generated:", out.tolist())
+
+
+if __name__ == "__main__":
+    main()

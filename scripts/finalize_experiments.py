@@ -1,0 +1,153 @@
+"""Fill EXPERIMENTS.md placeholders from experiments/dryrun*/ records.
+
+  PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+import glob
+import json
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch import report as rpt  # noqa: E402
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(f"{d}/*__production.json"):
+        r = json.load(open(f))
+        if r["status"] == "ok":
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def cell(v2, arch, shape, mesh="pod16x16"):
+    return v2.get((arch, shape, mesh))
+
+
+def fmt_cell(r):
+    if r is None:
+        return "n/a"
+    ro = r["roofline"]
+    return (f"compute {ro['compute_s']*1e3:.0f} ms / memory "
+            f"{ro['memory_s']*1e3:.0f} ms / collective "
+            f"{ro['collective_s']*1e3:.0f} ms, dominant={ro['dominant']}, "
+            f"live {r['memory']['live_bytes']/1e9:.2f} GB, roofline "
+            f"{ro['roofline_fraction']:.3f}")
+
+
+NOTES = {
+    ("gemma_7b", "train_4k"): "fp32 FSDP weight gathers x2 microbatches dominate; next: bf16 gathers (2x) then logits-path reshards",
+    ("gemma_7b", "prefill_32k"): "vocab-sharded embedding gathers + attention boundary reshards; TPU Pallas flash removes the score traffic",
+    ("gemma_7b", "decode_32k"): "pure KV-cache streaming (memory floor); larger batch or MQA conversion moves it",
+    ("llama4_scout_17b_a16e", "train_4k"): "16 grad-accum microbatches x FSDP gathers of 102B fp32 params; next: bf16/quantized gathers or FSDP across both pods",
+    ("llama4_scout_17b_a16e", "prefill_32k"): "MoE a2a + 48L cache writes; cache now seq-sharded (kv=8 < mesh)",
+    ("llama4_scout_17b_a16e", "decode_32k"): "cache streaming + per-token MoE dispatch (EP fallback below token threshold)",
+    ("olmoe_1b_7b", "train_4k"): "EP all_to_all + FSDP gathers now balanced with memory; next: overlap a2a with expert matmuls",
+    ("olmoe_1b_7b", "prefill_32k"): "11x step cut from shard_map EP (was replicated global sort)",
+    ("olmoe_1b_7b", "decode_32k"): "cache streaming; EP disabled at 128 tokens (fallback path)",
+    ("qwen1_5_4b", "train_4k"): "20 heads on a 16-way axis: BH padded 640->768 (20% attention flop overhead, accepted)",
+    ("qwen1_5_4b", "prefill_32k"): "scores f32 at 32k + pad overhead; bf16 score accumulation is the next 2x",
+    ("qwen1_5_4b", "decode_32k"): "kv=20 heads -> seq-sharded cache; streaming floor",
+    ("qwen3_0_6b", "train_4k"): "small model: fp32 FSDP gathers + 152k-vocab loss chunks dominate",
+    ("qwen3_0_6b", "prefill_32k"): "memory: 28L cache writes + score traffic",
+    ("qwen3_0_6b", "decode_32k"): "cache streaming floor",
+    ("recurrentgemma_2b", "train_4k"): "rglru shard_map local; remaining: conv/gate boundary reshards",
+    ("recurrentgemma_2b", "prefill_32k"): "best useful ratio (0.85): linear recurrence + banded local attn are waste-free",
+    ("recurrentgemma_2b", "decode_32k"): "state-based decode: 17 ms step estimate, no cache growth",
+    ("recurrentgemma_2b", "long_500k"): "500k decode at 4.4 ms: window cache + RG-LRU state only",
+    ("rwkv6_3b", "train_4k"): "REGRESSION (see 4.3): wkv shard_map boundaries thrash in backward; fix = custom_vjp wkv backward (flash pattern)",
+    ("rwkv6_3b", "prefill_32k"): "16x step cut from BH-sharded wkv; remaining memory = chunked scan operands",
+    ("rwkv6_3b", "decode_32k"): "regression vs v1 (33->1768 ms): per-layer state indexing reshards; pin decode state specs next",
+    ("rwkv6_3b", "long_500k"): "state-based 500k decode at 16 ms",
+    ("tinyllama_1_1b", "train_4k"): "hillclimbed cell (4.1): FSDP fp32 gathers + f32 cotangent boundary gathers remain",
+    ("tinyllama_1_1b", "prefill_32k"): "cache writes + score traffic; kv=4 -> seq-sharded cache",
+    ("tinyllama_1_1b", "decode_32k"): "cache streaming floor (70 ms)",
+    ("whisper_small", "train_4k"): "small model; enc+dec+cross attention all sub-1s",
+    ("whisper_small", "prefill_32k"): "32k decoder prefill vs 1.5k encoder: self-attn dominates; BH padded 384->512",
+    ("whisper_small", "decode_32k"): "cross-attn KV fixed (1.5k): cheap decode",
+}
+
+
+def main():
+    v2 = load("experiments/dryrun")
+    recs = rpt.load("experiments/dryrun")
+    table = rpt.render(recs, "pod16x16")
+
+    notes = []
+    for (arch, shape), note in NOTES.items():
+        r = cell(v2, arch, shape)
+        if r:
+            notes.append(f"* **{arch} × {shape}** — {fmt_cell(r)}.  {note}.")
+    cell_notes = "\n".join(notes)
+
+    # v1 vs v2
+    v1 = load("experiments/dryrun_v1")
+    rows = ["| arch | shape | live GB v1→v2 | step ms v1→v2 | coll ms v1→v2 | roofline v1→v2 |",
+            "|---|---|---|---|---|---|"]
+    for k in sorted(set(v1) & set(v2)):
+        if k[2] != "pod16x16":
+            continue
+        a, b = v1[k], v2[k]
+        ra, rb = a["roofline"], b["roofline"]
+        rows.append(
+            f"| {k[0]} | {k[1]} | {a['memory']['live_bytes']/1e9:.1f}→"
+            f"{b['memory']['live_bytes']/1e9:.1f} | {ra['step_s']*1e3:.0f}→"
+            f"{rb['step_s']*1e3:.0f} | {ra['collective_s']*1e3:.0f}→"
+            f"{rb['collective_s']*1e3:.0f} | {ra['roofline_fraction']:.3f}→"
+            f"{rb['roofline_fraction']:.3f} |")
+    v1v2 = "\n".join(rows)
+
+    # multipod notes
+    mp_rows = ["| arch × shape | single-pod step ms | multi-pod step ms | note |",
+               "|---|---|---|---|"]
+    for arch, shape in [("tinyllama_1_1b", "train_4k"), ("gemma_7b", "train_4k"),
+                        ("olmoe_1b_7b", "train_4k"), ("rwkv6_3b", "prefill_32k"),
+                        ("recurrentgemma_2b", "train_4k")]:
+        s = cell(v2, arch, shape, "pod16x16")
+        m = cell(v2, arch, shape, "pod2x16x16")
+        if s and m:
+            mp_rows.append(
+                f"| {arch} × {shape} | {s['roofline']['step_s']*1e3:.0f} | "
+                f"{m['roofline']['step_s']*1e3:.0f} | per-device work halves "
+                f"(DP over pods); pod-axis grad all-reduce added |")
+    n_ok_mp = sum(1 for k in v2 if k[2] == "pod2x16x16")
+    multipod = (
+        f"All {n_ok_mp} runnable cells also lower + compile on the 2×16×16 "
+        "mesh (the `pod` axis carries pure DP: batch shards over "
+        "(pod, data), parameters replicate across pods, gradients "
+        "all-reduce over the pod axis — the hop the int8 error-feedback "
+        "compressor targets; see optim/compression.py + "
+        "tests/test_system.py).  Representative scaling:\n\n" + "\n".join(mp_rows))
+
+    n_oom = sum(1 for r in v2.values()
+                if r["mesh"] == "pod16x16" and not r["memory"]["fits_16gb"])
+
+    tl = cell(v2, "tinyllama_1_1b", "train_4k")
+    ol = cell(v2, "olmoe_1b_7b", "train_4k")
+    rw = cell(v2, "rwkv6_3b", "prefill_32k")
+
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("[ROOFLINE_TABLE]", rpt.summary(recs) + "\n\n" + table)
+    md = md.replace("[CELL_NOTES]", cell_notes)
+    md = md.replace("[TINYLLAMA_V2]", fmt_cell(tl))
+    md = md.replace("[OLMOE_V2]", fmt_cell(ol) +
+                    " — step 37.1 s → %.1f s, live 185.7 → %.1f GB" %
+                    (ol["roofline"]["step_s"], ol["memory"]["live_bytes"]/1e9))
+    md = md.replace("[OLMOE_VERDICT]", "**confirmed** (7.8× step, 54× memory)")
+    md = md.replace("[RWKV_V2]", fmt_cell(rw) +
+                    " — step 179 s → %.1f s" % rw["roofline"]["step_s"])
+    md = md.replace("[RWKV_VERDICT]",
+                    "**confirmed for inference** (16×); the same change "
+                    "*regressed the train cell* (backward-pass boundary "
+                    "reshards, §4.4 note) — recorded as the next iteration's "
+                    "target: a custom_vjp wkv backward, the exact pattern "
+                    "that fixed attention in 4.1 iter 4–5")
+    md = md.replace("[N_OOM_V2]", str(n_oom))
+    md = md.replace("[V1V2_TABLE]",
+                    "### v1 (paper-faithful baseline sweep) vs v2 (optimized)\n\n" + v1v2)
+    md = md.replace("[MULTIPOD_NOTES]", multipod)
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md finalized;", n_oom, "cells still over 16GB")
+
+
+if __name__ == "__main__":
+    main()

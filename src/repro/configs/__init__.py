@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ALL_SHAPES,
+    ARCH_IDS,
+    SHAPES_BY_NAME,
+    ArchConfig,
+    MoEConfig,
+    ShapeSpec,
+    all_configs,
+    get_config,
+)
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "SHAPES_BY_NAME",
+    "ArchConfig",
+    "MoEConfig",
+    "ShapeSpec",
+    "all_configs",
+    "get_config",
+]

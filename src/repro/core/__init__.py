@@ -1,0 +1,29 @@
+"""The paper's primary contribution: common automatic offload for diverse
+source-language frontends — GA loop offload + pattern-DB function-block
+offload + transfer hoisting over a language-independent Region IR.
+"""
+from repro.core.block_offload import BlockOffloadResult, block_offload_pass
+from repro.core.fitness import CostModelFitness, WallClockFitness
+from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
+from repro.core.genes import GeneCoding, Site, coding_from_graph
+from repro.core.ir import Region, RegionGraph
+from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
+from repro.core.pattern_db import Match, PatternDB, PatternRecord, default_db
+from repro.core.planner import (ModulePlanResult, PythonPlanResult,
+                                plan_module_offload, plan_python_offload)
+from repro.core.transfer_planner import Transfer, TransferPlan, plan_transfers
+from repro.core.verifier import VerifyResult, verify
+
+__all__ = [
+    "BlockOffloadResult", "block_offload_pass",
+    "CostModelFitness", "WallClockFitness",
+    "Evaluation", "GAConfig", "GAResult", "run_ga",
+    "GeneCoding", "Site", "coding_from_graph",
+    "Region", "RegionGraph",
+    "LoopOffloadResult", "loop_offload_pass",
+    "Match", "PatternDB", "PatternRecord", "default_db",
+    "ModulePlanResult", "PythonPlanResult",
+    "plan_module_offload", "plan_python_offload",
+    "Transfer", "TransferPlan", "plan_transfers",
+    "VerifyResult", "verify",
+]

@@ -1,0 +1,540 @@
+"""Python-`ast` frontend (paper §3.3.2 / §4.3.2).
+
+Parses a *numeric* Python function with ``ast`` (exactly the tool the paper
+names), extracts its loop statements and per-statement variable def/use sets,
+and builds:
+
+  * a :class:`RegionGraph` for the common core (genes, pattern DB, transfer
+    planner), and
+  * an *executor* that runs the function with any offload pattern: bit 0
+    keeps a loop in the CPython interpreter (the paper's CPU path), bit 1
+    compiles it with ``jax.jit`` after an np→jnp / in-place→functional
+    rewrite (the paper's PyCUDA path, retargeted at XLA).
+
+Loops that fail to compile under the offload rewrite are excluded from the
+gene (paper: エラーが出る for 文は GA の対象外とする).  The executor counts
+host↔device transfers and consults the transfer planner to hoist
+loop-invariant transfers out of interpreted loops (paper's 一括転送).
+"""
+from __future__ import annotations
+
+import ast
+import copy
+import inspect
+import textwrap
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import similarity as sim
+from repro.core.ir import Region, RegionGraph
+
+# ---------------------------------------------------------------------------
+# AST analysis helpers
+# ---------------------------------------------------------------------------
+
+
+def _defs_uses(node: ast.AST) -> tuple[set, set]:
+    defs: set = set()
+    uses: set = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            if isinstance(n.ctx, ast.Store):
+                defs.add(n.id)
+            else:
+                uses.add(n.id)
+        elif isinstance(n, ast.Subscript):
+            base = n.value
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Name):
+                if isinstance(n.ctx, ast.Store):
+                    defs.add(base.id)
+                    uses.add(base.id)  # partial write reads the rest
+        elif isinstance(n, ast.AugAssign):
+            t = n.target
+            if isinstance(t, ast.Name):
+                uses.add(t.id)
+    return defs, uses
+
+
+def _callees(node: ast.AST) -> tuple:
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            name = sim._call_name(n)
+            if name:
+                out.append(name)
+    return tuple(out)
+
+
+def _static_trip_count(loop: ast.For, consts: dict) -> Optional[int]:
+    it = loop.iter
+    if isinstance(it, ast.Call) and isinstance(it.func, ast.Name) and it.func.id == "range":
+        vals = []
+        for a in it.args:
+            if isinstance(a, ast.Constant) and isinstance(a.value, int):
+                vals.append(a.value)
+            elif isinstance(a, ast.Name) and isinstance(consts.get(a.id), int):
+                vals.append(consts[a.id])
+            else:
+                return None
+        if len(vals) == 1:
+            return vals[0]
+        if len(vals) >= 2:
+            step = vals[2] if len(vals) == 3 else 1
+            return max(0, (vals[1] - vals[0] + step - 1) // step)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# np -> jnp rewriting (the "language-dependent code generation")
+# ---------------------------------------------------------------------------
+
+
+class _JaxRewriter(ast.NodeTransformer):
+    """np.X -> jnp.X, math.X -> jnp.X, a[i] = v -> a = a.at[i].set(v)."""
+
+    def visit_Name(self, node: ast.Name):
+        if node.id in ("np", "numpy", "math"):
+            return ast.copy_location(ast.Name(id="jnp", ctx=node.ctx), node)
+        return node
+
+    def visit_Assign(self, node: ast.Assign):
+        self.generic_visit(node)
+        if len(node.targets) == 1 and isinstance(node.targets[0], ast.Subscript):
+            tgt = node.targets[0]
+            base = copy.deepcopy(tgt.value)
+            _set_ctx_load(base)
+            sl = copy.deepcopy(tgt.slice)
+            _set_ctx_load(sl)
+            at = ast.Attribute(value=base, attr="at", ctx=ast.Load())
+            idx = ast.Subscript(value=at, slice=sl, ctx=ast.Load())
+            call = ast.Call(
+                func=ast.Attribute(value=idx, attr="set", ctx=ast.Load()),
+                args=[node.value], keywords=[])
+            new_target = copy.deepcopy(tgt.value)
+            if not isinstance(new_target, ast.Name):
+                raise _RewriteError("can only functionalize writes to simple names")
+            new_target.ctx = ast.Store()
+            return ast.copy_location(
+                ast.Assign(targets=[new_target], value=call), node)
+        return node
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self.generic_visit(node)
+        if isinstance(node.target, ast.Subscript):
+            tgt = node.target
+            base = copy.deepcopy(tgt.value)
+            _set_ctx_load(base)
+            sl = copy.deepcopy(tgt.slice)
+            _set_ctx_load(sl)
+            at = ast.Attribute(value=base, attr="at", ctx=ast.Load())
+            idx = ast.Subscript(value=at, slice=sl, ctx=ast.Load())
+            method = {"Add": "add", "Mult": "multiply"}.get(type(node.op).__name__)
+            if method is None:
+                raise _RewriteError(f"unsupported augmented op {type(node.op).__name__}")
+            call = ast.Call(
+                func=ast.Attribute(value=idx, attr=method, ctx=ast.Load()),
+                args=[node.value], keywords=[])
+            new_target = copy.deepcopy(tgt.value)
+            if not isinstance(new_target, ast.Name):
+                raise _RewriteError("can only functionalize writes to simple names")
+            new_target.ctx = ast.Store()
+            return ast.copy_location(
+                ast.Assign(targets=[new_target], value=call), node)
+        return node
+
+
+class _RewriteError(Exception):
+    pass
+
+
+def _set_ctx_load(node: ast.AST) -> None:
+    for n in ast.walk(node):
+        if hasattr(n, "ctx"):
+            n.ctx = ast.Load()
+
+
+# ---------------------------------------------------------------------------
+# program model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Node:
+    """Executor tree node: plain statements or a (potentially offloadable) loop."""
+    kind: str                       # "stmt" | "loop"
+    region: Optional[str]           # region name for loops
+    stmts: list = field(default_factory=list)   # ast stmts ("stmt" nodes)
+    loop: Optional[ast.For] = None
+    body: list = field(default_factory=list)    # child _Nodes ("loop" nodes)
+
+
+class PyProgram:
+    """A parsed numeric Python function, ready for offload search."""
+
+    def __init__(self, fn: Callable | str, name: str = "",
+                 consts: Optional[dict] = None):
+        src = fn if isinstance(fn, str) else textwrap.dedent(inspect.getsource(fn))
+        self.source = src
+        tree = ast.parse(src)
+        fdefs = [n for n in tree.body if isinstance(n, ast.FunctionDef)]
+        assert fdefs, "source must contain a function definition"
+        self.fdef: ast.FunctionDef = fdefs[0]
+        self.name = name or self.fdef.name
+        self.arg_names = [a.arg for a in self.fdef.args.args]
+        self.consts = dict(consts or {})
+        self.output_names: list[str] = []
+        body = self._strip_returns(self.fdef.body)
+        self._regions: list[Region] = []
+        self._counter = 0
+        self.tree_nodes = self._build_nodes(body, depth=0, parent=None)
+        self._graph = RegionGraph(self._regions, "python_ast", self.name)
+        self._compiled_cache: dict[str, Callable] = {}
+
+    def _strip_returns(self, stmts: list) -> list:
+        out = []
+        for s in stmts:
+            if isinstance(s, ast.Return):
+                v = s.value
+                if isinstance(v, ast.Tuple):
+                    self.output_names = [e.id for e in v.elts if isinstance(e, ast.Name)]
+                elif isinstance(v, ast.Name):
+                    self.output_names = [v.id]
+                continue
+            out.append(s)
+        return out
+
+    # --- region extraction ---------------------------------------------------
+    def _build_nodes(self, stmts: list, depth: int, parent: Optional[str]) -> list:
+        nodes: list[_Node] = []
+        pending: list = []
+
+        def flush():
+            nonlocal pending
+            if pending:
+                name = f"stmt_{self._counter}"
+                self._counter += 1
+                d, u = set(), set()
+                for s in pending:
+                    dd, uu = _defs_uses(s)
+                    d |= dd
+                    u |= uu
+                self._regions.append(Region(
+                    name=name, kind="stmt", depth=depth, parent=parent,
+                    defs=frozenset(d), uses=frozenset(u),
+                    callees=tuple(c for s in pending for c in _callees(s)),
+                    feature_vector={}, offloadable=False))
+                nodes.append(_Node("stmt", name, stmts=list(pending)))
+                pending = []
+
+        for s in stmts:
+            if isinstance(s, ast.For):
+                flush()
+                rname = f"loop_{self._counter}"
+                self._counter += 1
+                d, u = _defs_uses(s)
+                region = Region(
+                    name=rname, kind="loop", depth=depth, parent=parent,
+                    defs=frozenset(d), uses=frozenset(u),
+                    callees=_callees(s),
+                    feature_vector=sim.ast_vector(s),
+                    offloadable=False,  # set by check_offloadable()
+                    alternatives=("interp", "jit"),
+                    trip_count=_static_trip_count(s, self.consts))
+                self._regions.append(region)
+                node = _Node("loop", rname, loop=s)
+                node.body = self._build_nodes(s.body, depth + 1, rname)
+                nodes.append(node)
+            else:
+                pending.append(s)
+        flush()
+        return nodes
+
+    @property
+    def graph(self) -> RegionGraph:
+        return self._graph
+
+    # --- offload feasibility (paper: failing loops leave the gene) -----------
+    def check_offloadable(self, example_inputs: dict) -> list[str]:
+        """Interpret the program once to snapshot the live environment at each
+        loop entry, then try to compile each loop against its snapshot; loops
+        that error are excluded from the gene (paper §4.2.2)."""
+        snaps: dict[str, dict] = {}
+        ex = Executor(self, {}, hoist_transfers=False)
+        ex.pre_loop_hook = lambda name, env: snaps.setdefault(name, dict(env))
+        ex.run(**example_inputs)
+        ok = []
+        for r in self._graph.loops():
+            env = snaps.get(r.name)
+            if env is None:
+                r.offloadable = False
+                r.meta["offload_error"] = "loop never entered during calibration"
+                continue
+            try:
+                node = self._find_loop(r.name)
+                fn, live_in, _ = self._compile_loop(node, env)
+                args = [jnp.asarray(env[v]) for v in live_in]
+                jax.eval_shape(fn, *args)
+                r.offloadable = True
+                ok.append(r.name)
+            except Exception as e:  # noqa: BLE001 — any failure disqualifies
+                r.offloadable = False
+                r.meta["offload_error"] = f"{type(e).__name__}: {e}"[:200]
+        return ok
+
+    def _find_loop(self, name: str, nodes: Optional[list] = None) -> _Node:
+        for n in (nodes if nodes is not None else self.tree_nodes):
+            if n.kind == "loop":
+                if n.region == name:
+                    return n
+                try:
+                    return self._find_loop(name, n.body)
+                except KeyError:
+                    pass
+        raise KeyError(name)
+
+    # --- loop compilation ------------------------------------------------------
+    @staticmethod
+    def _range_names(loop: ast.For) -> set:
+        """Names used inside range(...) calls anywhere in the loop subtree —
+        these must stay static (Python ints) so trip counts are concrete."""
+        names: set = set()
+        for n in ast.walk(loop):
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) \
+                    and n.func.id in ("range", "len"):
+                for a in n.args:
+                    for nn in ast.walk(a):
+                        if isinstance(nn, ast.Name):
+                            names.add(nn.id)
+        return names
+
+    @staticmethod
+    def _loop_targets(loop: ast.For) -> set:
+        tgts: set = set()
+        for n in ast.walk(loop):
+            if isinstance(n, ast.For) and isinstance(n.target, ast.Name):
+                tgts.add(n.target.id)
+        return tgts
+
+    def _compile_loop(self, node: _Node, env: dict) -> tuple[Callable, list, list]:
+        """Build + jit a function for one loop.  Returns (fn, live_in, live_out).
+
+        Arrays and non-range scalars become traced args; range/len bounds
+        become closure constants (static trip counts — the OpenACC "kernels"
+        region analogue).  Variables created inside the loop and assigned by
+        it are returned alongside the rewritten in-place updates.
+        """
+        region = self._graph.by_name(node.region)
+        key = node.region
+        loop_src = ast.unparse(node.loop)
+        static_names = self._range_names(node.loop)
+        targets = self._loop_targets(node.loop)
+
+        static: dict = {}
+        live_in: list[str] = []
+        for v in sorted((region.uses | region.defs) - targets):
+            if v in static_names:
+                val = env.get(v, self.consts.get(v))
+                if not isinstance(val, (int, np.integer)):
+                    raise _RewriteError(f"range bound '{v}' is not a static int")
+                static[v] = int(val)
+            elif v in env and isinstance(
+                    env[v], (np.ndarray, jax.Array, int, float, bool, np.number)):
+                live_in.append(v)
+        live_out = sorted((region.defs - targets) - set(static))
+        cache_key = (f"{key}:{hash(loop_src)}:{tuple(sorted(static.items()))}"
+                     f":{tuple(live_in)}:{tuple(live_out)}")
+        if cache_key in self._compiled_cache:
+            return self._compiled_cache[cache_key], live_in, live_out
+
+        rewritten = _JaxRewriter().visit(ast.parse(loop_src))
+        ast.fix_missing_locations(rewritten)
+        body_src = textwrap.indent(ast.unparse(rewritten), "    ")
+        fn_src = (f"def _offload({', '.join(live_in)}):\n"
+                  f"{body_src}\n"
+                  f"    return ({', '.join(live_out)}{',' if len(live_out) == 1 else ''})\n")
+        glb: dict = {"jnp": jnp, "jax": jax, "range": range, "len": len,
+                     "min": min, "max": max, "abs": abs, "float": float,
+                     "int": int, "enumerate": enumerate, "zip": zip}
+        glb.update(static)
+        glb.update({k: v for k, v in self.consts.items()
+                    if k not in live_in and k not in glb})
+        loc: dict = {}
+        exec(compile(ast.parse(fn_src), f"<offload:{key}>", "exec"), glb, loc)  # noqa: S102
+        fn = jax.jit(loc["_offload"])
+        self._compiled_cache[cache_key] = fn
+        return fn, live_in, live_out
+
+
+# ---------------------------------------------------------------------------
+# executor with transfer accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ExecStats:
+    h2d: int = 0
+    d2h: int = 0
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    jit_calls: int = 0
+    interp_loops: int = 0
+
+
+class Executor:
+    """Runs a PyProgram under an offload pattern with transfer accounting.
+
+    ``hoist_transfers=True`` enables the paper's batched-transfer
+    optimization: device copies of host arrays are cached and only
+    re-uploaded when the host version changes (so a loop-invariant array
+    transfers once instead of once per iteration).
+    """
+
+    def __init__(self, program: PyProgram, impl: dict[str, str],
+                 hoist_transfers: bool = True,
+                 globals_env: Optional[dict] = None,
+                 lib_calls: Optional[dict] = None):
+        self.p = program
+        self.impl = impl
+        self.lib_calls = lib_calls or {}  # region -> (callable, in_names, out_names)
+        self.hoist = hoist_transfers
+        self.stats = ExecStats()
+        self.globals = {"np": np, "math": __import__("math"),
+                        "range": range, "len": len, "min": min, "max": max,
+                        "abs": abs, "float": float, "int": int,
+                        "enumerate": enumerate, "zip": zip}
+        if globals_env:
+            self.globals.update(globals_env)
+        self._dev_cache: dict[str, tuple[int, Any]] = {}
+        self._ver: dict[str, int] = {}
+        self.pre_loop_hook: Optional[Callable[[str, dict], None]] = None
+
+    # --- transfers -------------------------------------------------------------
+    def _to_device(self, name: str, env: dict):
+        v = env[name]
+        if isinstance(v, jax.Array):
+            return v
+        ver = self._ver.get(name, 0)
+        if self.hoist and name in self._dev_cache:
+            cver, cval = self._dev_cache[name]
+            if cver == ver:
+                return cval
+        dv = jnp.asarray(v)
+        self.stats.h2d += 1
+        self.stats.h2d_bytes += getattr(v, "nbytes", 8)
+        self._dev_cache[name] = (ver, dv)
+        return dv
+
+    def _to_host(self, name: str, env: dict):
+        v = env[name]
+        if isinstance(v, jax.Array):
+            hv = np.asarray(v)
+            self.stats.d2h += 1
+            self.stats.d2h_bytes += hv.nbytes
+            env[name] = hv
+            self._ver[name] = self._ver.get(name, 0)  # same logical version
+            self._dev_cache[name] = (self._ver.get(name, 0), v)
+            return hv
+        return v
+
+    def _bump(self, names) -> None:
+        for n in names:
+            self._ver[n] = self._ver.get(n, 0) + 1
+            self._dev_cache.pop(n, None) if not self.hoist else None
+
+    # --- execution ------------------------------------------------------------
+    def run(self, **inputs) -> dict:
+        env = dict(self.p.consts)
+        env.update(inputs)
+        for name in list(env):
+            self._ver[name] = 0
+        self._exec_nodes(self.p.tree_nodes, env)
+        return env
+
+    def _exec_nodes(self, nodes: list, env: dict) -> None:
+        for node in nodes:
+            if node.kind == "stmt":
+                self._exec_stmts(node, env)
+            else:
+                if self.pre_loop_hook is not None:
+                    self.pre_loop_hook(node.region, env)
+                if node.region in self.lib_calls and \
+                        self.impl.get(node.region) == "lib":
+                    self._exec_lib(node, env)
+                    continue
+                region = self.p.graph.by_name(node.region)
+                offload = region.offloadable and self.impl.get(node.region) == "jit"
+                if offload:
+                    self._exec_offloaded(node, env)
+                else:
+                    self._exec_interp_loop(node, env)
+
+    def _exec_stmts(self, node: _Node, env: dict) -> None:
+        region = self.p.graph.by_name(node.region)
+        for v in region.uses:
+            if v in env:
+                self._to_host(v, env)
+        code = compile(ast.Module(body=node.stmts, type_ignores=[]),
+                       f"<interp:{node.region}>", "exec")
+        g = dict(self.globals)
+        g.update(env)
+        exec(code, g)  # noqa: S102
+        for v in region.defs | region.uses:
+            if v in g:
+                env[v] = g[v]
+        self._bump(region.defs)
+
+    def _exec_offloaded(self, node: _Node, env: dict) -> None:
+        fn, live_in, live_out = self.p._compile_loop(node, env)
+        args = [self._to_device(v, env) for v in live_in]
+        outs = fn(*args)
+        self.stats.jit_calls += 1
+        for v, o in zip(live_out, outs):
+            env[v] = o
+            self._ver[v] = self._ver.get(v, 0) + 1
+            self._dev_cache[v] = (self._ver[v], o)
+
+    def _exec_lib(self, node: _Node, env: dict) -> None:
+        """Function-block offload: run a device-tuned library implementation
+        in place of the matched block (paper §4.2.1)."""
+        fn, in_names, out_names = self.lib_calls[node.region]
+        args = [self._to_device(v, env) for v in in_names]
+        outs = fn(*args)
+        self.stats.jit_calls += 1
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for v, o in zip(out_names, outs):
+            env[v] = o
+            self._ver[v] = self._ver.get(v, 0) + 1
+            self._dev_cache[v] = (self._ver[v], o)
+
+    def _exec_interp_loop(self, node: _Node, env: dict) -> None:
+        self.stats.interp_loops += 1
+        region = self.p.graph.by_name(node.region)
+        loop = node.loop
+        for v in region.uses:
+            if v in env and not any(
+                    ch.kind == "loop" and self.impl.get(ch.region) == "jit"
+                    for ch in node.body):
+                self._to_host(v, env)
+        g = dict(self.globals)
+        g.update(env)
+        iter_vals = eval(compile(ast.Expression(loop.iter), "<it>", "eval"), g)  # noqa: S307
+        tname = loop.target.id if isinstance(loop.target, ast.Name) else None
+        for val in iter_vals:
+            if tname:
+                env[tname] = val
+            self._exec_nodes(node.body, env)
+
+    def outputs(self, env: dict, names: list) -> dict:
+        out = {}
+        for n in names:
+            v = env[n]
+            out[n] = np.asarray(v)
+        return out

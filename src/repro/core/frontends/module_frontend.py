@@ -1,0 +1,67 @@
+"""Module-graph frontend: repro model configs -> Region IR.
+
+The third "source language" (the declarative one, playing Java's role in
+the paper's trio): a model described by an :class:`ArchConfig` lowers to
+regions named after its offloadable sites — the ExecPlan knobs applicable to
+that architecture family.  Gene bit k toggles site k between its reference
+and offloaded implementation, exactly as the paper toggles loop statements.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.ir import Region, RegionGraph
+from repro.models.plan import ExecPlan
+
+# site -> (applicability predicate, callees exposed for DB name-matching)
+_SITE_DEFS = [
+    ("attn_impl", lambda c: c.attn_kind != "none",
+     ("attention", "softmax", "sdpa")),
+    ("norm_impl", lambda c: True, ("rmsnorm", "layer_norm")),
+    ("mlp_impl", lambda c: True, ("mlp", "ffn", "geglu", "swiglu")),
+    ("qkv_fused", lambda c: c.attn_kind != "none", ("qkv_proj", "matmul")),
+    ("rglru_impl", lambda c: bool(c.block_pattern), ("rglru", "linear_recurrence")),
+    ("wkv_impl", lambda c: c.family == "ssm", ("wkv", "rwkv", "time_mix")),
+    ("moe_impl", lambda c: c.moe is not None, ("moe", "top_k", "dispatch")),
+    ("loss_impl", lambda c: True, ("cross_entropy", "softmax", "logsumexp")),
+    ("remat", lambda c: True, ("checkpoint", "remat")),
+    ("gather_mode", lambda c: True, ("all_gather", "fsdp")),
+]
+
+_REF_OFFLOAD = {f: (r, o) for f, r, o in ExecPlan.OFFLOAD_SITES}
+
+
+def build_graph(cfg: ArchConfig) -> RegionGraph:
+    regions: list[Region] = []
+    for field, applicable, callees in _SITE_DEFS:
+        if not applicable(cfg):
+            continue
+        ref, off = _REF_OFFLOAD[field]
+        regions.append(Region(
+            name=field,
+            kind="loop" if field in ("attn_impl", "rglru_impl", "wkv_impl",
+                                     "loss_impl") else "block",
+            defs=frozenset({f"{field}_out"}),
+            uses=frozenset({f"{field}_in", "params"}),
+            callees=callees,
+            feature_vector={},
+            offloadable=True,
+            alternatives=(ref, off),
+            meta={"plan_field": field},
+        ))
+    return RegionGraph(regions, "module", cfg.arch_id)
+
+
+def plan_from_bits(graph: RegionGraph, bits, base: Optional[ExecPlan] = None,
+                   exclude: tuple = ()) -> ExecPlan:
+    """Decode a chromosome into an ExecPlan (respecting block-pass claims)."""
+    plan = base or ExecPlan()
+    sites = [r for r in graph.offloadable() if r.name not in exclude]
+    assert len(bits) == len(sites), (len(bits), len(sites))
+    kw = {}
+    for r, b in zip(sites, bits):
+        field = r.meta["plan_field"]
+        ref, off = _REF_OFFLOAD[field]
+        kw[field] = off if b else ref
+    return plan.replace(**kw)

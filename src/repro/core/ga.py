@@ -1,0 +1,144 @@
+"""Genetic-algorithm engine for offload-pattern search (paper §3.2.1, §4.2.2).
+
+Faithful to the paper's loop:
+  * initial population: random 0/1 chromosomes (the all-off and all-on
+    patterns are seeded so the baseline and full-offload are always tried),
+  * fitness from *measured* performance (wall clock or compiled cost model),
+  * invalid results (PCAST-style verification failure, compile error) get
+    processing time infinity -> fitness 0,
+  * roulette selection scaled by fitness, single-point crossover, bit-flip
+    mutation, elite copy,
+  * per-chromosome measurement cache (a pattern is never re-measured),
+  * fixed generation count, best chromosome wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class GAConfig:
+    population: int = 12
+    generations: int = 8
+    crossover_rate: float = 0.9
+    mutation_rate: float = 0.05
+    elite: int = 2
+    seed: int = 0
+    patience: Optional[int] = None    # stop after N generations w/o improvement
+
+
+@dataclass
+class Evaluation:
+    bits: tuple
+    time_s: float                     # inf if invalid
+    valid: bool
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def fitness(self) -> float:
+        return 0.0 if not self.valid or not math.isfinite(self.time_s) \
+            else 1.0 / max(self.time_s, 1e-12)
+
+
+@dataclass
+class GAResult:
+    best: Evaluation
+    history: list[dict]               # per generation: best/mean time
+    evaluations: int                  # unique chromosome measurements
+    cache_hits: int
+    baseline: Optional[Evaluation] = None   # all-off pattern
+
+    @property
+    def speedup_vs_baseline(self) -> float:
+        if self.baseline is None or not self.baseline.valid:
+            return float("nan")
+        return self.baseline.time_s / self.best.time_s
+
+
+FitnessFn = Callable[[tuple], Evaluation]
+
+
+def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
+           log: Optional[Callable[[str], None]] = None) -> GAResult:
+    """Search binary chromosomes of `length`; returns the fastest valid one."""
+    rng = np.random.default_rng(cfg.seed)
+    cache: dict[tuple, Evaluation] = {}
+    cache_hits = 0
+
+    def evaluate(bits: tuple) -> Evaluation:
+        nonlocal cache_hits
+        if bits in cache:
+            cache_hits += 1
+            return cache[bits]
+        ev = fitness_fn(bits)
+        cache[bits] = ev
+        return ev
+
+    if length == 0:
+        ev = evaluate(())
+        return GAResult(ev, [], 1, 0, baseline=ev)
+
+    # --- population init: random + seeded all-off / all-on -----------------
+    pop: list[tuple] = [tuple([0] * length), tuple([1] * length)]
+    while len(pop) < cfg.population:
+        pop.append(tuple(int(b) for b in rng.integers(0, 2, length)))
+    pop = pop[: cfg.population]
+
+    baseline = evaluate(tuple([0] * length))
+    history: list[dict] = []
+    best: Optional[Evaluation] = None
+    stale = 0
+
+    for gen in range(cfg.generations):
+        evals = [evaluate(p) for p in pop]
+        gen_best = min(evals, key=lambda e: e.time_s)
+        if best is None or gen_best.time_s < best.time_s:
+            best = gen_best
+            stale = 0
+        else:
+            stale += 1
+        finite = [e.time_s for e in evals if math.isfinite(e.time_s)]
+        history.append({
+            "generation": gen,
+            "best_time_s": best.time_s,
+            "gen_best_time_s": gen_best.time_s,
+            "mean_time_s": float(np.mean(finite)) if finite else float("inf"),
+            "n_invalid": sum(1 for e in evals if not e.valid),
+        })
+        if log:
+            log(f"gen {gen}: best={best.time_s:.6g}s "
+                f"mean={history[-1]['mean_time_s']:.6g}s "
+                f"invalid={history[-1]['n_invalid']}")
+        if cfg.patience is not None and stale >= cfg.patience:
+            break
+
+        # --- selection: fitness-proportional (roulette) --------------------
+        fits = np.array([e.fitness for e in evals])
+        if fits.sum() <= 0:
+            probs = np.full(len(pop), 1.0 / len(pop))
+        else:
+            probs = fits / fits.sum()
+
+        ranked = sorted(zip(pop, evals), key=lambda pe: pe[1].time_s)
+        next_pop: list[tuple] = [p for p, _ in ranked[: cfg.elite]]  # elite copy
+        while len(next_pop) < cfg.population:
+            i, j = rng.choice(len(pop), size=2, p=probs)
+            a, b = list(pop[i]), list(pop[j])
+            if rng.random() < cfg.crossover_rate and length > 1:
+                cut = int(rng.integers(1, length))
+                a = a[:cut] + b[cut:]
+            for t in range(length):                       # bit-flip mutation
+                if rng.random() < cfg.mutation_rate:
+                    a[t] = 1 - a[t]
+            next_pop.append(tuple(a))
+        pop = next_pop
+
+    assert best is not None
+    return GAResult(best, history, evaluations=len(cache),
+                    cache_hits=cache_hits, baseline=baseline)

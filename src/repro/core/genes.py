@@ -1,0 +1,64 @@
+"""Gene encoding of offload patterns (paper §3.2.1).
+
+A chromosome is a binary string, one bit per offloadable region: ``1`` = run
+the region on the accelerator (its offloaded alternative), ``0`` = keep the
+reference path.  The encoding is language/frontend-independent; frontends
+only contribute the ordered site list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ir import Region, RegionGraph
+
+
+@dataclass(frozen=True)
+class Site:
+    """One gene position: a region plus its off/on implementations."""
+
+    region: str
+    ref_impl: Any
+    offload_impl: Any
+
+
+@dataclass(frozen=True)
+class GeneCoding:
+    sites: tuple[Site, ...]
+
+    @property
+    def length(self) -> int:
+        return len(self.sites)
+
+    def decode(self, bits: Sequence[int]) -> dict[str, Any]:
+        """bits -> {region name: chosen implementation}."""
+        assert len(bits) == self.length, (len(bits), self.length)
+        return {
+            s.region: (s.offload_impl if b else s.ref_impl)
+            for s, b in zip(self.sites, bits)
+        }
+
+    def all_off(self) -> tuple[int, ...]:
+        return (0,) * self.length
+
+    def all_on(self) -> tuple[int, ...]:
+        return (1,) * self.length
+
+
+def coding_from_graph(graph: RegionGraph,
+                      exclude: Sequence[str] = ()) -> GeneCoding:
+    """Build the gene coding from a region graph's offloadable regions,
+    excluding regions already claimed by the function-block pass (paper
+    §4.2: ループ文オフロードはオフロード可能だった機能ブロック部分を抜いた
+    コードに対して試行)."""
+    sites = []
+    for r in graph.offloadable():
+        if r.name in exclude:
+            continue
+        ref = r.alternatives[0] if r.alternatives else "ref"
+        off = r.alternatives[1] if len(r.alternatives) > 1 else "offload"
+        sites.append(Site(r.name, ref, off))
+    return GeneCoding(tuple(sites))

@@ -1,0 +1,30 @@
+"""Loop-statement offload pass (paper §3.2.1 / §4.2.2): GA over the loops the
+function-block pass did not claim."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+from repro.core.ga import GAConfig, GAResult, run_ga
+from repro.core.genes import GeneCoding, coding_from_graph
+from repro.core.ir import RegionGraph
+
+
+@dataclass
+class LoopOffloadResult:
+    coding: GeneCoding
+    ga: GAResult
+
+    @property
+    def best_impl(self) -> dict:
+        return self.coding.decode(self.ga.best.bits)
+
+
+def loop_offload_pass(graph: RegionGraph,
+                      fitness_fn: Callable,
+                      ga_cfg: Optional[GAConfig] = None,
+                      exclude: Sequence[str] = (),
+                      log: Optional[Callable[[str], None]] = None) -> LoopOffloadResult:
+    coding = coding_from_graph(graph, exclude=exclude)
+    ga = run_ga(coding.length, fitness_fn, ga_cfg or GAConfig(), log=log)
+    return LoopOffloadResult(coding, ga)

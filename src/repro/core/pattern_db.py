@@ -1,0 +1,297 @@
+"""Code-pattern DB for function-block offload (paper §3.2.2, §4.1: 照合に
+用いるコードパターン DB は、MySQL8 を用いる。ライブラリ等を類似性検出技術で
+検出するための、比較用コードとの対応関係等が保持される).
+
+Each record holds:
+  * ``callee_names`` — library-call names for exact name matching,
+  * per-frontend *comparison code* characteristic vectors (the 比較用コード)
+    for Deckard/CloneDigger-style similarity matching,
+  * the replacement implementation id (our "CUDA library": a Pallas kernel
+    wrapper or a fused-jnp rewrite) and the ExecPlan field it drives,
+  * an interface note — when the replacement's interface differs from the
+    matched block the result is flagged ``needs_confirmation`` (the paper
+    asks the user before changing interfaces).
+
+The DB persists as JSON (the MySQL stand-in); ``default_db()`` builds the
+shipped patterns by tracing canonical reference implementations.
+"""
+from __future__ import annotations
+
+import ast as pyast
+import dataclasses
+import json
+import textwrap
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import similarity as sim
+from repro.core.ir import Region
+
+# ---------------------------------------------------------------------------
+# records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PatternRecord:
+    name: str
+    callee_names: tuple = ()
+    vectors: dict = field(default_factory=dict)   # frontend -> char. vector
+    replacement: str = ""                         # implementation id
+    plan_field: Optional[tuple] = None            # (ExecPlan field, value)
+    threshold: float = 0.85
+    interface_note: str = ""
+    interface_changes: bool = False
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["callee_names"] = list(self.callee_names)
+        d["plan_field"] = list(self.plan_field) if self.plan_field else None
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "PatternRecord":
+        d = dict(d)
+        d["callee_names"] = tuple(d.get("callee_names", ()))
+        pf = d.get("plan_field")
+        d["plan_field"] = tuple(pf) if pf else None
+        return cls(**d)
+
+
+@dataclass
+class Match:
+    record: PatternRecord
+    how: str         # "name" | "similarity"
+    score: float
+    region: str
+    needs_confirmation: bool = False
+
+
+class PatternDB:
+    def __init__(self, records: list[PatternRecord]):
+        self.records = records
+
+    #: a similarity match must beat the runner-up pattern by this margin,
+    #: otherwise it is ambiguous (generic loop scaffolding looks like every
+    #: pattern) and is surfaced as needs_confirmation.
+    AMBIGUITY_MARGIN = 0.012
+
+    # --- matching (paper: name match first, then similarity detection) -----
+    def match_region(self, region: Region, frontend: str,
+                     min_similarity: Optional[float] = None) -> list[Match]:
+        out: list[Match] = []
+        scores: list[tuple[float, PatternRecord]] = []
+        callee_set = {c.lower().split(".")[-1] for c in region.callees}
+        for rec in self.records:
+            names = {n.lower() for n in rec.callee_names}
+            if callee_set & names:
+                out.append(Match(rec, "name", 1.0, region.name,
+                                 needs_confirmation=rec.interface_changes))
+                continue
+            vec = rec.vectors.get(frontend)
+            if vec and region.feature_vector:
+                scores.append((sim.similarity(region.feature_vector, vec), rec))
+        scores.sort(key=lambda sr: -sr[0])
+        for i, (score, rec) in enumerate(scores):
+            thr = min_similarity if min_similarity is not None else rec.threshold
+            if score < thr:
+                continue
+            runner_up = scores[i + 1][0] if i + 1 < len(scores) else 0.0
+            ambiguous = (score - runner_up) < self.AMBIGUITY_MARGIN and i == 0
+            out.append(Match(rec, "similarity", score, region.name,
+                             needs_confirmation=rec.interface_changes or ambiguous))
+            break  # only the best similarity match is a candidate
+        out.sort(key=lambda m: -m.score)
+        return out
+
+    # --- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump([r.to_json() for r in self.records], f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "PatternDB":
+        with open(path) as f:
+            return cls([PatternRecord.from_json(d) for d in json.load(f)])
+
+
+# ---------------------------------------------------------------------------
+# shipped comparison code (the 比較用コード) — naive Python forms
+# ---------------------------------------------------------------------------
+
+_PY_COMPARISON_CODE = {
+    "matmul": """
+def matmul(a, b, c, n, m, k):
+    for i in range(n):
+        for j in range(m):
+            acc = 0.0
+            for t in range(k):
+                acc = acc + a[i][t] * b[t][j]
+            c[i][j] = acc
+""",
+    "softmax_attention": """
+def attention(q, k, v, out, n, d):
+    for i in range(n):
+        m = -1e30
+        for j in range(n):
+            s = 0.0
+            for t in range(d):
+                s = s + q[i][t] * k[j][t]
+            if s > m:
+                m = s
+        z = 0.0
+        for j in range(n):
+            z = z + exp(dot(q[i], k[j]) - m)
+        for t in range(d):
+            acc = 0.0
+            for j in range(n):
+                acc = acc + exp(dot(q[i], k[j]) - m) / z * v[j][t]
+            out[i][t] = acc
+""",
+    "fft": """
+def dft(re, im, out_re, out_im, n):
+    for k in range(n):
+        sr = 0.0
+        si = 0.0
+        for t in range(n):
+            ang = -2.0 * pi * k * t / n
+            sr = sr + re[t] * cos(ang) - im[t] * sin(ang)
+            si = si + re[t] * sin(ang) + im[t] * cos(ang)
+        out_re[k] = sr
+        out_im[k] = si
+""",
+    "rmsnorm": """
+def rmsnorm(x, scale, out, n, d):
+    for i in range(n):
+        ss = 0.0
+        for t in range(d):
+            ss = ss + x[i][t] * x[i][t]
+        inv = 1.0 / sqrt(ss / d + 1e-6)
+        for t in range(d):
+            out[i][t] = x[i][t] * inv * (1.0 + scale[t])
+""",
+    "linear_recurrence": """
+def recurrence(a, b, h, out, n, d):
+    for t in range(n):
+        for c in range(d):
+            h[c] = a[t][c] * h[c] + b[t][c]
+            out[t][c] = h[c]
+""",
+}
+
+
+def _py_vector(code: str) -> dict:
+    tree = pyast.parse(textwrap.dedent(code))
+    return sim.ast_vector(tree)
+
+
+# --- canonical jnp reference blocks (traced -> jaxpr vectors) ---------------
+
+
+def _jx_attention(q, k, v):
+    s = jnp.einsum("qd,kd->qk", q, k) / np.sqrt(q.shape[-1])
+    mask = jnp.arange(k.shape[0])[None, :] <= jnp.arange(q.shape[0])[:, None]
+    s = jnp.where(mask, s, -1e30)
+    return jax.nn.softmax(s, axis=-1) @ v
+
+
+def _jx_rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * (1 + scale)
+
+
+def _jx_recurrence(la, b):
+    def step(h, ab):
+        h = jnp.exp(ab[0]) * h + ab[1]
+        return h, h
+    _, hs = jax.lax.scan(step, jnp.zeros(la.shape[-1]), (la, b))
+    return hs
+
+
+def _jx_wkv(r, k, v, lw, u):
+    def step(s, rkvw):
+        rt, kt, vt, lwt = rkvw
+        kv = kt[:, None] * vt[None, :]
+        y = rt @ (s + u[:, None] * kv)
+        return jnp.exp(lwt)[:, None] * s + kv, y
+    _, ys = jax.lax.scan(step, jnp.zeros((r.shape[-1], v.shape[-1])), (r, k, v, lw))
+    return ys
+
+
+def _jx_matmul(a, b):
+    return a @ b
+
+
+def _jx_fft(x):
+    return jnp.fft.fft(x)
+
+
+def default_db() -> PatternDB:
+    f32 = jnp.float32
+    q = jnp.zeros((8, 4), f32)
+    la = jnp.zeros((8, 4), f32)
+    recs = [
+        PatternRecord(
+            name="softmax_attention",
+            callee_names=("attention", "sdpa", "scaled_dot_product_attention",
+                          "flash_attention", "multi_head_attention"),
+            vectors={"python_ast": _py_vector(_PY_COMPARISON_CODE["softmax_attention"]),
+                     "jaxpr": sim.vector_of_callable(_jx_attention, q, q, q)},
+            replacement="repro.kernels.ops.flash_attention",
+            plan_field=("attn_impl", "chunked"),
+            threshold=0.80,
+            interface_note="(B,S,H,D) q/kv layout; GQA via head count ratio",
+        ),
+        PatternRecord(
+            name="rmsnorm",
+            callee_names=("rmsnorm", "rms_norm", "layer_norm", "layernorm"),
+            vectors={"python_ast": _py_vector(_PY_COMPARISON_CODE["rmsnorm"]),
+                     "jaxpr": sim.vector_of_callable(_jx_rmsnorm, q, jnp.zeros((4,), f32))},
+            replacement="repro.kernels.ops.rmsnorm",
+            plan_field=("norm_impl", "fused"),
+            threshold=0.90,
+        ),
+        PatternRecord(
+            name="linear_recurrence",
+            callee_names=("rglru", "lru", "linear_recurrence", "ssm_scan",
+                          "selective_scan"),
+            vectors={"python_ast": _py_vector(_PY_COMPARISON_CODE["linear_recurrence"]),
+                     "jaxpr": sim.vector_of_callable(_jx_recurrence, la, la)},
+            replacement="repro.kernels.ops.rglru_scan",
+            plan_field=("rglru_impl", "chunked"),
+            threshold=0.85,
+        ),
+        PatternRecord(
+            name="wkv_recurrence",
+            callee_names=("wkv", "wkv6", "rwkv", "time_mix"),
+            vectors={"jaxpr": sim.vector_of_callable(
+                _jx_wkv, q, q, q, la, jnp.zeros((4,), f32))},
+            replacement="repro.kernels.ops.wkv6",
+            plan_field=("wkv_impl", "chunked"),
+            threshold=0.85,
+        ),
+        PatternRecord(
+            name="matmul",
+            callee_names=("matmul", "dot", "gemm", "mm", "bmm", "einsum"),
+            vectors={"python_ast": _py_vector(_PY_COMPARISON_CODE["matmul"]),
+                     "jaxpr": sim.vector_of_callable(_jx_matmul, q, q.T)},
+            replacement="jnp.matmul",
+            plan_field=None,
+            threshold=0.88,
+        ),
+        PatternRecord(
+            name="fft",
+            callee_names=("fft", "rfft", "fft2", "ifft", "dft"),
+            vectors={"python_ast": _py_vector(_PY_COMPARISON_CODE["fft"])},
+            replacement="jnp.fft.fft",
+            plan_field=None,
+            threshold=0.85,
+            interface_note="complex return instead of (re, im) pair",
+            interface_changes=True,
+        ),
+    ]
+    return PatternDB(recs)

@@ -1,0 +1,250 @@
+"""End-to-end offload planner (paper §4.2 実装動作).
+
+Order is the paper's: *function-block offload first* (algorithm-level
+replacement beats loop-level parallelization), each matched block measured
+on/off (and combinations when several match), then *loop offload by GA* over
+the remaining regions; the best-measured pattern is the final solution.
+
+Two entry points:
+  * :func:`plan_python_offload` — the ast frontend, real wall-clock fitness.
+  * :func:`plan_module_offload` — the module frontend, cost-model fitness at
+    production scale (the caller provides the ``lower_fn`` built by the
+    runtime: plan -> jax.stages.Lowered).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import similarity as sim
+from repro.core.block_offload import BlockOffloadResult, block_offload_pass
+from repro.core.fitness import CostModelFitness, WallClockFitness
+from repro.core.frontends import module_frontend
+from repro.core.frontends.ast_frontend import Executor, PyProgram
+from repro.core.ga import Evaluation, GAConfig
+from repro.core.genes import coding_from_graph
+from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
+from repro.core.pattern_db import PatternDB, default_db
+from repro.core.transfer_planner import TransferPlan, plan_transfers
+from repro.models.plan import ExecPlan
+
+# ---------------------------------------------------------------------------
+# library-call adapters for the ast frontend ("CUDA library" substitution)
+# ---------------------------------------------------------------------------
+
+
+def _order_by_appearance(names, source: str) -> list:
+    return sorted(names, key=lambda v: source.find(v) if v in source else 1 << 30)
+
+
+def _adapt_matmul(region, env, source):
+    arrays_in = [v for v in region.uses - region.defs
+                 if isinstance(env.get(v), np.ndarray) and env[v].ndim == 2]
+    outs = [v for v in region.defs
+            if isinstance(env.get(v), np.ndarray) and env[v].ndim == 2]
+    arrays_in = _order_by_appearance(arrays_in, source)
+    if len(arrays_in) != 2 or len(outs) != 1:
+        raise ValueError("matmul adapter needs exactly (a, b) -> c")
+    return (lambda a, b: jnp.matmul(a, b)), arrays_in, outs
+
+
+def _adapt_fft(region, env, source):
+    ins = _order_by_appearance(
+        [v for v in region.uses - region.defs
+         if isinstance(env.get(v), np.ndarray)], source)
+    outs = _order_by_appearance(
+        [v for v in region.defs if isinstance(env.get(v), np.ndarray)], source)
+    if len(ins) == 2 and len(outs) == 2:    # (re, im) -> (re, im): adapt complex
+        def fft2ri(re, im):
+            z = jnp.fft.fft(re + 1j * im)
+            return jnp.real(z), jnp.imag(z)
+        return fft2ri, ins, outs
+    if len(ins) == 1 and len(outs) == 1:
+        return (lambda x: jnp.abs(jnp.fft.fft(x))), ins, outs
+    raise ValueError("fft adapter: unsupported interface")
+
+
+_AST_ADAPTERS: dict[str, Callable] = {
+    "matmul": _adapt_matmul,
+    "fft": _adapt_fft,
+}
+
+
+# ---------------------------------------------------------------------------
+# python program planning
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PythonPlanResult:
+    program: PyProgram
+    block: BlockOffloadResult
+    loops: LoopOffloadResult
+    impl: dict                       # final region -> implementation
+    lib_calls: dict
+    transfer_plan: TransferPlan
+    baseline_time_s: float
+    block_time_s: float
+    final_time_s: float
+    ga_history: list = field(default_factory=list)
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_time_s / self.final_time_s
+
+
+def plan_python_offload(program: PyProgram, inputs: dict,
+                        ga_cfg: Optional[GAConfig] = None,
+                        db: Optional[PatternDB] = None,
+                        confirm: Callable | bool = True,
+                        repeats: int = 3,
+                        log: Optional[Callable[[str], None]] = None,
+                        hoist_transfers: bool = True) -> PythonPlanResult:
+    db = db or default_db()
+    log = log or (lambda s: None)
+
+    # --- calibration: interpret once; snapshots + reference outputs ---------
+    snaps: dict[str, dict] = {}
+    ex0 = Executor(program, {}, hoist_transfers=False)
+    ex0.pre_loop_hook = lambda name, env: snaps.setdefault(name, dict(env))
+    env0 = ex0.run(**inputs)
+    out_names = program.output_names or sorted(
+        v for v in env0 if isinstance(env0[v], (np.ndarray,)))
+    reference = {n: np.asarray(env0[n]) for n in out_names}
+    program.check_offloadable(inputs)
+
+    def runner(impl: dict, lib_calls: dict) -> Callable[[], dict]:
+        def run():
+            ex = Executor(program, impl, hoist_transfers=hoist_transfers,
+                          lib_calls=lib_calls)
+            env = ex.run(**inputs)
+            return {n: np.asarray(env[n]) for n in out_names}
+        return run
+
+    def timed(impl: dict, lib_calls: dict) -> Evaluation:
+        fit = WallClockFitness(
+            build=lambda bits: runner(impl, lib_calls),
+            reference_output=reference, repeats=repeats)
+        return fit(())
+
+    baseline = timed({}, {})
+    log(f"baseline (all-interpreted): {baseline.time_s:.4f}s")
+
+    # --- Step A: function-block offload (first, per paper §4.2) -------------
+    block = block_offload_pass(graph=program.graph, db=db, confirm=confirm)
+    candidates = {}
+    for bo in block.offloads:
+        adapter = _AST_ADAPTERS.get(bo.pattern)
+        if adapter is None:
+            continue
+        envs = snaps.get(bo.region)
+        if envs is None:
+            continue
+        try:
+            candidates[bo.region] = adapter(
+                program.graph.by_name(bo.region), envs, program.source)
+        except ValueError as e:
+            log(f"block {bo.region} ({bo.pattern}): adapter failed: {e}")
+
+    # measure each block and combinations (paper §4.2.1)
+    best_lib: dict = {}
+    best_time = baseline.time_s
+    keys = list(candidates)
+    combos = itertools.chain.from_iterable(
+        itertools.combinations(keys, r) for r in range(1, len(keys) + 1)) \
+        if len(keys) <= 3 else [tuple(keys)] + [(k,) for k in keys]
+    for combo in combos:
+        lib = {k: candidates[k] for k in combo}
+        impl = {k: "lib" for k in combo}
+        ev = timed(impl, lib)
+        log(f"block combo {combo}: {ev.time_s:.4f}s valid={ev.valid}")
+        if ev.valid and ev.time_s < best_time:
+            best_time, best_lib = ev.time_s, lib
+    block_impl = {k: "lib" for k in best_lib}
+    block_time = best_time
+
+    # --- Step B: GA loop offload over the remaining loops -------------------
+    claimed = set(best_lib)
+    for r in program.graph.regions:      # descendants of claimed blocks too
+        p_ = r.parent
+        while p_ is not None:
+            if p_ in claimed:
+                claimed.add(r.name)
+                break
+            p_ = program.graph.by_name(p_).parent
+    claimed = tuple(sorted(claimed))
+    coding = coding_from_graph(program.graph, exclude=claimed)
+
+    def fitness(bits: tuple) -> Evaluation:
+        impl = dict(block_impl)
+        impl.update(coding.decode(bits))
+        fit = WallClockFitness(
+            build=lambda b: runner(impl, best_lib),
+            reference_output=reference, repeats=repeats)
+        return fit(bits)
+
+    loops = loop_offload_pass(program.graph, fitness, ga_cfg or GAConfig(),
+                              exclude=claimed, log=log)
+
+    final_impl = dict(block_impl)
+    final_impl.update(coding.decode(loops.ga.best.bits))
+    tp = plan_transfers(program.graph, final_impl, hoist=hoist_transfers)
+    return PythonPlanResult(
+        program=program, block=block, loops=loops, impl=final_impl,
+        lib_calls=best_lib, transfer_plan=tp,
+        baseline_time_s=baseline.time_s, block_time_s=block_time,
+        final_time_s=min(loops.ga.best.time_s, block_time),
+        ga_history=loops.ga.history)
+
+
+# ---------------------------------------------------------------------------
+# module (model) planning
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModulePlanResult:
+    graph: Any
+    block: BlockOffloadResult
+    loops: LoopOffloadResult
+    base_plan: ExecPlan
+    final_plan: ExecPlan
+    baseline: Evaluation
+    best: Evaluation
+
+
+def plan_module_offload(cfg, lower_fn: Callable[[ExecPlan], Any],
+                        n_devices: int, model_flops: float = 0.0,
+                        ga_cfg: Optional[GAConfig] = None,
+                        db: Optional[PatternDB] = None,
+                        base_plan: Optional[ExecPlan] = None,
+                        hbm_budget: float = 16e9,
+                        log: Optional[Callable[[str], None]] = None) -> ModulePlanResult:
+    """Offload planning for an assigned architecture at production scale.
+
+    The verification environment is the AOT compiler: each chromosome lowers
+    and compiles on the production mesh, the roofline step time is its
+    measured fitness, per-device HBM overflow disqualifies (time = ∞).
+    """
+    db = db or default_db()
+    graph = module_frontend.build_graph(cfg)
+    block = block_offload_pass(graph, db)
+    base = (base_plan or ExecPlan()).replace(**block.plan_updates)
+    exclude = block.claimed_regions
+
+    fitness = CostModelFitness(
+        lower=lambda bits: lower_fn(
+            module_frontend.plan_from_bits(graph, bits, base, exclude)),
+        n_devices=n_devices, model_flops=model_flops, hbm_budget=hbm_budget)
+
+    loops = loop_offload_pass(graph, fitness, ga_cfg or GAConfig(), exclude,
+                              log=log)
+    final = module_frontend.plan_from_bits(graph, loops.ga.best.bits, base, exclude)
+    return ModulePlanResult(
+        graph=graph, block=block, loops=loops, base_plan=base,
+        final_plan=final, baseline=loops.ga.baseline, best=loops.ga.best)

@@ -1,0 +1,127 @@
+"""CPU↔accelerator transfer planning (paper §3.2.1 / §4.2.2).
+
+Def/use rule, verbatim from the paper:
+  * a variable set on the CPU side and referenced on the accelerator side
+    needs an H2D transfer;
+  * a variable set on the accelerator side and referenced/set on the CPU
+    side needs a D2H transfer.
+
+Hoisting rule: a transfer inside a loop nest moves to the outermost level at
+which the variable is still loop-invariant on the producing side (上位で
+まとめて転送).  The planner is pure IR analysis — the ast-frontend executor
+realizes the schedule with its versioned device cache, and the module
+frontend maps the same decision onto FSDP all-gather placement
+(``gather_mode``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.ir import Region, RegionGraph
+
+
+@dataclass
+class Transfer:
+    var: str
+    direction: str          # "h2d" | "d2h"
+    at_region: str          # program point (region whose entry hosts it)
+    hoisted_from: Optional[str] = None   # loop it was pulled out of
+    per_iteration: bool = False
+
+
+@dataclass
+class TransferPlan:
+    transfers: list[Transfer] = field(default_factory=list)
+
+    @property
+    def n_hoisted(self) -> int:
+        return sum(1 for t in self.transfers if t.hoisted_from)
+
+    @property
+    def n_per_iteration(self) -> int:
+        return sum(1 for t in self.transfers if t.per_iteration)
+
+    def estimated_count(self, graph: RegionGraph) -> int:
+        """Total dynamic transfer count, using static trip counts."""
+        total = 0
+        for t in self.transfers:
+            if not t.per_iteration:
+                total += 1
+                continue
+            trips = 1
+            r = graph.by_name(t.at_region)
+            while r.parent is not None:
+                p = graph.by_name(r.parent)
+                trips *= (p.trip_count or 1)
+                r = p
+            trips *= (graph.by_name(t.at_region).trip_count or 1) \
+                if graph.by_name(t.at_region).kind == "loop" else 1
+            total += trips
+        return total
+
+
+def plan_transfers(graph: RegionGraph, impl: dict[str, str],
+                   hoist: bool = True) -> TransferPlan:
+    """impl: region -> "jit"/"lib" (accelerator) or anything else (host)."""
+
+    def on_device(r: Region) -> bool:
+        return impl.get(r.name) in ("jit", "lib")
+
+    plan = TransferPlan()
+    device_vars: set = set()      # vars whose current value lives on device
+    host_dirty: set = set()       # vars (re)written by host since last upload
+
+    def walk(regions: list[Region]):
+        for r in regions:
+            if r.parent is not None:
+                continue  # children handled through their parents below
+            _visit(r)
+
+    def _visit(r: Region):
+        children = graph.children(r.name)
+        if on_device(r):
+            for v in sorted(r.uses):
+                if v in device_vars and v not in host_dirty:
+                    continue  # already resident — hoisted/cached
+                target = _hoist_point(r, v) if hoist else r.name
+                plan.transfers.append(Transfer(
+                    v, "h2d", target,
+                    hoisted_from=r.parent if (hoist and target != r.name) else None,
+                    per_iteration=not (hoist and target != r.name) and r.parent is not None))
+                device_vars.add(v)
+                host_dirty.discard(v)
+            device_vars.update(r.defs)
+            for v in r.defs:
+                host_dirty.discard(v)
+        else:
+            # host region: device-resident vars it reads must come back
+            for v in sorted(r.uses & device_vars):
+                plan.transfers.append(Transfer(
+                    v, "d2h", r.name,
+                    per_iteration=r.parent is not None))
+            host_dirty.update(r.defs)
+            for v in r.defs:
+                device_vars.discard(v)
+            for c in children:
+                _visit(c)
+
+    def _hoist_point(r: Region, var: str) -> str:
+        """Climb ancestors while no sibling (host side) writes `var`."""
+        at = r.name
+        node = r
+        while node.parent is not None:
+            parent = graph.by_name(node.parent)
+            siblings = [s for s in graph.children(parent.name) if s.name != node.name]
+            written = any(var in s.defs and not on_device(s) for s in siblings)
+            if var in parent.defs and parent.kind == "loop":
+                # loop target or header writes it each iteration
+                written = written or (var in parent.defs - node.defs)
+            if written:
+                break
+            at = parent.name
+            node = parent
+        return at
+
+    walk([r for r in graph.regions])
+    return plan

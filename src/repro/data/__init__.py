@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, SyntheticLMDataset, TokenFileDataset,
+                                 make_dataset, Batcher)
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "TokenFileDataset",
+           "make_dataset", "Batcher"]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the simplest possible formulations — materialized
+softmax, per-step scans — independent of the model code, so kernel tests
+cross-check three implementations (kernel / model-fused / oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, scale: float, group: int = 1) -> jax.Array:
+    """q: (BHq, Sq, D); k/v: (BHkv, Sk, D); Hq = Hkv*group (interleaved)."""
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_scan_ref(log_a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = exp(log_a_t) h_{t-1} + b_t, h_0 = 0.  (B,S,D) -> (B,S,D) f32."""
+    def step(h, ab):
+        la, bt = ab
+        h = jnp.exp(la.astype(jnp.float32)) * h + bt.astype(jnp.float32)
+        return h, h
+    h0 = jnp.zeros((log_a.shape[0], log_a.shape[2]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (log_a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+             u: jax.Array) -> jax.Array:
+    """Step-scan oracle.  r/k/v/log_w: (BH,S,D); u: (BH,1,D) -> y (BH,S,D) f32."""
+    rf, kf, vf, lwf = (a.astype(jnp.float32) for a in (r, k, v, log_w))
+    uf = u.astype(jnp.float32)[:, 0]  # (BH, D)
+
+    def step(s, rkvw):
+        rt, kt, vt, lwt = rkvw  # (BH,D)
+        kv = kt[:, :, None] * vt[:, None, :]               # (BH,D,D)
+        at = s + uf[:, :, None] * kv
+        y = jnp.einsum("bk,bkv->bv", rt, at)
+        s = jnp.exp(lwt)[:, :, None] * s + kv
+        return s, y
+
+    s0 = jnp.zeros((r.shape[0], r.shape[2], v.shape[2]), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, tuple(a.transpose(1, 0, 2) for a in (rf, kf, vf, lwf)))
+    return ys.transpose(1, 0, 2)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model); the ``pod`` axis
+carries pure DP (gradient all-reduce only — the slow DCN/ICI hop that the
+compression path targets).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1):
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))

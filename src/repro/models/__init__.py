@@ -1,0 +1,4 @@
+from repro.models.api import Model, build_model
+from repro.models.plan import ExecPlan, OFFLOAD_PLAN, REFERENCE_PLAN
+
+__all__ = ["Model", "build_model", "ExecPlan", "OFFLOAD_PLAN", "REFERENCE_PLAN"]

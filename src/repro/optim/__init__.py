@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, OptimizerConfig
+from repro.optim.schedule import make_schedule
+from repro.optim.compression import (CompressionState, compress_int8,
+                                     decompress_int8, ef_compress_update,
+                                     ef_init)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "OptimizerConfig",
+    "make_schedule",
+    "CompressionState", "compress_int8", "decompress_int8",
+    "ef_compress_update", "ef_init",
+]

@@ -1,0 +1,64 @@
+"""Error-feedback int8 gradient compression for cross-pod all-reduce.
+
+At 512+ chips the inter-pod links carry full-gradient all-reduces every
+step; compressing the cross-pod phase 4x (fp32->int8 with per-tensor scale)
+cuts that term directly.  Error feedback (Seide et al. 2014; Karimireddy et
+al. 2019) accumulates the quantization residual locally so the compressed
+SGD trajectory tracks the exact one.
+
+The transfer-hoisting analogy is intentional: this is the paper's
+"reduce CPU-GPU transfer" idea applied to the pod-to-pod boundary.
+
+``ef_compress_update`` is pure-pytree (works under jit); the cross-pod
+psum itself happens in the train step via a shard_map over the ``pod``
+axis when compression is enabled.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any   # fp32 residual pytree (error feedback memory)
+
+
+def ef_init(params: Any) -> CompressionState:
+    return CompressionState(jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """fp32 -> (int8 values, fp32 scale).  Symmetric per-tensor quantization."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(grads: Any, state: CompressionState
+                       ) -> tuple[Any, Any, CompressionState]:
+    """Returns (quantized pytree, scales pytree, new error state).
+
+    Caller all-reduces the quantized values (as int32/float32 sums of int8
+    payloads), then divides by the replica count and multiplies by scale.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = compress_int8(corrected)
+        new_e = corrected - decompress_int8(q, scale)
+        return q, scale, new_e
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(state.error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    scales = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    errs = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+    return qs, scales, CompressionState(errs)

@@ -1,0 +1,23 @@
+"""LR schedules: linear warmup + cosine decay (the production default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_schedule(kind: str = "cosine", *, peak_lr: float = 3e-4,
+                  warmup_steps: int = 100, total_steps: int = 10_000,
+                  final_frac: float = 0.1):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, s / max(warmup_steps, 1))
+        if kind == "constant":
+            return warm
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        if kind == "linear":
+            decay = peak_lr * (1.0 - (1.0 - final_frac) * prog)
+        else:  # cosine
+            decay = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                               (1.0 + jnp.cos(np.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, decay)
+    return sched

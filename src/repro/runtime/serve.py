@@ -1,0 +1,73 @@
+"""Serving loop: batched prefill + autoregressive decode with KV caches.
+
+``Server`` owns params + plan; ``generate`` pads a request batch to the
+static shapes, prefills, then decodes greedily or with temperature sampling.
+The decode loop donates the state so caches update in place.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import Model
+from repro.models.plan import ExecPlan
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, model: Model, params, plan: ExecPlan,
+                 cfg: Optional[ServeConfig] = None):
+        self.model = model
+        self.params = params
+        self.plan = plan
+        self.cfg = cfg or ServeConfig()
+        self._decode = jax.jit(
+            lambda p, tok, st: model.decode(p, tok, st, plan),
+            donate_argnums=(2,))
+        self._prefill = {}
+
+    def _prefill_fn(self, cache_capacity: int):
+        if cache_capacity not in self._prefill:
+            self._prefill[cache_capacity] = jax.jit(
+                functools.partial(
+                    lambda p, inp: self.model.prefill(
+                        p, inp, self.plan, cache_capacity=cache_capacity)))
+        return self._prefill[cache_capacity]
+
+    def generate(self, inputs: dict, max_new: Optional[int] = None) -> np.ndarray:
+        """inputs: dict with 'tokens' (B,S) (+ frames/patch_feats).  Returns
+        generated tokens (B, max_new)."""
+        max_new = max_new or self.cfg.max_new_tokens
+        tokens = inputs["tokens"]
+        b, s = tokens.shape
+        cap = s + max_new + (self.model.cfg.vision_patches or 0)
+        logits, state = self._prefill_fn(cap)(self.params, inputs)
+        key = jax.random.key(self.cfg.seed)
+        out = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits, key, 0)
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok[:, 0])
+            if i == max_new - 1:
+                break
+            logits, state = self._decode(self.params, tok, state)
+            tok = self._sample(logits, key, i + 1)
+        return out
+
+    def _sample(self, logits, key, i):
+        lg = logits[:, -1].astype(jnp.float32)
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, lg / self.cfg.temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,112 @@
+"""Pattern DB: name matching, similarity matching, ambiguity handling,
+persistence (the MySQL stand-in)."""
+import ast
+import textwrap
+
+import pytest
+
+from repro.core import similarity as sim
+from repro.core.ir import Region
+from repro.core.pattern_db import PatternDB, default_db
+
+
+def _region_from_code(code: str, callees=()) -> Region:
+    tree = ast.parse(textwrap.dedent(code))
+    return Region(name="r0", kind="loop", callees=tuple(callees),
+                  feature_vector=sim.ast_vector(tree), offloadable=True)
+
+
+NAIVE_MATMUL = """
+for i in range(n):
+    for j in range(m):
+        acc = 0.0
+        for t in range(k):
+            acc = acc + a[i][t] * b[t][j]
+        c[i][j] = acc
+"""
+
+# "copied then modified": different names, fused scale factor
+MODIFIED_MATMUL = """
+for row in range(rows):
+    for col in range(cols):
+        s = 0.0
+        for kk in range(inner):
+            s = s + lhs[row][kk] * rhs[kk][col] * alpha
+        out[row][col] = s + beta
+"""
+
+UNRELATED_IO = """
+for i in range(n):
+    if flags[i]:
+        total = total + 1
+    else:
+        names.append(str(i))
+"""
+
+
+def test_name_match_beats_similarity():
+    db = default_db()
+    r = _region_from_code("for i in range(n):\n    pass", callees=["np.matmul"])
+    ms = db.match_region(r, "python_ast")
+    assert ms and ms[0].record.name == "matmul" and ms[0].how == "name"
+
+
+def test_similarity_detects_naive_matmul():
+    db = default_db()
+    r = _region_from_code(NAIVE_MATMUL)
+    ms = db.match_region(r, "python_ast")
+    assert ms and ms[0].record.name == "matmul"
+    assert ms[0].how == "similarity"
+    assert ms[0].score > 0.9
+
+
+def test_similarity_detects_copied_then_modified():
+    """The Deckard use case: clone with renames + small edits still matches."""
+    db = default_db()
+    r = _region_from_code(MODIFIED_MATMUL)
+    ms = db.match_region(r, "python_ast")
+    assert ms and ms[0].record.name == "matmul"
+
+
+def test_unrelated_code_does_not_match():
+    db = default_db()
+    r = _region_from_code(UNRELATED_IO)
+    ms = [m for m in db.match_region(r, "python_ast") if not m.needs_confirmation]
+    assert not ms
+
+
+def test_interface_change_needs_confirmation():
+    db = default_db()
+    r = _region_from_code("for i in range(n):\n    pass", callees=["np.fft.fft"])
+    ms = db.match_region(r, "python_ast")
+    assert ms and ms[0].record.name == "fft"
+    assert ms[0].needs_confirmation  # complex return vs (re, im) pair
+
+
+def test_jaxpr_similarity_attention():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.frontends import jaxpr_frontend
+
+    def my_attention(q, k, v):  # user's hand-rolled attention
+        s = q @ k.T / jnp.sqrt(q.shape[-1] * 1.0)
+        mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), bool))
+        s = jnp.where(mask, s, -1e30)
+        return jax.nn.softmax(s, axis=-1) @ v
+
+    db = default_db()
+    x = jnp.zeros((8, 4), jnp.float32)
+    g = jaxpr_frontend.build_graph(my_attention, x, x, x)
+    vec = g.meta["whole_program_vector"]
+    rec = next(r for r in db.records if r.name == "softmax_attention")
+    assert sim.similarity(vec, rec.vectors["jaxpr"]) > 0.8
+
+
+def test_persistence_roundtrip(tmp_path):
+    db = default_db()
+    p = str(tmp_path / "patterns.json")
+    db.save(p)
+    db2 = PatternDB.load(p)
+    assert [r.name for r in db2.records] == [r.name for r in db.records]
+    r = _region_from_code(NAIVE_MATMUL)
+    assert db2.match_region(r, "python_ast")[0].record.name == "matmul"

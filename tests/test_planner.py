@@ -1,0 +1,93 @@
+"""End-to-end planner tests: the paper's full pipeline on a Python program
+(block offload first, GA second, verified results) and the module frontend's
+gene/plan mapping."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.frontends import module_frontend
+from repro.core.frontends.ast_frontend import PyProgram
+from repro.core.ga import GAConfig
+from repro.core.genes import coding_from_graph
+from repro.core.planner import plan_python_offload
+from repro.models.plan import ExecPlan
+
+SRC = """
+def app(a, b, x, n, m, k, iters):
+    c = np.zeros((n, m))
+    for i in range(n):
+        for j in range(m):
+            acc = 0.0
+            for t in range(k):
+                acc = acc + a[i, t] * b[t, j]
+            c[i, j] = acc
+    y = np.zeros((n,))
+    for it in range(iters):
+        y = y + np.tanh(c @ x) * 0.1
+    s = 0.0
+    for i in range(n):
+        s = s + y[i] * y[i]
+    return c, y, s
+"""
+
+
+@pytest.mark.slow
+def test_python_offload_end_to_end(rng):
+    consts = {"n": 16, "m": 16, "k": 16, "iters": 20}
+    p = PyProgram(SRC, consts=consts)
+    inputs = dict(a=rng.random((16, 16)), b=rng.random((16, 16)),
+                  x=rng.random(16))
+    res = plan_python_offload(
+        p, inputs, ga_cfg=GAConfig(population=6, generations=3, seed=0),
+        repeats=1)
+    # block pass found and kept the matmul replacement
+    assert any(b.pattern == "matmul" for b in res.block.offloads)
+    # final plan beats the all-interpreted baseline
+    assert res.final_time_s < res.baseline_time_s
+    assert res.speedup > 2.0
+    # claimed block regions are excluded from the GA gene
+    claimed = set(res.lib_calls)
+    assert all(s.region not in claimed for s in res.loops.coding.sites)
+
+
+def test_module_graph_sites_per_family():
+    g_dense = module_frontend.build_graph(get_config("tinyllama_1_1b"))
+    names = {r.name for r in g_dense.offloadable()}
+    assert "attn_impl" in names and "moe_impl" not in names
+    assert "rglru_impl" not in names and "wkv_impl" not in names
+
+    g_moe = module_frontend.build_graph(get_config("olmoe_1b_7b"))
+    assert "moe_impl" in {r.name for r in g_moe.offloadable()}
+
+    g_ssm = module_frontend.build_graph(get_config("rwkv6_3b"))
+    names = {r.name for r in g_ssm.offloadable()}
+    assert "wkv_impl" in names and "attn_impl" not in names
+
+    g_hyb = module_frontend.build_graph(get_config("recurrentgemma_2b"))
+    names = {r.name for r in g_hyb.offloadable()}
+    assert "rglru_impl" in names and "attn_impl" in names
+
+
+def test_plan_from_bits_roundtrip():
+    g = module_frontend.build_graph(get_config("qwen3_0_6b"))
+    coding = coding_from_graph(g)
+    plan_off = module_frontend.plan_from_bits(g, coding.all_on())
+    plan_ref = module_frontend.plan_from_bits(g, coding.all_off())
+    assert plan_off.attn_impl == "chunked" and plan_ref.attn_impl == "naive"
+    assert plan_off.remat == "dots" and plan_ref.remat == "none"
+    # exclusion honors the block pass's claims
+    base = ExecPlan(norm_impl="fused")
+    coding2 = coding_from_graph(g, exclude=("norm_impl",))
+    plan2 = module_frontend.plan_from_bits(
+        g, coding2.all_off(), base=base, exclude=("norm_impl",))
+    assert plan2.norm_impl == "fused"  # block-pass claim preserved
+
+
+def test_gene_length_matches_applicable_sites():
+    for arch, expected_absent in [("gemma_7b", {"moe_impl", "wkv_impl", "rglru_impl"}),
+                                  ("llama4_scout_17b_a16e", {"wkv_impl", "rglru_impl"})]:
+        g = module_frontend.build_graph(get_config(arch))
+        names = {r.name for r in g.offloadable()}
+        assert not (names & expected_absent)
+        coding = coding_from_graph(g)
+        assert coding.length == len(names)
