@@ -3,6 +3,8 @@ source-language frontends — GA loop offload + pattern-DB function-block
 offload + transfer hoisting over a language-independent Region IR.
 """
 from repro.core.block_offload import BlockOffloadResult, block_offload_pass
+from repro.core.evaluator import (EvalStats, Evaluator,
+                                  transfer_cost_surrogate)
 from repro.core.fitness import CostModelFitness, WallClockFitness
 from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
 from repro.core.genes import GeneCoding, Site, coding_from_graph
@@ -17,6 +19,7 @@ from repro.core.verifier import VerifyResult, verify
 __all__ = [
     "BlockOffloadResult", "block_offload_pass",
     "CostModelFitness", "WallClockFitness",
+    "EvalStats", "Evaluator", "transfer_cost_surrogate",
     "Evaluation", "GAConfig", "GAResult", "run_ga",
     "GeneCoding", "Site", "coding_from_graph",
     "Region", "RegionGraph",

@@ -1,0 +1,455 @@
+"""Batched-parallel GA evaluation engine (the "verification environment"
+scheduler).
+
+The paper measures every offload pattern in a real verification environment
+(compile + run), which makes measurement the search bottleneck.  Yamato's
+follow-up work (arXiv:2002.12115) attacks exactly this: reduce the *number*
+of verification measurements (dedup, duplicate-avoiding offspring) and their
+*cost* (reuse across runs).  This module is that subsystem:
+
+* **generation-batched, parallel evaluation** — the whole offspring
+  population is deduped against the cache and dispatched to a thread pool
+  (compile-bound fitness like :class:`repro.core.fitness.CostModelFitness`
+  releases the GIL inside XLA; wall-clock fitness should stay serial for
+  timing fidelity, ``workers=0``), with *in-flight dedup* so identical
+  chromosomes proposed concurrently are measured once;
+
+* a **persistent on-disk measurement cache** keyed by
+  ``(program fingerprint, bits)`` so re-planning the same program across
+  processes or benchmark runs never re-measures a known pattern;
+
+* an optional **surrogate pre-screen**: offspring are ranked by a static
+  cost estimate (e.g. transfer-byte counts from the transfer planner) and
+  only the most promising ``screen_top_k`` are measured per generation.
+  Measurement stays the final arbiter — the surrogate only prioritizes, it
+  never scores a chromosome (the paper's anti-static-prediction stance).
+
+The engine is deterministic: results are returned in population order and a
+fixed-seed GA run produces byte-identical results in serial and parallel
+modes (fitness functions themselves must be deterministic for this to hold,
+which is true of the cost-model path).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import wait as _wait_futures
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.ga import Evaluation
+
+__all__ = ["EvalStats", "Evaluator", "transfer_cost_surrogate"]
+
+
+# ---------------------------------------------------------------------------
+# persistent measurement cache
+# ---------------------------------------------------------------------------
+
+
+def _bits_key(bits: Sequence[int]) -> str:
+    return "".join(str(int(b)) for b in bits) or "-"
+
+
+class MeasurementCache:
+    """On-disk (fingerprint, bits) -> Evaluation store, one JSONL per program.
+
+    Append-only journal so concurrent writers from different processes can
+    share one file; duplicate lines are harmless (last write wins on load).
+    Only *finite, valid-or-invalid measured* results are persisted — screened
+    or skipped chromosomes never enter the store.
+    """
+
+    def __init__(self, cache_dir: str, fingerprint: str):
+        self.dir = cache_dir
+        self.fingerprint = fingerprint
+        os.makedirs(cache_dir, exist_ok=True)
+        self.path = os.path.join(cache_dir, f"measurements_{fingerprint}.jsonl")
+        self._lock = threading.Lock()
+
+    def load(self) -> dict[tuple, Evaluation]:
+        out: dict[tuple, Evaluation] = {}
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        continue  # torn concurrent write; journal is append-only
+                    if rec.get("fingerprint") != self.fingerprint:
+                        continue
+                    bits = tuple(int(c) for c in rec["bits"]) \
+                        if rec["bits"] != "-" else ()
+                    t = rec["time_s"]
+                    out[bits] = Evaluation(
+                        bits, float("inf") if t is None else float(t),
+                        bool(rec["valid"]), dict(rec.get("detail") or {}))
+        except FileNotFoundError:
+            pass
+        return out
+
+    def store(self, ev: Evaluation) -> None:
+        rec = {
+            "fingerprint": self.fingerprint,
+            "bits": _bits_key(ev.bits),
+            "time_s": ev.time_s if math.isfinite(ev.time_s) else None,
+            "valid": ev.valid,
+            "detail": {k: v for k, v in ev.detail.items()
+                       if isinstance(v, (str, int, float, bool))},
+        }
+        line = json.dumps(rec) + "\n"
+        with self._lock:
+            with open(self.path, "a", encoding="utf-8") as f:
+                f.write(line)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EvalStats:
+    """Measurement accounting: how much verification work the engine avoided."""
+
+    measurements: int = 0        # fitness_fn actually invoked
+    cache_hits: int = 0          # served from the in-memory cache
+    persistent_hits: int = 0     # served from the on-disk cache at first touch
+    inflight_hits: int = 0       # joined an in-flight measurement
+    screened_out: int = 0        # skipped by the surrogate pre-screen
+    eval_wall_s: float = 0.0     # wall-clock spent inside evaluate_batch
+
+    @property
+    def measurements_saved(self) -> int:
+        return (self.cache_hits + self.persistent_hits
+                + self.inflight_hits + self.screened_out)
+
+    def as_dict(self) -> dict:
+        return {
+            "measurements": self.measurements,
+            "cache_hits": self.cache_hits,
+            "persistent_hits": self.persistent_hits,
+            "inflight_hits": self.inflight_hits,
+            "screened_out": self.screened_out,
+            "measurements_saved": self.measurements_saved,
+            "eval_wall_s": self.eval_wall_s,
+        }
+
+
+class Evaluator:
+    """Measurement scheduler for the GA: dedup -> screen -> dispatch.
+
+    Parameters
+    ----------
+    fitness_fn:
+        ``bits -> Evaluation`` — the verification-environment measurement.
+    workers:
+        0 or 1 = serial (required for wall-clock timing fidelity); N > 1 =
+        thread pool of N for compile-bound fitness.
+    cache_dir / fingerprint:
+        when both given, measurements persist to
+        ``{cache_dir}/measurements_{fingerprint}.jsonl`` and prior runs'
+        results are loaded on construction.
+    surrogate:
+        optional ``bits -> float`` static cost estimate (lower = better),
+        used only to *rank* unmeasured offspring when ``screen_top_k`` caps
+        how many are measured per batch.
+    screen_top_k:
+        measure at most this many unmeasured chromosomes per batch (the
+        rest are deferred: reported invalid/unmeasured, never cached, so a
+        later generation may still measure them).
+    """
+
+    def __init__(self, fitness_fn: Optional[Callable[[tuple], Evaluation]],
+                 workers: int = 0,
+                 cache_dir: Optional[str] = None,
+                 fingerprint: str = "",
+                 surrogate: Optional[Callable[[tuple], float]] = None,
+                 screen_top_k: Optional[int] = None,
+                 executor: Optional[Any] = None,
+                 dispatch_fn: Optional[Callable[[tuple], Evaluation]] = None):
+        self.fitness_fn = fitness_fn
+        self.workers = max(0, int(workers))
+        # external executor (e.g. a spawn-based ProcessPoolExecutor whose
+        # workers rebuilt the fitness in an initializer): XLA serializes LLVM
+        # compilation process-wide, so compile-bound measurement only scales
+        # across *processes*; dispatch_fn must be picklable, and the engine
+        # keeps ownership of caching/dedup/persistence in the parent
+        self._executor = executor
+        self._dispatch_fn = dispatch_fn
+        if executor is not None and dispatch_fn is None:
+            raise ValueError("executor requires a picklable dispatch_fn")
+        if fitness_fn is None and executor is None:
+            raise ValueError("need fitness_fn or (executor, dispatch_fn)")
+        if screen_top_k is not None and surrogate is None:
+            raise ValueError(
+                "screen_top_k requires a surrogate ranking function; use "
+                "loop_offload_pass (which derives one from the region graph) "
+                "or pass surrogate= explicitly")
+        self.surrogate = surrogate
+        self.screen_top_k = screen_top_k
+        self.stats = EvalStats()
+        self._cache: dict[tuple, Evaluation] = {}
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, Future] = {}
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._store: Optional[MeasurementCache] = None
+        if cache_dir:
+            self._store = MeasurementCache(cache_dir, fingerprint or "anon")
+            persisted = self._store.load()
+            self._cache.update(persisted)
+            self._persisted_unseen = set(persisted)
+        else:
+            self._persisted_unseen = set()
+
+    # -- cache interface ----------------------------------------------------
+
+    def is_measured(self, bits: Sequence[int]) -> bool:
+        """True if this chromosome already has a measurement (memory or disk).
+        Used by duplicate-avoiding offspring generation."""
+        return tuple(bits) in self._cache
+
+    @property
+    def unique_measured(self) -> int:
+        return len(self._cache)
+
+    def _lookup(self, bits: tuple) -> Optional[Evaluation]:
+        ev = self._cache.get(bits)
+        if ev is None:
+            return None
+        if bits in self._persisted_unseen:
+            self._persisted_unseen.discard(bits)
+            self.stats.persistent_hits += 1
+        else:
+            self.stats.cache_hits += 1
+        return ev
+
+    # -- measurement --------------------------------------------------------
+
+    def _record(self, bits: tuple, ev: Evaluation) -> Evaluation:
+        with self._lock:
+            self.stats.measurements += 1
+            self._cache[bits] = ev
+        if self._store is not None:
+            self._store.store(ev)
+        return ev
+
+    def _measure(self, bits: tuple) -> Evaluation:
+        return self._record(bits, self.fitness_fn(bits))
+
+    def _run_measure(self, bits: tuple, fut: Future) -> None:
+        try:
+            ev = self._measure(bits)
+        except BaseException as e:  # fitness fns normally catch their own
+            try:
+                fut.set_exception(e)
+            except Exception:  # future already resolved by an aborted batch
+                pass
+            return
+        try:
+            fut.set_result(ev)
+        except Exception:  # future already resolved by an aborted batch;
+            pass           # the measurement itself is cached either way
+
+    def evaluate(self, bits: Sequence[int]) -> Evaluation:
+        """Evaluate one chromosome (cache -> in-flight -> measure)."""
+        return self.evaluate_batch([tuple(bits)])[0]
+
+    def evaluate_batch(self, population: Sequence[Sequence[int]]
+                       ) -> list[Evaluation]:
+        """Evaluate a whole population; results in population order.
+
+        Duplicates within the batch, chromosomes already measured (this run
+        or a persisted one), and chromosomes being measured concurrently by
+        another caller are all deduped to a single measurement.
+        """
+        t0 = time.perf_counter()
+        pop = [tuple(int(b) for b in p) for p in population]
+        results: dict[tuple, Evaluation] = {}
+        to_measure: list[tuple] = []   # unique, in first-appearance order
+        joined: dict[tuple, Future] = {}
+        seen: set = set()
+
+        dup_pending: dict[tuple, int] = {}
+        with self._lock:
+            for bits in pop:
+                if bits in seen:
+                    # within-batch duplicate: one measurement serves all.
+                    # Attribution for still-pending bits waits until we know
+                    # whether they were measured or screened out (a screened
+                    # chromosome has no measurement to save).
+                    if bits in results:
+                        self.stats.cache_hits += 1
+                    else:
+                        dup_pending[bits] = dup_pending.get(bits, 0) + 1
+                    continue
+                seen.add(bits)
+                ev = self._lookup(bits)
+                if ev is not None:
+                    results[bits] = ev
+                elif bits in self._inflight:
+                    self.stats.inflight_hits += 1
+                    joined[bits] = self._inflight[bits]
+                else:
+                    to_measure.append(bits)
+
+        # --- surrogate pre-screen: rank, measure only the top-k ------------
+        deferred: list[tuple] = []
+        if (self.screen_top_k is not None and self.surrogate is not None
+                and len(to_measure) > self.screen_top_k):
+            ranked = sorted(range(len(to_measure)),
+                            key=lambda i: (self.surrogate(to_measure[i]), i))
+            keep = set(ranked[: self.screen_top_k])
+            deferred = [b for i, b in enumerate(to_measure) if i not in keep]
+            to_measure = [b for i, b in enumerate(to_measure) if i in keep]
+            self.stats.screened_out += len(deferred)
+
+        # --- dispatch -------------------------------------------------------
+        # every measurement is announced in _inflight before it starts, so
+        # concurrent callers (serial or pooled) join it instead of repeating
+        # it.  The screen above ran outside the lock, so re-check here: a
+        # concurrent batch may have announced (or finished) one of ours.
+        futures: dict[tuple, Future] = {}
+        with self._lock:
+            announced: list[tuple] = []
+            for bits in to_measure:
+                ev = self._lookup(bits)
+                if ev is not None:
+                    results[bits] = ev
+                elif bits in self._inflight:
+                    self.stats.inflight_hits += 1
+                    joined[bits] = self._inflight[bits]
+                else:
+                    fut: Future = Future()
+                    self._inflight[bits] = fut
+                    futures[bits] = fut
+                    announced.append(bits)
+            to_measure = announced
+        try:
+            if self._executor is not None:
+                # cross-process dispatch: workers measure, parent records.
+                # Only results the worker actually returned are recorded and
+                # persisted — a dead worker / broken pool is transient infra
+                # failure, not a measurement, and must not poison the cache.
+                raw = [(bits, self._executor.submit(self._dispatch_fn, bits))
+                       for bits in to_measure]
+                for bits, rf in raw:
+                    try:
+                        ev = self._record(bits, rf.result())
+                    except Exception as e:  # noqa: BLE001 — worker died etc.
+                        ev = Evaluation(bits, float("inf"), False,
+                                        {"error": f"{type(e).__name__}: {e}"[:300],
+                                         "transient": True})
+                    futures[bits].set_result(ev)
+            elif self.workers > 1 and len(to_measure) > 1:
+                pool = self._ensure_pool()
+                for bits in to_measure:
+                    pool.submit(self._run_measure, bits, futures[bits])
+            else:
+                for bits in to_measure:
+                    self._run_measure(bits, futures[bits])
+            # let every dispatched measurement finish before collecting, so a
+            # stored exception can't abort the batch while siblings still run
+            # (the abandoned-future cleanup below must never race a worker)
+            _wait_futures(list(futures.values()))
+            for bits, fut in futures.items():
+                results[bits] = fut.result()
+        finally:
+            with self._lock:
+                for bits, fut in futures.items():
+                    # resolve anything still pending (e.g. the serial loop
+                    # aborted on an earlier chromosome) so concurrent
+                    # callers joined on these futures don't hang forever
+                    if not fut.done():
+                        fut.set_exception(
+                            RuntimeError("measurement abandoned: batch "
+                                         "aborted before this chromosome"))
+                    self._inflight.pop(bits, None)
+
+        for bits, fut in joined.items():
+            results[bits] = fut.result()
+        for bits in deferred:
+            # deferred chromosomes are NOT measurements: zero fitness this
+            # generation, absent from the cache so they can be measured later
+            results[bits] = Evaluation(
+                bits, float("inf"), False, {"screened": True})
+
+        if dup_pending:
+            with self._lock:
+                for bits, n in dup_pending.items():
+                    ev = results.get(bits)
+                    if ev is not None and not ev.detail.get("screened"):
+                        self.stats.inflight_hits += n
+
+        self.stats.eval_wall_s += time.perf_counter() - t0
+        return [results[bits] for bits in pop]
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.workers,
+                    thread_name_prefix="ga-eval")
+            return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "Evaluator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# static surrogate: transfer-cost ranking (pre-screen only, never a score)
+# ---------------------------------------------------------------------------
+
+
+def transfer_cost_surrogate(graph, coding, var_bytes: Optional[dict] = None,
+                            base_impl: Optional[dict] = None
+                            ) -> Callable[[tuple], float]:
+    """Rank chromosomes by estimated dynamic transfer volume.
+
+    Decodes ``bits`` through ``coding``, runs the (pure-IR) transfer planner
+    and weights the resulting transfer count by per-variable byte sizes when
+    known.  Patterns that offload more while transferring less rank first —
+    a roofline-style prior, used *only* to order offspring for measurement.
+    """
+    from repro.core.transfer_planner import plan_transfers
+
+    var_bytes = var_bytes or {}
+    memo: dict[tuple, float] = {}
+
+    def cost(bits: tuple) -> float:
+        bits = tuple(bits)
+        if bits in memo:
+            return memo[bits]
+        impl = dict(base_impl or {})
+        impl.update(coding.decode(bits))
+        plan = plan_transfers(graph, impl, hoist=True)
+        total = 0.0
+        for t in plan.transfers:
+            trips = 1
+            if t.per_iteration:
+                r = graph.by_name(t.at_region)
+                while r is not None:
+                    trips *= (r.trip_count or 1) if r.kind == "loop" else 1
+                    r = graph.by_name(r.parent) if r.parent else None
+            total += trips * float(var_bytes.get(t.var, 1.0))
+        # prefer more offloaded work at equal transfer cost (paper intuition:
+        # offload wins when transfers are amortized)
+        memo[bits] = total - 1e-9 * sum(bits)
+        return memo[bits]
+
+    return cost

@@ -10,11 +10,17 @@ anti-static-prediction stance, §3.1):
   on the production mesh; the measured artifact is the compiled binary:
   roofline step time as the objective, per-device HBM fit as the validity
   check (OOM -> time ∞, like a compile error in the paper).
+
+Both are plain ``bits -> Evaluation`` callables; caching, dedup, parallel
+dispatch and persistence belong to :mod:`repro.core.evaluator`, not here.
+``CostModelFitness`` holds no mutable state across calls and is safe to
+invoke from evaluator worker threads/processes; ``WallClockFitness`` timings
+only mean something when measured one at a time (keep ``workers=0``).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 import jax
@@ -84,7 +90,6 @@ class CostModelFitness:
     n_devices: int
     model_flops: float = 0.0
     hbm_budget: float = 16e9          # TPU v5e: 16 GB
-    cache: dict = field(default_factory=dict)
 
     def __call__(self, bits: tuple) -> Evaluation:
         try:

@@ -196,6 +196,27 @@ class PyProgram:
         self.tree_nodes = self._build_nodes(body, depth=0, parent=None)
         self._graph = RegionGraph(self._regions, "python_ast", self.name)
         self._compiled_cache: dict[str, Callable] = {}
+        # code-object caches shared by all Executors of this program: the GA
+        # re-runs the interpreter once per measurement, and re-`compile()`ing
+        # every stmt node / loop-iter expression dominated interp time
+        self._stmt_code: dict[str, Any] = {}
+        self._iter_code: dict[str, Any] = {}
+
+    def stmt_code(self, node: "_Node"):
+        code = self._stmt_code.get(node.region)
+        if code is None:
+            code = compile(ast.Module(body=node.stmts, type_ignores=[]),
+                           f"<interp:{node.region}>", "exec")
+            self._stmt_code[node.region] = code
+        return code
+
+    def iter_code(self, node: "_Node"):
+        code = self._iter_code.get(node.region)
+        if code is None:
+            code = compile(ast.Expression(node.loop.iter),
+                           f"<it:{node.region}>", "eval")
+            self._iter_code[node.region] = code
+        return code
 
     def _strip_returns(self, stmts: list) -> list:
         out = []
@@ -480,11 +501,12 @@ class Executor:
         for v in region.uses:
             if v in env:
                 self._to_host(v, env)
-        code = compile(ast.Module(body=node.stmts, type_ignores=[]),
-                       f"<interp:{node.region}>", "exec")
+        # fresh namespace per exec: a shared one would leak bindings across
+        # regions (stale names resolving instead of NameError) and change
+        # the reference interpreter's semantics
         g = dict(self.globals)
         g.update(env)
-        exec(code, g)  # noqa: S102
+        exec(self.p.stmt_code(node), g)  # noqa: S102
         for v in region.defs | region.uses:
             if v in g:
                 env[v] = g[v]
@@ -525,7 +547,7 @@ class Executor:
                 self._to_host(v, env)
         g = dict(self.globals)
         g.update(env)
-        iter_vals = eval(compile(ast.Expression(loop.iter), "<it>", "eval"), g)  # noqa: S307
+        iter_vals = eval(self.p.iter_code(node), g)  # noqa: S307
         tname = loop.target.id if isinstance(loop.target, ast.Name) else None
         for val in iter_vals:
             if tname:

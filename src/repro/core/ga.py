@@ -10,10 +10,18 @@ Faithful to the paper's loop:
     mutation, elite copy,
   * per-chromosome measurement cache (a pattern is never re-measured),
   * fixed generation count, best chromosome wins.
+
+Measurement scheduling (dedup, parallel dispatch, the persistent on-disk
+cache and the optional surrogate pre-screen) lives in
+:mod:`repro.core.evaluator`; `run_ga` drives it one *generation batch* at a
+time, and generates **duplicate-avoiding offspring** (arXiv:2002.12115):
+children that decode to an already-measured pattern are re-mutated so each
+verification measurement buys new information.  With a deterministic fitness
+function the search trajectory is byte-identical in serial and parallel
+evaluation modes.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 import time
 from dataclasses import dataclass, field
@@ -31,6 +39,22 @@ class GAConfig:
     elite: int = 2
     seed: int = 0
     patience: Optional[int] = None    # stop after N generations w/o improvement
+    # --- evaluation-engine knobs (repro.core.evaluator) ---------------------
+    workers: int = 0                  # 0/1 serial; N>1 thread pool (compile-
+                                      # bound fitness only — keep wall-clock
+                                      # fitness serial for timing fidelity)
+    screen_top_k: Optional[int] = None  # surrogate pre-screen: measure at
+                                        # most k new offspring per generation.
+                                        # Needs a surrogate ranking fn, so it
+                                        # only takes effect via
+                                        # loop_offload_pass (or a hand-built
+                                        # Evaluator); bare run_ga raises
+    cache_dir: Optional[str] = None   # persistent measurement cache location.
+                                      # Needs a program fingerprint, so it
+                                      # only takes effect via
+                                      # loop_offload_pass (or a hand-built
+                                      # Evaluator); bare run_ga raises
+    dup_retries: int = 3              # re-mutation attempts per duplicate child
 
 
 @dataclass
@@ -50,9 +74,14 @@ class Evaluation:
 class GAResult:
     best: Evaluation
     history: list[dict]               # per generation: best/mean time
-    evaluations: int                  # unique chromosome measurements
-    cache_hits: int
+    evaluations: int                  # fitness_fn invocations (new measurements)
+    cache_hits: int                   # in-memory + in-flight dedup hits
     baseline: Optional[Evaluation] = None   # all-off pattern
+    persistent_hits: int = 0          # measurements served by the disk cache
+    screened_out: int = 0             # offspring deferred by the surrogate
+    duplicates_avoided: int = 0       # dup children re-mutated to fresh ones
+    wall_s: float = 0.0               # total search wall-clock
+    eval_wall_s: float = 0.0          # wall-clock inside measurement batches
 
     @property
     def speedup_vs_baseline(self) -> float:
@@ -60,29 +89,62 @@ class GAResult:
             return float("nan")
         return self.baseline.time_s / self.best.time_s
 
+    @property
+    def measurements_saved(self) -> int:
+        """Verification measurements avoided by cache + dedup + screening."""
+        return self.cache_hits + self.persistent_hits + self.screened_out
+
 
 FitnessFn = Callable[[tuple], Evaluation]
 
 
 def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
-           log: Optional[Callable[[str], None]] = None) -> GAResult:
-    """Search binary chromosomes of `length`; returns the fastest valid one."""
+           log: Optional[Callable[[str], None]] = None,
+           evaluator=None) -> GAResult:
+    """Search binary chromosomes of `length`; returns the fastest valid one.
+
+    ``evaluator`` is an optional pre-built :class:`repro.core.evaluator.
+    Evaluator` (callers that want a persistent cache keyed to a program
+    fingerprint, or a surrogate pre-screen, construct it themselves — see
+    ``loop_offload_pass``).  When omitted, one is built from the GAConfig
+    knobs (`workers`, `cache_dir`, `screen_top_k`).  The GAResult measurement
+    counters are the evaluator's lifetime totals, so pass a fresh evaluator
+    per search if you want per-search numbers.
+    """
+    from repro.core.evaluator import Evaluator  # deferred: avoids import cycle
+
+    t_start = time.perf_counter()
     rng = np.random.default_rng(cfg.seed)
-    cache: dict[tuple, Evaluation] = {}
-    cache_hits = 0
+    owns_evaluator = evaluator is None
+    if evaluator is None:
+        if cfg.cache_dir is not None:
+            # a persistent cache needs a program identity; bare run_ga has
+            # none, and an anonymous key would serve one program's timings
+            # to every other program sharing the cache_dir
+            raise ValueError(
+                "GAConfig.cache_dir requires a program fingerprint; call "
+                "loop_offload_pass (which keys the cache by the region "
+                "graph) or pass a pre-built Evaluator")
+        evaluator = Evaluator(fitness_fn, workers=cfg.workers,
+                              screen_top_k=cfg.screen_top_k)
 
-    def evaluate(bits: tuple) -> Evaluation:
-        nonlocal cache_hits
-        if bits in cache:
-            cache_hits += 1
-            return cache[bits]
-        ev = fitness_fn(bits)
-        cache[bits] = ev
-        return ev
+    def finish(best, history, baseline) -> GAResult:
+        st = evaluator.stats
+        if owns_evaluator:
+            evaluator.close()
+        return GAResult(
+            best, history, evaluations=st.measurements,
+            cache_hits=st.cache_hits + st.inflight_hits,
+            baseline=baseline, persistent_hits=st.persistent_hits,
+            screened_out=st.screened_out,
+            duplicates_avoided=dup_avoided,
+            wall_s=time.perf_counter() - t_start,
+            eval_wall_s=st.eval_wall_s)
 
+    dup_avoided = 0
     if length == 0:
-        ev = evaluate(())
-        return GAResult(ev, [], 1, 0, baseline=ev)
+        ev = evaluator.evaluate(())
+        return finish(ev, [], ev)
 
     # --- population init: random + seeded all-off / all-on -----------------
     pop: list[tuple] = [tuple([0] * length), tuple([1] * length)]
@@ -90,13 +152,14 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
         pop.append(tuple(int(b) for b in rng.integers(0, 2, length)))
     pop = pop[: cfg.population]
 
-    baseline = evaluate(tuple([0] * length))
+    baseline = evaluator.evaluate(tuple([0] * length))
     history: list[dict] = []
     best: Optional[Evaluation] = None
     stale = 0
 
     for gen in range(cfg.generations):
-        evals = [evaluate(p) for p in pop]
+        # whole-generation batch: dedup + (optionally) parallel measurement
+        evals = evaluator.evaluate_batch(pop)
         gen_best = min(evals, key=lambda e: e.time_s)
         if best is None or gen_best.time_s < best.time_s:
             best = gen_best
@@ -127,6 +190,7 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
 
         ranked = sorted(zip(pop, evals), key=lambda pe: pe[1].time_s)
         next_pop: list[tuple] = [p for p, _ in ranked[: cfg.elite]]  # elite copy
+        proposed = set(next_pop)
         while len(next_pop) < cfg.population:
             i, j = rng.choice(len(pop), size=2, p=probs)
             a, b = list(pop[i]), list(pop[j])
@@ -136,9 +200,23 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
             for t in range(length):                       # bit-flip mutation
                 if rng.random() < cfg.mutation_rate:
                     a[t] = 1 - a[t]
-            next_pop.append(tuple(a))
+            # duplicate-avoiding offspring (arXiv:2002.12115): a child whose
+            # pattern is already measured (or already in this generation)
+            # wastes its measurement slot — re-mutate it a bounded number of
+            # times; an unresolvable duplicate is kept (cache hit, harmless)
+            retries = 0
+            while (retries < cfg.dup_retries
+                   and (tuple(a) in proposed
+                        or evaluator.is_measured(tuple(a)))):
+                a[int(rng.integers(0, length))] ^= 1
+                retries += 1
+            child = tuple(a)
+            if retries and child not in proposed \
+                    and not evaluator.is_measured(child):
+                dup_avoided += 1
+            next_pop.append(child)
+            proposed.add(child)
         pop = next_pop
 
     assert best is not None
-    return GAResult(best, history, evaluations=len(cache),
-                    cache_hits=cache_hits, baseline=baseline)
+    return finish(best, history, baseline)

@@ -9,6 +9,7 @@ transfer planner operate only on it.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Optional
 
@@ -76,3 +77,20 @@ class RegionGraph:
             "n_loops": len(self.loops()),
             "n_offloadable": len(self.offloadable()),
         }
+
+    def fingerprint(self, extra: str = "") -> str:
+        """Stable content hash of the graph structure — the persistent
+        measurement cache's program key: same program (same regions, same
+        def/use sets, same offloadable alternatives) -> same fingerprint, so
+        measurements recorded by one process are valid for another.  `extra`
+        folds in caller context the graph can't see (e.g. input shapes,
+        mesh/device count) that changes what a measurement means."""
+        h = hashlib.sha256()
+        h.update(f"{self.frontend}|{self.source_name}|{extra}".encode())
+        for r in self.regions:
+            h.update((
+                f"{r.name}|{r.kind}|{r.depth}|{r.parent}|"
+                f"{sorted(r.defs)}|{sorted(r.uses)}|{r.callees}|"
+                f"{r.offloadable}|{r.alternatives}|{r.trip_count}"
+            ).encode())
+        return h.hexdigest()[:16]

@@ -1,10 +1,20 @@
 """Loop-statement offload pass (paper §3.2.1 / §4.2.2): GA over the loops the
-function-block pass did not claim."""
+function-block pass did not claim.
+
+This pass is where the GA meets the evaluation engine
+(:mod:`repro.core.evaluator`): it derives the gene coding from the region
+graph, builds an :class:`~repro.core.evaluator.Evaluator` keyed by the
+graph's content fingerprint (so the persistent measurement cache survives
+process restarts and is shared between benchmark runs of the same program),
+optionally attaches the static transfer-cost surrogate for offspring
+pre-screening, and hands both to :func:`repro.core.ga.run_ga`.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
+from repro.core.evaluator import Evaluator, transfer_cost_surrogate
 from repro.core.ga import GAConfig, GAResult, run_ga
 from repro.core.genes import GeneCoding, coding_from_graph
 from repro.core.ir import RegionGraph
@@ -24,7 +34,32 @@ def loop_offload_pass(graph: RegionGraph,
                       fitness_fn: Callable,
                       ga_cfg: Optional[GAConfig] = None,
                       exclude: Sequence[str] = (),
-                      log: Optional[Callable[[str], None]] = None) -> LoopOffloadResult:
+                      log: Optional[Callable[[str], None]] = None,
+                      cache_extra: str = "",
+                      evaluator: Optional[Evaluator] = None) -> LoopOffloadResult:
+    """Run the GA over the unclaimed offloadable regions.
+
+    ``cache_extra`` folds measurement-relevant context the graph cannot see
+    (input shapes, device count) into the persistent-cache fingerprint.
+    A pre-built ``evaluator`` overrides the GAConfig-derived one.
+    """
+    cfg = ga_cfg or GAConfig()
     coding = coding_from_graph(graph, exclude=exclude)
-    ga = run_ga(coding.length, fitness_fn, ga_cfg or GAConfig(), log=log)
+    if evaluator is None:
+        surrogate = None
+        if cfg.screen_top_k is not None:
+            surrogate = transfer_cost_surrogate(graph, coding)
+        evaluator = Evaluator(
+            fitness_fn, workers=cfg.workers, cache_dir=cfg.cache_dir,
+            fingerprint=graph.fingerprint(
+                f"{cache_extra}|exclude={sorted(exclude)}"),
+            surrogate=surrogate, screen_top_k=cfg.screen_top_k)
+        try:
+            ga = run_ga(coding.length, fitness_fn, cfg, log=log,
+                        evaluator=evaluator)
+        finally:
+            evaluator.close()
+    else:
+        ga = run_ga(coding.length, fitness_fn, cfg, log=log,
+                    evaluator=evaluator)
     return LoopOffloadResult(coding, ga)

@@ -10,14 +10,28 @@ Two entry points:
   * :func:`plan_module_offload` — the module frontend, cost-model fitness at
     production scale (the caller provides the ``lower_fn`` built by the
     runtime: plan -> jax.stages.Lowered).
+
+Measurement scheduling goes through the evaluation engine
+(:mod:`repro.core.evaluator`): both entry points key a persistent
+measurement cache by (graph fingerprint, measurement context) via
+``GAConfig.cache_dir``, so re-planning the same program never re-measures a
+known pattern.  The wall-clock path pins serial evaluation (timings on
+shared hardware don't interleave); the cost-model path may parallelize
+compile-bound measurements with ``GAConfig.workers`` or an external process
+pool (see ``benchmarks/bench_ga_offload.py``).
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import itertools
+import os
+import platform
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -126,11 +140,17 @@ def plan_python_offload(program: PyProgram, inputs: dict,
             return {n: np.asarray(env[n]) for n in out_names}
         return run
 
+    # one fitness instance for the whole planning run (it was re-built per
+    # chromosome, re-capturing the reference tree each measurement); `build`
+    # reads the measurement spec staged by `timed` / the GA fitness below
+    _spec: dict = {"impl": {}, "lib": {}}
+    wall_fit = WallClockFitness(
+        build=lambda bits: runner(_spec["impl"], _spec["lib"]),
+        reference_output=reference, repeats=repeats)
+
     def timed(impl: dict, lib_calls: dict) -> Evaluation:
-        fit = WallClockFitness(
-            build=lambda bits: runner(impl, lib_calls),
-            reference_output=reference, repeats=repeats)
-        return fit(())
+        _spec["impl"], _spec["lib"] = impl, lib_calls
+        return wall_fit(())
 
     baseline = timed({}, {})
     log(f"baseline (all-interpreted): {baseline.time_s:.4f}s")
@@ -183,13 +203,32 @@ def plan_python_offload(program: PyProgram, inputs: dict,
     def fitness(bits: tuple) -> Evaluation:
         impl = dict(block_impl)
         impl.update(coding.decode(bits))
-        fit = WallClockFitness(
-            build=lambda b: runner(impl, best_lib),
-            reference_output=reference, repeats=repeats)
-        return fit(bits)
+        _spec["impl"], _spec["lib"] = impl, best_lib
+        return wall_fit(bits)
 
-    loops = loop_offload_pass(program.graph, fitness, ga_cfg or GAConfig(),
-                              exclude=claimed, log=log)
+    # persistent-cache key context: wall-clock measurements are only
+    # comparable for the same source, constants, input shapes AND the same
+    # machine — unlike cost-model estimates, timings are not portable, so a
+    # shared cache_dir must not serve one host's timings to another
+    shapes = {k: getattr(v, "shape", ()) for k, v in sorted(inputs.items())}
+    block_patterns = sorted((bo.region, bo.pattern) for bo in block.offloads
+                            if bo.region in best_lib)
+    cache_extra = (f"src={hashlib.sha256(program.source.encode()).hexdigest()[:12]}"
+                   f"|consts={sorted(program.consts.items())}"
+                   f"|shapes={sorted(shapes.items())}"
+                   f"|block={block_patterns}"
+                   f"|hoist={hoist_transfers}|repeats={repeats}"
+                   f"|host={platform.node()}|ncpu={os.cpu_count()}"
+                   f"|dev={jax.default_backend()}|wallclock")
+    cfg_ga = ga_cfg or GAConfig()
+    if cfg_ga.workers > 1:
+        # wall-clock measurements interleave on shared hardware — parallel
+        # timing is meaningless; only compile-bound fitness may parallelize
+        log("wall-clock fitness: forcing serial evaluation (workers=0)")
+        cfg_ga = dataclasses.replace(cfg_ga, workers=0)
+    loops = loop_offload_pass(program.graph, fitness, cfg_ga,
+                              exclude=claimed, log=log,
+                              cache_extra=cache_extra)
 
     final_impl = dict(block_impl)
     final_impl.update(coding.decode(loops.ga.best.bits))
@@ -242,8 +281,14 @@ def plan_module_offload(cfg, lower_fn: Callable[[ExecPlan], Any],
             module_frontend.plan_from_bits(graph, bits, base, exclude)),
         n_devices=n_devices, model_flops=model_flops, hbm_budget=hbm_budget)
 
+    # compile-bound fitness parallelizes safely (XLA releases the GIL), and
+    # compiled step-time estimates are machine-portable — key the persistent
+    # cache by architecture + mesh + scale
+    cache_extra = (f"arch={cfg.arch_id}|dev={n_devices}"
+                   f"|flops={model_flops:.3g}|hbm={hbm_budget:.3g}"
+                   f"|base={base}|costmodel")
     loops = loop_offload_pass(graph, fitness, ga_cfg or GAConfig(), exclude,
-                              log=log)
+                              log=log, cache_extra=cache_extra)
     final = module_frontend.plan_from_bits(graph, loops.ga.best.bits, base, exclude)
     return ModulePlanResult(
         graph=graph, block=block, loops=loops, base_plan=base,

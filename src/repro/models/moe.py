@@ -238,12 +238,12 @@ def moe_scatter_ep_sharded(x2d: Array, p: dict, cfg: ArchConfig,
             return body(x_loc, wr, wg, wu, wd)
 
     tspec = P(t_axes, None)
-    y, lb, z = jax.shard_map(
+    from repro.runtime.pspec import shard_map_compat
+    y, lb, z = shard_map_compat(
         inner, mesh=mesh,
         in_specs=(tspec, P("data", None), P("model", "data", None),
                   P("model", "data", None), P("model", None, "data")),
         out_specs=(tspec, P(), P()),
-        check_vma=False,
     )(x2d, p["w_router"], p["w_gate"], p["w_up"], p["w_down"])
     return y, MoEAux(lb, z)
 

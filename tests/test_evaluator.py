@@ -1,0 +1,265 @@
+"""Evaluation-engine tests: batched dispatch, persistent measurement cache,
+in-flight dedup under concurrency, duplicate-avoiding offspring, surrogate
+pre-screening, and serial/parallel GA equivalence at fixed seed."""
+import threading
+import time
+
+import pytest
+
+from repro.core.evaluator import Evaluator, transfer_cost_surrogate
+from repro.core.ga import Evaluation, GAConfig, run_ga
+from repro.core.genes import coding_from_graph
+from repro.core.ir import Region, RegionGraph
+
+
+def _counting_fitness(calls, cost=None, delay=0.0):
+    def fit(bits):
+        calls.append(bits)
+        if delay:
+            time.sleep(delay)
+        t = cost(bits) if cost else 1.0 + 0.1 * sum(bits)
+        return Evaluation(bits, t, True)
+    return fit
+
+
+# ---------------------------------------------------------------------------
+# batching + dedup
+# ---------------------------------------------------------------------------
+
+
+def test_batch_dedups_within_population():
+    calls = []
+    ev = Evaluator(_counting_fitness(calls))
+    res = ev.evaluate_batch([(0, 1), (1, 0), (0, 1), (0, 1)])
+    assert len(calls) == 2
+    assert [r.bits for r in res] == [(0, 1), (1, 0), (0, 1), (0, 1)]
+    assert res[0].time_s == res[2].time_s == res[3].time_s
+    assert ev.stats.measurements == 2
+    assert ev.stats.measurements_saved == 2        # two in-batch duplicates
+
+
+def test_batch_hits_memory_cache_across_generations():
+    calls = []
+    ev = Evaluator(_counting_fitness(calls))
+    ev.evaluate_batch([(0, 0), (1, 1)])
+    ev.evaluate_batch([(0, 0), (1, 0)])
+    assert len(calls) == 3
+    assert ev.stats.cache_hits == 1
+
+
+def test_parallel_results_match_serial_order():
+    calls_s, calls_p = [], []
+    pop = [(i % 2, (i // 2) % 2, (i // 4) % 2) for i in range(8)]
+    serial = Evaluator(_counting_fitness(calls_s)).evaluate_batch(pop)
+    parallel = Evaluator(_counting_fitness(calls_p, delay=0.01),
+                         workers=4).evaluate_batch(pop)
+    assert [r.bits for r in serial] == [r.bits for r in parallel]
+    assert [r.time_s for r in serial] == [r.time_s for r in parallel]
+    assert sorted(calls_s) == sorted(calls_p)      # same unique measurements
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_persists_across_engine_instances(tmp_path):
+    calls = []
+    fit = _counting_fitness(calls)
+    e1 = Evaluator(fit, cache_dir=str(tmp_path), fingerprint="prog-a")
+    e1.evaluate_batch([(0, 1), (1, 1)])
+    assert len(calls) == 2
+
+    e2 = Evaluator(fit, cache_dir=str(tmp_path), fingerprint="prog-a")
+    res = e2.evaluate_batch([(0, 1), (1, 1), (1, 0)])
+    assert len(calls) == 3                         # only (1,0) re-measured
+    assert e2.stats.persistent_hits == 2
+    assert res[0].time_s == pytest.approx(1.1)
+
+    # a different program fingerprint must NOT see prog-a's measurements
+    e3 = Evaluator(fit, cache_dir=str(tmp_path), fingerprint="prog-b")
+    e3.evaluate_batch([(0, 1)])
+    assert len(calls) == 4
+
+
+def test_worker_failure_is_transient_not_cached(tmp_path):
+    """A dead worker / broken pool must not poison the measurement cache."""
+    class FailingExecutor:
+        def submit(self, fn, *a):
+            fut = __import__("concurrent.futures", fromlist=["Future"]).Future()
+            fut.set_exception(RuntimeError("worker killed"))
+            return fut
+
+    ev = Evaluator(None, executor=FailingExecutor(), dispatch_fn=lambda b: b,
+                   cache_dir=str(tmp_path), fingerprint="p")
+    res = ev.evaluate((1, 0))
+    assert not res.valid and res.detail.get("transient")
+    assert ev.stats.measurements == 0
+    assert not ev.is_measured((1, 0))               # retry stays possible
+
+    # a fresh engine over the same cache dir sees nothing poisoned
+    calls = []
+    ev2 = Evaluator(_counting_fitness(calls),
+                    cache_dir=str(tmp_path), fingerprint="p")
+    assert ev2.evaluate((1, 0)).valid and len(calls) == 1
+
+
+def test_persistent_cache_preserves_invalid_results(tmp_path):
+    def fit(bits):
+        return Evaluation(bits, float("inf"), False, {"error": "OOM"})
+    e1 = Evaluator(fit, cache_dir=str(tmp_path), fingerprint="p")
+    e1.evaluate((1,))
+    e2 = Evaluator(lambda b: pytest.fail("must not re-measure"),
+                   cache_dir=str(tmp_path), fingerprint="p")
+    res = e2.evaluate((1,))
+    assert not res.valid and res.time_s == float("inf")
+    assert res.detail["error"] == "OOM"
+
+
+# ---------------------------------------------------------------------------
+# in-flight dedup under concurrency
+# ---------------------------------------------------------------------------
+
+
+def test_inflight_dedup_under_concurrency():
+    calls = []
+    started = threading.Event()
+    release = threading.Event()
+
+    def fit(bits):
+        calls.append(bits)
+        started.set()
+        release.wait(timeout=5)
+        return Evaluation(bits, 1.0, True)
+
+    ev = Evaluator(fit, workers=2)
+    out = {}
+
+    def first():
+        out["a"] = ev.evaluate((1, 0))
+
+    def second():
+        out["b"] = ev.evaluate((1, 0))
+
+    t1 = threading.Thread(target=first)
+    t1.start()
+    assert started.wait(timeout=5)                 # measurement in flight
+    t2 = threading.Thread(target=second)
+    t2.start()
+    time.sleep(0.05)                               # let t2 reach the join
+    release.set()
+    t1.join(timeout=5)
+    t2.join(timeout=5)
+    assert len(calls) == 1                         # measured exactly once
+    assert out["a"].time_s == out["b"].time_s == 1.0
+    assert ev.stats.inflight_hits == 1
+    ev.close()
+
+
+# ---------------------------------------------------------------------------
+# surrogate pre-screening
+# ---------------------------------------------------------------------------
+
+
+def test_surrogate_screens_but_never_scores():
+    calls = []
+    ev = Evaluator(_counting_fitness(calls),
+                   surrogate=lambda b: -sum(b),    # rank: more offload first
+                   screen_top_k=2)
+    pop = [(0, 0, 1), (1, 1, 1), (1, 0, 0), (0, 1, 1)]
+    res = ev.evaluate_batch(pop)
+    assert len(calls) == 2 and ev.stats.screened_out == 2
+    assert set(calls) == {(1, 1, 1), (0, 1, 1)}
+    # screened chromosomes are unmeasured (zero fitness), not surrogate-scored
+    screened = [r for r in res if r.detail.get("screened")]
+    assert all(not r.valid and r.fitness == 0.0 for r in screened)
+    # measurement stays the final arbiter: a screened pattern measured later
+    res2 = ev.evaluate((0, 0, 1))
+    assert res2.valid and len(calls) == 3
+
+
+def test_transfer_cost_surrogate_prefers_fewer_transfers():
+    regions = [
+        Region("outer", "loop", trip_count=100, offloadable=False),
+        Region("hot", "loop", parent="outer", depth=1, uses=frozenset({"a"}),
+               defs=frozenset({"a"}), offloadable=True,
+               alternatives=("interp", "jit"), trip_count=10),
+        Region("cold", "loop", uses=frozenset({"b"}), defs=frozenset({"b"}),
+               offloadable=True, alternatives=("interp", "jit"), trip_count=2),
+    ]
+    g = RegionGraph(regions, "python_ast", "t")
+    coding = coding_from_graph(g)
+    cost = transfer_cost_surrogate(g, coding)
+    # offloading everything hoists transfers; costs are finite and ordered
+    assert cost(coding.all_on()) <= cost(coding.all_off()) + 1e6
+    assert cost(coding.all_on()) == cost(coding.all_on())  # memoized, stable
+
+
+# ---------------------------------------------------------------------------
+# GA integration: duplicate avoidance, reproducibility, cache reuse
+# ---------------------------------------------------------------------------
+
+
+def test_ga_duplicate_avoiding_offspring_explores_more():
+    # 3-bit space (8 patterns), population 8: without duplicate avoidance the
+    # GA keeps re-proposing measured patterns; with it, coverage is complete
+    def make_fit(calls):
+        return _counting_fitness(calls)
+
+    calls_on, calls_off = [], []
+    res_on = run_ga(3, make_fit(calls_on),
+                    GAConfig(population=8, generations=6, seed=5,
+                             dup_retries=3))
+    res_off = run_ga(3, make_fit(calls_off),
+                     GAConfig(population=8, generations=6, seed=5,
+                              dup_retries=0))
+    assert len(set(calls_on)) >= len(set(calls_off))
+    assert len(set(calls_on)) == 8                 # full coverage
+    assert res_on.duplicates_avoided > 0
+    assert res_off.duplicates_avoided == 0
+    assert res_on.best.time_s <= res_off.best.time_s
+
+
+def test_ga_serial_parallel_identical_at_fixed_seed():
+    def fit(bits):
+        return Evaluation(bits, 1.0 + 0.07 * sum(b * (i + 1) for i, b in
+                                                 enumerate(bits)) % 0.9, True)
+    cfg = dict(population=10, generations=6, seed=7)
+    r_ser = run_ga(6, fit, GAConfig(**cfg, workers=0))
+    r_par = run_ga(6, fit, GAConfig(**cfg, workers=4))
+    assert r_ser.best.bits == r_par.best.bits
+    assert r_ser.best.time_s == r_par.best.time_s
+    assert [h["best_time_s"] for h in r_ser.history] == \
+        [h["best_time_s"] for h in r_par.history]
+    assert [h["mean_time_s"] for h in r_ser.history] == \
+        [h["mean_time_s"] for h in r_par.history]
+    assert r_ser.evaluations == r_par.evaluations
+
+
+def test_ga_persistent_cache_reduces_measurements(tmp_path):
+    calls = []
+    fit = _counting_fitness(calls)
+
+    def run(seed):
+        ev = Evaluator(fit, cache_dir=str(tmp_path), fingerprint="ga-prog")
+        try:
+            return run_ga(3, fit, GAConfig(population=8, generations=5,
+                                           seed=seed), evaluator=ev)
+        finally:
+            ev.close()
+
+    r1 = run(0)
+    n1 = len(calls)
+    assert n1 == r1.evaluations > 0
+    r2 = run(0)
+    assert len(calls) - n1 < n1                    # warm start: fewer new
+    assert r2.persistent_hits > 0
+    assert r2.best.time_s <= r1.best.time_s
+    assert r2.measurements_saved > 0
+
+
+def test_ga_reports_search_wall_clock():
+    res = run_ga(4, lambda b: Evaluation(b, 1.0 + sum(b), True),
+                 GAConfig(population=6, generations=3, seed=0))
+    assert res.wall_s > 0
+    assert 0 < res.eval_wall_s <= res.wall_s

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.data import Batcher, DataConfig, SyntheticLMDataset
 from repro.optim import (OptimizerConfig, adamw_init, adamw_update,
