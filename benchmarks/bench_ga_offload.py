@@ -25,9 +25,9 @@ import subprocess
 import sys
 import tempfile
 import time
-from concurrent.futures import ProcessPoolExecutor
 
-from repro.core.evaluator import Evaluator
+from repro.core.evaluator import (Evaluator, ProcessPool,
+                                  register_fitness_factory)
 from repro.core.frontends.ast_frontend import Executor, PyProgram
 from repro.core.ga import Evaluation, GAConfig, run_ga
 from repro.core.genes import coding_from_graph
@@ -52,7 +52,6 @@ _MODULE_BENCH_XLA_FLAGS = ("--xla_cpu_parallel_codegen_split_count=1 "
 _MODULE_ARCH = dict(arch_id="bench_dense", family="dense", n_layers=2,
                     d_model=128, n_heads=8, n_kv_heads=4, head_dim=16,
                     d_ff=256, vocab=512, mlp_act="silu", tie_embeddings=False)
-_WORKER_FIT = None
 
 
 def _build_module_fitness():
@@ -78,13 +77,14 @@ def _build_module_fitness():
     return CostModelFitness(lower=lower, n_devices=1), graph
 
 
-def _worker_init():
-    global _WORKER_FIT
-    _WORKER_FIT = _build_module_fitness()[0]
+def _module_fitness_factory():
+    """Pool workers rebuild the module CostModelFitness once each (spawn
+    initializer); registered so ``GAConfig.pool='bench_module_cost'`` or a
+    hand-built :class:`ProcessPool` can select it by name."""
+    return _build_module_fitness()[0]
 
 
-def _worker_eval(bits):
-    return _WORKER_FIT(bits)
+register_fitness_factory("bench_module_cost", _module_fitness_factory)
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +134,11 @@ def _bench_python_ga(rows: list) -> None:
                 f"eval={res.eval_wall_s:.2f}s of {res.wall_s:.2f}s; "
                 f"saved={res.measurements_saved} "
                 f"(cache={res.cache_hits} dup_avoided={res.duplicates_avoided})"),
+            row("ga_offload.surrogate_rank_corr",
+                res.surrogate_rank_corr * 1e6,
+                f"spearman(surrogate, measured)={res.surrogate_rank_corr:.3f}"
+                f" over {res.evaluations} measurements; sets screen_top_k"
+                f" from data"),
         ]
         assert res.best.time_s <= all_on.time_s * 1.05  # GA >= all-offload
 
@@ -193,19 +198,13 @@ def _module_parallel_main() -> list[str]:
     # leg isn't inflated by one-time init that the pool workers already paid
     fitness(coding.all_off())
 
-    # spawn-based workers (one-time spawn cost timed separately)
+    # spawn-based workers via the reusable evaluator.ProcessPool helper
+    # (one-time spawn cost timed separately); warm() makes every worker pay
+    # its first-compile cost (LLVM/backend init) before the timed rounds
     t0 = time.perf_counter()
-    import multiprocessing as mp
     n_workers = min(3, (os.cpu_count() or 2) + 1)  # slight oversubscription
-    pool = ProcessPoolExecutor(max_workers=n_workers,
-                               mp_context=mp.get_context("spawn"),
-                               initializer=_worker_init)
-    # concurrent warm-ups so EVERY worker pays its first-compile cost
-    # (LLVM/backend init) before the timed rounds; results are discarded
-    warm = [pool.submit(_worker_eval,
-                        coding.all_on() if i % 2 else coding.all_off())
-            for i in range(2 * n_workers)]
-    [w.result() for w in warm]
+    pool = ProcessPool("bench_module_cost", workers=n_workers)
+    pool.warm([coding.all_off(), coding.all_on()])
     t_spawn = time.perf_counter() - t0
 
     try:
@@ -226,8 +225,7 @@ def _module_parallel_main() -> list[str]:
             Evaluator(fitness).evaluate_batch(batch)
             t_ser = time.perf_counter() - t0
             t0 = time.perf_counter()
-            Evaluator(None, executor=pool,
-                      dispatch_fn=_worker_eval).evaluate_batch(batch)
+            Evaluator(None, **pool.evaluator_kwargs()).evaluate_batch(batch)
             t_par = time.perf_counter() - t0
             ratios.append(t_ser / t_par)
             t_ser_tot += t_ser
@@ -239,12 +237,12 @@ def _module_parallel_main() -> list[str]:
         t0 = time.perf_counter()
         res_ser = run_ga(coding.length, fitness, cfg)
         t_ga_ser = time.perf_counter() - t0
-        ev = Evaluator(None, executor=pool, dispatch_fn=_worker_eval)
+        ev = Evaluator(None, **pool.evaluator_kwargs())
         t0 = time.perf_counter()
         res_par = run_ga(coding.length, None, cfg, evaluator=ev)
         t_ga_par = time.perf_counter() - t0
     finally:
-        pool.shutdown()
+        pool.close()
 
     rows += [
         row("ga_offload.module_eval_serial_s", t_ser_tot * 1e6,

@@ -1,5 +1,10 @@
-"""Quickstart: build a model, let the offload planner pick implementations,
-train a few steps, serve a few tokens.
+"""Quickstart: build a model, let the unified offload pipeline pick
+implementations, train a few steps, serve a few tokens.
+
+The planner is one call for every frontend (`repro.core.offload.Offloader`):
+here the *module* frontend plans an ArchConfig — the function-block pass
+matches pattern-DB records, the GA searches the remaining offload sites, and
+the returned artifact is the ExecPlan to train with.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,10 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import block_offload_pass, default_db
-from repro.core.frontends import module_frontend
+from repro.core import GAConfig, OffloadConfig, plan_offload
 from repro.models import REFERENCE_PLAN, build_model
-from repro.models.plan import ExecPlan
 from repro.data import DataConfig, SyntheticLMDataset
 from repro.optim import OptimizerConfig
 from repro.optim.schedule import make_schedule
@@ -24,13 +27,18 @@ def main():
     model = build_model(cfg)
     print(f"arch={cfg.arch_id} params={sum(x.size for x in jax.tree_util.tree_leaves(model.init(jax.random.key(0))))/1e6:.2f}M")
 
-    # 2. function-block offload: pattern DB picks accelerated implementations
-    graph = module_frontend.build_graph(cfg)
-    block = block_offload_pass(graph, default_db())
-    plan = ExecPlan(compute_dtype="float32").replace(**block.plan_updates)
-    print("block offload ->", block.plan_updates)
+    # 2. unified offload planning: frontend detected from the target
+    #    (ArchConfig -> module frontend; no lower_fn -> fast static-cost
+    #    fitness.  Pass options={"lower_fn": ...} for AOT-compiled fitness.)
+    res = plan_offload(cfg, config=OffloadConfig(
+        ga=GAConfig(population=8, generations=4, seed=0)))
+    plan = res.artifact.replace(compute_dtype="float32")
+    print(f"planned via {res.frontend}: blocks="
+          f"{[b.pattern for b in res.block.offloads]} "
+          f"best={''.join(map(str, res.best.bits))} "
+          f"destinations={res.destinations}")
 
-    # 3. train a few steps
+    # 3. train a few steps under the planned ExecPlan
     data = SyntheticLMDataset(DataConfig(seq_len=64, global_batch=4,
                                          vocab=cfg.vocab, seed=0))
     state = init_train_state(model, jax.random.key(0))

@@ -1,15 +1,27 @@
 """The paper's primary contribution: common automatic offload for diverse
 source-language frontends — GA loop offload + pattern-DB function-block
-offload + transfer hoisting over a language-independent Region IR.
+offload + transfer hoisting over a language-independent Region IR, behind
+one pipeline (`repro.core.offload.Offloader`) and a frontend registry.
 """
 from repro.core.block_offload import BlockOffloadResult, block_offload_pass
-from repro.core.evaluator import (EvalStats, Evaluator,
+from repro.core.evaluator import (EvalStats, Evaluator, ProcessPool,
+                                  fitness_factory, fitness_factory_names,
+                                  register_fitness_factory,
                                   transfer_cost_surrogate)
 from repro.core.fitness import CostModelFitness, WallClockFitness
+from repro.core.frontends import (Frontend, FitnessBundle, detect_frontend,
+                                  frontend_names, get_frontend,
+                                  register_frontend)
 from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
-from repro.core.genes import GeneCoding, Site, coding_from_graph
+from repro.core.genes import (DEFAULT_ALPHABET, EXTENDED_ALPHABET, CPU,
+                              FPGA_STUB, GPU, Destination, GeneCoding, Site,
+                              coding_from_graph, destination_names,
+                              get_destination, modeled_cost_s,
+                              register_destination)
 from repro.core.ir import Region, RegionGraph
 from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
+from repro.core.offload import (OffloadConfig, OffloadResult, Offloader,
+                                SeedBank, ga_search, plan_offload)
 from repro.core.pattern_db import Match, PatternDB, PatternRecord, default_db
 from repro.core.planner import (ModulePlanResult, PythonPlanResult,
                                 plan_module_offload, plan_python_offload)
@@ -19,11 +31,19 @@ from repro.core.verifier import VerifyResult, verify
 __all__ = [
     "BlockOffloadResult", "block_offload_pass",
     "CostModelFitness", "WallClockFitness",
-    "EvalStats", "Evaluator", "transfer_cost_surrogate",
+    "EvalStats", "Evaluator", "ProcessPool", "transfer_cost_surrogate",
+    "fitness_factory", "fitness_factory_names", "register_fitness_factory",
+    "Frontend", "FitnessBundle", "detect_frontend", "frontend_names",
+    "get_frontend", "register_frontend",
     "Evaluation", "GAConfig", "GAResult", "run_ga",
-    "GeneCoding", "Site", "coding_from_graph",
+    "DEFAULT_ALPHABET", "EXTENDED_ALPHABET", "CPU", "GPU", "FPGA_STUB",
+    "Destination", "GeneCoding", "Site", "coding_from_graph",
+    "destination_names", "get_destination", "modeled_cost_s",
+    "register_destination",
     "Region", "RegionGraph",
     "LoopOffloadResult", "loop_offload_pass",
+    "OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
+    "ga_search", "plan_offload",
     "Match", "PatternDB", "PatternRecord", "default_db",
     "ModulePlanResult", "PythonPlanResult",
     "plan_module_offload", "plan_python_offload",

@@ -36,14 +36,18 @@ import math
 import os
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future, ProcessPoolExecutor, ThreadPoolExecutor
 from concurrent.futures import wait as _wait_futures
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
+import numpy as np
+
 from repro.core.ga import Evaluation
 
-__all__ = ["EvalStats", "Evaluator", "transfer_cost_surrogate"]
+__all__ = ["EvalStats", "Evaluator", "ProcessPool", "transfer_cost_surrogate",
+           "register_fitness_factory", "fitness_factory",
+           "fitness_factory_names"]
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +200,9 @@ class Evaluator:
         self.surrogate = surrogate
         self.screen_top_k = screen_top_k
         self.stats = EvalStats()
+        # (surrogate score, measured time) per finite measurement — the data
+        # behind surrogate_rank_correlation(), which calibrates screen_top_k
+        self._surrogate_pairs: list[tuple[float, float]] = []
         self._cache: dict[tuple, Evaluation] = {}
         self._lock = threading.Lock()
         self._inflight: dict[tuple, Future] = {}
@@ -234,12 +241,54 @@ class Evaluator:
     # -- measurement --------------------------------------------------------
 
     def _record(self, bits: tuple, ev: Evaluation) -> Evaluation:
+        score = None
+        if self.surrogate is not None and math.isfinite(ev.time_s):
+            try:
+                score = float(self.surrogate(bits))
+            except Exception:  # noqa: BLE001 — a broken surrogate only
+                score = None   # loses calibration data, never a measurement
         with self._lock:
             self.stats.measurements += 1
             self._cache[bits] = ev
+            if score is not None:
+                self._surrogate_pairs.append((score, ev.time_s))
         if self._store is not None:
             self._store.store(ev)
         return ev
+
+    def surrogate_rank_correlation(self) -> float:
+        """Spearman rank correlation between the surrogate's static score and
+        the measured time across this engine's finite measurements.
+
+        +1 means the surrogate orders offspring exactly as measurement would
+        (screening is nearly free); ~0 means screening is a coin flip — the
+        number that lets ``screen_top_k`` be set from data instead of faith.
+        nan with fewer than 3 points or a constant ranking.
+        """
+        with self._lock:
+            pairs = list(self._surrogate_pairs)
+        if len(pairs) < 3:
+            return float("nan")
+        score = np.asarray([p[0] for p in pairs])
+        t = np.asarray([p[1] for p in pairs])
+        if np.ptp(score) == 0 or np.ptp(t) == 0:
+            return float("nan")
+
+        def rank(x: np.ndarray) -> np.ndarray:
+            order = np.argsort(x, kind="stable")
+            r = np.empty(len(x))
+            r[order] = np.arange(len(x), dtype=float)
+            # average ties so equal scores can't fake correlation
+            for v in np.unique(x):
+                m = x == v
+                r[m] = r[m].mean()
+            return r
+
+        rs, rt = rank(score), rank(t)
+        rs -= rs.mean()
+        rt -= rt.mean()
+        denom = float(np.sqrt((rs ** 2).sum() * (rt ** 2).sum()))
+        return float((rs * rt).sum() / denom) if denom else float("nan")
 
     def _measure(self, bits: tuple) -> Evaluation:
         return self._record(bits, self.fitness_fn(bits))
@@ -425,10 +474,23 @@ def transfer_cost_surrogate(graph, coding, var_bytes: Optional[dict] = None,
     and weights the resulting transfer count by per-variable byte sizes when
     known.  Patterns that offload more while transferring less rank first —
     a roofline-style prior, used *only* to order offspring for measurement.
+
+    Destination-aware: genes on cost-only destinations decode to the
+    reference path (zero transfers), so their modeled device cost is folded
+    into the rank instead — otherwise stub-parked chromosomes would rank
+    *best* while the fitness charges them the stub's modeled latency, and
+    screening would invert.  Only genes on executable accelerator
+    destinations count as "more offloaded work" for the tiebreak.
     """
+    from repro.core.genes import get_destination, modeled_cost_s
     from repro.core.transfer_planner import plan_transfers
 
     var_bytes = var_bytes or {}
+    dests = [get_destination(d) for d in coding.destinations]
+    any_cost_only = any(not d.executable for d in dests)
+    #: rank-units per modeled second — arbitrary but monotone: it only has
+    #: to make stub-parked genes rank behind the free reference path
+    _COST_ONLY_SCALE = 1e6
     memo: dict[tuple, float] = {}
 
     def cost(bits: tuple) -> float:
@@ -447,9 +509,128 @@ def transfer_cost_surrogate(graph, coding, var_bytes: Optional[dict] = None,
                     trips *= (r.trip_count or 1) if r.kind == "loop" else 1
                     r = graph.by_name(r.parent) if r.parent else None
             total += trips * float(var_bytes.get(t.var, 1.0))
+        if any_cost_only:
+            total += _COST_ONLY_SCALE * modeled_cost_s(graph, coding, bits)
         # prefer more offloaded work at equal transfer cost (paper intuition:
-        # offload wins when transfers are amortized)
-        memo[bits] = total - 1e-9 * sum(bits)
+        # offload wins when transfers are amortized); for the binary alphabet
+        # this is exactly the historical sum(bits)
+        offloaded = sum(1 for v in bits
+                        if dests[int(v)].executable and int(v) != 0)
+        memo[bits] = total - 1e-9 * offloaded
         return memo[bits]
 
     return cost
+
+
+# ---------------------------------------------------------------------------
+# process-pool dispatch: fitness-factory registry + reusable spawn pool
+# ---------------------------------------------------------------------------
+
+#: name -> zero-state factory returning a ``bits -> Evaluation`` callable.
+#: Factories must be module-level (picklable by reference) so spawn workers
+#: can rebuild the fitness in their initializer.
+_FITNESS_FACTORIES: dict[str, Callable[..., Callable[[tuple], Evaluation]]] = {}
+
+
+def register_fitness_factory(name: str, factory: Callable,
+                             replace: bool = False) -> None:
+    """Register a fitness factory under ``name`` for pool-based evaluation
+    (``GAConfig.pool = name``).  The factory runs once per worker process."""
+    if name in _FITNESS_FACTORIES and not replace:
+        raise ValueError(f"fitness factory {name!r} already registered")
+    _FITNESS_FACTORIES[name] = factory
+
+
+def fitness_factory(name: str) -> Callable:
+    try:
+        return _FITNESS_FACTORIES[name]
+    except KeyError:
+        raise KeyError(f"unknown fitness factory {name!r}; registered: "
+                       f"{sorted(_FITNESS_FACTORIES)}") from None
+
+
+def fitness_factory_names() -> tuple[str, ...]:
+    return tuple(sorted(_FITNESS_FACTORIES))
+
+
+def _smoke_fitness_factory(scale: float = 0.1) -> Callable[[tuple], Evaluation]:
+    """Shipped example factory (also the cross-process test fixture): a
+    deterministic synthetic fitness with no heavy dependencies."""
+    def fit(bits: tuple) -> Evaluation:
+        return Evaluation(tuple(bits), 1.0 + scale * sum(bits), True)
+    return fit
+
+
+register_fitness_factory("smoke", _smoke_fitness_factory)
+
+
+_POOL_FITNESS: Optional[Callable[[tuple], Evaluation]] = None
+
+
+def _pool_worker_init(factory, args: tuple, kwargs: dict) -> None:
+    global _POOL_FITNESS
+    _POOL_FITNESS = factory(*args, **(kwargs or {}))
+
+
+def _pool_worker_eval(bits: tuple) -> Evaluation:
+    assert _POOL_FITNESS is not None, "worker initializer did not run"
+    return _POOL_FITNESS(bits)
+
+
+class ProcessPool:
+    """Spawn-based measurement pool built from a registered fitness factory.
+
+    XLA serializes LLVM compilation process-wide, so compile-bound fitness
+    only scales across *processes*.  Each worker rebuilds the fitness once in
+    its initializer (the factory must be a module-level callable); the parent
+    keeps ownership of caching / dedup / persistence through the
+    :class:`Evaluator` it plugs into via :meth:`evaluator_kwargs`.
+
+    ``warm(chromosomes)`` pays every worker's one-time first-compile cost up
+    front (results are measured in the parent's Evaluator-free context and
+    discarded), so timed searches see a warm pool.
+    """
+
+    def __init__(self, factory: str | Callable, workers: Optional[int] = None,
+                 args: tuple = (), kwargs: Optional[dict] = None):
+        import multiprocessing as mp
+
+        if isinstance(factory, str):
+            factory = fitness_factory(factory)
+        self.workers = int(workers or min(4, (os.cpu_count() or 2)))
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        self.executor: ProcessPoolExecutor = ProcessPoolExecutor(
+            max_workers=self.workers,
+            mp_context=mp.get_context("spawn"),
+            initializer=_pool_worker_init,
+            initargs=(factory, tuple(args), dict(kwargs or {})))
+
+    #: what Evaluator dispatches through the pool — module-level, picklable.
+    dispatch_fn = staticmethod(_pool_worker_eval)
+
+    def evaluator_kwargs(self) -> dict:
+        """Plug-in kwargs for :class:`Evaluator`: cross-process dispatch."""
+        return {"executor": self.executor, "dispatch_fn": _pool_worker_eval}
+
+    def warm(self, chromosomes: Sequence[tuple],
+             rounds_per_worker: int = 2) -> None:
+        """Run throwaway measurements so every worker initializes + compiles
+        before anything is timed.  ``chromosomes`` cycle round-robin."""
+        if not chromosomes:
+            return
+        futs = [self.executor.submit(
+                    _pool_worker_eval,
+                    tuple(chromosomes[i % len(chromosomes)]))
+                for i in range(rounds_per_worker * self.workers)]
+        for f in futs:
+            f.result()
+
+    def close(self) -> None:
+        self.executor.shutdown(wait=True)
+
+    def __enter__(self) -> "ProcessPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,28 @@
+"""Language frontends for the common offload core.
+
+Each frontend lowers one "source language" (Python source via ``ast``,
+traced JAX via jaxpr, declarative model configs via the module graph) to the
+shared Region IR and implements the :class:`~repro.core.frontends.registry.
+Frontend` protocol.  Importing this package registers all shipped frontends
+plus the generic ``ir`` frontend under their names, so
+``repro.core.offload.Offloader`` can resolve any of them.
+"""
+from repro.core.frontends import (ast_frontend, jaxpr_frontend,
+                                  module_frontend)
+from repro.core.frontends.registry import (Frontend, FitnessBundle,
+                                           IRFrontend, OffloadConfig,
+                                           detect_frontend, frontend_names,
+                                           get_frontend, register_frontend,
+                                           static_cost_fitness_factory)
+
+register_frontend(ast_frontend.AstFrontend())
+register_frontend(jaxpr_frontend.JaxprFrontend())
+register_frontend(module_frontend.ModuleFrontend())
+register_frontend(IRFrontend())
+
+__all__ = [
+    "ast_frontend", "jaxpr_frontend", "module_frontend",
+    "Frontend", "FitnessBundle", "IRFrontend", "OffloadConfig",
+    "detect_frontend", "frontend_names", "get_frontend", "register_frontend",
+    "static_cost_fitness_factory",
+]

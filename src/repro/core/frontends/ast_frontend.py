@@ -560,3 +560,223 @@ class Executor:
             v = env[n]
             out[n] = np.asarray(v)
         return out
+
+
+# ---------------------------------------------------------------------------
+# library-call adapters ("CUDA library" substitution, paper §4.2.1)
+# ---------------------------------------------------------------------------
+
+
+def _order_by_appearance(names, source: str) -> list:
+    return sorted(names, key=lambda v: source.find(v) if v in source else 1 << 30)
+
+
+def _adapt_matmul(region, env, source):
+    arrays_in = [v for v in region.uses - region.defs
+                 if isinstance(env.get(v), np.ndarray) and env[v].ndim == 2]
+    outs = [v for v in region.defs
+            if isinstance(env.get(v), np.ndarray) and env[v].ndim == 2]
+    arrays_in = _order_by_appearance(arrays_in, source)
+    if len(arrays_in) != 2 or len(outs) != 1:
+        raise ValueError("matmul adapter needs exactly (a, b) -> c")
+    return (lambda a, b: jnp.matmul(a, b)), arrays_in, outs
+
+
+def _adapt_fft(region, env, source):
+    ins = _order_by_appearance(
+        [v for v in region.uses - region.defs
+         if isinstance(env.get(v), np.ndarray)], source)
+    outs = _order_by_appearance(
+        [v for v in region.defs if isinstance(env.get(v), np.ndarray)], source)
+    if len(ins) == 2 and len(outs) == 2:    # (re, im) -> (re, im): adapt complex
+        def fft2ri(re, im):
+            z = jnp.fft.fft(re + 1j * im)
+            return jnp.real(z), jnp.imag(z)
+        return fft2ri, ins, outs
+    if len(ins) == 1 and len(outs) == 1:
+        return (lambda x: jnp.abs(jnp.fft.fft(x))), ins, outs
+    raise ValueError("fft adapter: unsupported interface")
+
+
+_AST_ADAPTERS: dict[str, Callable] = {
+    "matmul": _adapt_matmul,
+    "fft": _adapt_fft,
+}
+
+
+# ---------------------------------------------------------------------------
+# the Frontend adapter (repro.core.frontends.registry protocol)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PyOffloadArtifact:
+    """The python frontend's deliverable: a program bound to its plan."""
+
+    program: PyProgram
+    impl: dict                       # region -> implementation id
+    lib_calls: dict                  # region -> (callable, in_names, out_names)
+    hoist_transfers: bool = True
+
+    def executor(self) -> Executor:
+        return Executor(self.program, self.impl,
+                        hoist_transfers=self.hoist_transfers,
+                        lib_calls=self.lib_calls)
+
+    def run(self, **inputs) -> dict:
+        """Execute under the planned pattern; returns the output arrays."""
+        env = self.executor().run(**inputs)
+        names = self.program.output_names or sorted(
+            v for v in env if isinstance(env[v], np.ndarray))
+        return {n: np.asarray(env[n]) for n in names}
+
+
+class AstFrontend:
+    """Python-source frontend for the unified pipeline: parse with ``ast``,
+    measure with the interpreting Executor (wall clock, PCAST-style
+    verification), substitute device libraries for matched blocks."""
+
+    name = "python_ast"
+
+    def normalize_target(self, target, inputs, config) -> PyProgram:
+        if isinstance(target, PyProgram):
+            return target
+        return PyProgram(target, consts=config.options.get("consts"))
+
+    def build_graph(self, target: PyProgram, inputs, config):
+        if inputs:
+            # interpret once against real inputs; loops that fail to compile
+            # under the offload rewrite leave the gene (paper §4.2.2)
+            target.check_offloadable(inputs)
+        return target.graph
+
+    def make_fitness(self, graph, program: PyProgram, inputs, config):
+        import hashlib
+        import os
+        import platform
+
+        from repro.core.block_offload import block_offload_pass
+        from repro.core.fitness import WallClockFitness
+        from repro.core.frontends.registry import FitnessBundle
+        from repro.core.pattern_db import default_db
+
+        db = config.db or default_db()
+        log = config.log or (lambda s: None)
+        inputs = inputs or {}
+
+        # --- calibration: interpret once; snapshots + reference outputs ----
+        snaps: dict[str, dict] = {}
+        ex0 = Executor(program, {}, hoist_transfers=False)
+        ex0.pre_loop_hook = lambda name, env: snaps.setdefault(name, dict(env))
+        env0 = ex0.run(**inputs)
+        out_names = program.output_names or sorted(
+            v for v in env0 if isinstance(env0[v], (np.ndarray,)))
+        reference = {n: np.asarray(env0[n]) for n in out_names}
+
+        def runner(impl: dict, lib_calls: dict) -> Callable[[], dict]:
+            def run():
+                ex = Executor(program, impl,
+                              hoist_transfers=config.hoist_transfers,
+                              lib_calls=lib_calls)
+                env = ex.run(**inputs)
+                return {n: np.asarray(env[n]) for n in out_names}
+            return run
+
+        # one fitness instance for the whole planning run; `build` reads the
+        # measurement spec staged by `timed` / the GA fitness below
+        _spec: dict = {"impl": {}, "lib": {}}
+        wall_fit = WallClockFitness(
+            build=lambda bits: runner(_spec["impl"], _spec["lib"]),
+            reference_output=reference, repeats=config.repeats)
+
+        def timed(impl: dict, lib_calls: dict):
+            _spec["impl"], _spec["lib"] = impl, lib_calls
+            return wall_fit(())
+
+        baseline = timed({}, {})
+        log(f"baseline (all-interpreted): {baseline.time_s:.4f}s")
+
+        # --- function-block offload first (paper §4.2) ---------------------
+        block = block_offload_pass(graph=program.graph, db=db,
+                                   confirm=config.confirm)
+        candidates = {}
+        for bo in block.offloads:
+            adapter = _AST_ADAPTERS.get(bo.pattern)
+            if adapter is None:
+                continue
+            envs = snaps.get(bo.region)
+            if envs is None:
+                continue
+            try:
+                candidates[bo.region] = adapter(
+                    program.graph.by_name(bo.region), envs, program.source)
+            except ValueError as e:
+                log(f"block {bo.region} ({bo.pattern}): adapter failed: {e}")
+
+        # measure each block and combinations (paper §4.2.1)
+        import itertools
+        best_lib: dict = {}
+        best_time = baseline.time_s
+        keys = list(candidates)
+        combos = itertools.chain.from_iterable(
+            itertools.combinations(keys, r) for r in range(1, len(keys) + 1)) \
+            if len(keys) <= 3 else [tuple(keys)] + [(k,) for k in keys]
+        for combo in combos:
+            lib = {k: candidates[k] for k in combo}
+            impl = {k: "lib" for k in combo}
+            ev = timed(impl, lib)
+            log(f"block combo {combo}: {ev.time_s:.4f}s valid={ev.valid}")
+            if ev.valid and ev.time_s < best_time:
+                best_time, best_lib = ev.time_s, lib
+        block_impl = {k: "lib" for k in best_lib}
+
+        # claimed regions (and their descendants) leave the gene
+        claimed = set(best_lib)
+        for r in program.graph.regions:
+            p_ = r.parent
+            while p_ is not None:
+                if p_ in claimed:
+                    claimed.add(r.name)
+                    break
+                p_ = program.graph.by_name(p_).parent
+        claimed = tuple(sorted(claimed))
+
+        # persistent-cache key context: wall-clock measurements are only
+        # comparable for the same source, constants, input shapes AND the
+        # same machine — timings are not portable between hosts
+        shapes = {k: getattr(v, "shape", ()) for k, v in sorted(inputs.items())}
+        block_patterns = sorted((bo.region, bo.pattern) for bo in block.offloads
+                                if bo.region in best_lib)
+        cache_extra = (
+            f"src={hashlib.sha256(program.source.encode()).hexdigest()[:12]}"
+            f"|consts={sorted(program.consts.items())}"
+            f"|shapes={sorted(shapes.items())}"
+            f"|block={block_patterns}"
+            f"|hoist={config.hoist_transfers}|repeats={config.repeats}"
+            f"|host={platform.node()}|ncpu={os.cpu_count()}"
+            f"|dev={jax.default_backend()}|wallclock")
+
+        def fitness_factory(coding):
+            def fitness(values: tuple):
+                impl = dict(block_impl)
+                impl.update(coding.decode(values))
+                _spec["impl"], _spec["lib"] = impl, best_lib
+                return wall_fit(tuple(values))
+            return fitness
+
+        return FitnessBundle(
+            fitness_factory=fitness_factory,
+            block=block, claimed=claimed, base_impl=block_impl,
+            cache_extra=cache_extra, serial_only=True, measured=True,
+            context={"program": program, "lib_calls": best_lib,
+                     "baseline": baseline, "block_time_s": best_time,
+                     "out_names": out_names,
+                     "hoist": config.hoist_transfers})
+
+    def apply_plan(self, graph, coding, values, bundle) -> PyOffloadArtifact:
+        from repro.core.frontends.registry import decoded_pattern
+        impl = decoded_pattern(coding, values, bundle.base_impl)
+        return PyOffloadArtifact(
+            program=bundle.context["program"], impl=impl,
+            lib_calls=bundle.context["lib_calls"],
+            hoist_transfers=bundle.context.get("hoist", True))

@@ -91,3 +91,46 @@ def build_graph(fn: Callable, *example_args, name: str = "") -> RegionGraph:
     g = RegionGraph(regions, "jaxpr", name or getattr(fn, "__name__", "traced"))
     g.meta["whole_program_vector"] = sim.jaxpr_vector(closed)
     return g
+
+
+# ---------------------------------------------------------------------------
+# the Frontend adapter (repro.core.frontends.registry protocol)
+# ---------------------------------------------------------------------------
+
+
+class JaxprFrontend:
+    """Traced-JAX frontend for the unified pipeline.
+
+    ``options["example_args"]`` supplies the tracing arguments.  Kernel
+    substitution for matched regions is not implemented yet, so the fitness
+    is the shared static-cost stub (transfer volume over the region graph)
+    — deterministic, which is exactly what the conformance contract needs;
+    results carry ``static_cost`` so they are never mistaken for
+    measurements.  ``apply_plan`` reports the region -> implementation map.
+    """
+
+    name = "jaxpr"
+
+    def build_graph(self, fn: Callable, inputs, config) -> RegionGraph:
+        example_args = config.options.get("example_args", ())
+        return build_graph(fn, *example_args,
+                           name=config.options.get("name", ""))
+
+    def make_fitness(self, graph: RegionGraph, fn: Callable, inputs, config):
+        from repro.core.block_offload import block_offload_pass
+        from repro.core.frontends.registry import (FitnessBundle,
+                                                   static_cost_fitness_factory)
+        from repro.core.pattern_db import default_db
+
+        block = block_offload_pass(graph, config.db or default_db(),
+                                   confirm=config.confirm)
+        return FitnessBundle(
+            fitness_factory=static_cost_fitness_factory(graph),
+            block=block, claimed=block.claimed_regions,
+            base_impl={r: "kernel" for r in block.claimed_regions},
+            cache_extra=f"jaxpr={graph.source_name}|staticcost",
+            measured=False)
+
+    def apply_plan(self, graph: RegionGraph, coding, values, bundle) -> dict:
+        from repro.core.frontends.registry import decoded_pattern
+        return decoded_pattern(coding, values, bundle.base_impl)

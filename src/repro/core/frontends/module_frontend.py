@@ -55,7 +55,13 @@ def build_graph(cfg: ArchConfig) -> RegionGraph:
 
 def plan_from_bits(graph: RegionGraph, bits, base: Optional[ExecPlan] = None,
                    exclude: tuple = ()) -> ExecPlan:
-    """Decode a chromosome into an ExecPlan (respecting block-pass claims)."""
+    """Decode a chromosome into an ExecPlan (respecting block-pass claims).
+
+    Multi-destination genes are welcome: value 1 is the primary accelerator
+    (the offloaded plan value); any other value — 0 (CPU) or a cost-only
+    stub destination — keeps the reference value, since only executable
+    destinations change what actually compiles.
+    """
     plan = base or ExecPlan()
     sites = [r for r in graph.offloadable() if r.name not in exclude]
     assert len(bits) == len(sites), (len(bits), len(sites))
@@ -63,5 +69,90 @@ def plan_from_bits(graph: RegionGraph, bits, base: Optional[ExecPlan] = None,
     for r, b in zip(sites, bits):
         field = r.meta["plan_field"]
         ref, off = _REF_OFFLOAD[field]
-        kw[field] = off if b else ref
+        kw[field] = off if int(b) == 1 else ref
     return plan.replace(**kw)
+
+
+def plan_from_coding(graph: RegionGraph, coding, values,
+                     base: Optional[ExecPlan] = None) -> ExecPlan:
+    """Destination-aware decode: the coding's alphabet picks each site's
+    implementation (cost-only destinations resolve to the reference value)."""
+    impl = coding.decode(values)
+    plan = base or ExecPlan()
+    kw = {graph.by_name(region).meta["plan_field"]: value
+          for region, value in impl.items()}
+    return plan.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# the Frontend adapter (repro.core.frontends.registry protocol)
+# ---------------------------------------------------------------------------
+
+
+class ModuleFrontend:
+    """Model-config frontend for the unified pipeline: sites are ExecPlan
+    knobs; fitness is the AOT cost model when the caller provides a
+    ``lower_fn`` (options: lower_fn, n_devices, model_flops, hbm_budget,
+    base_plan), else the static-cost stub.
+
+    The static fallback carries no real signal for module graphs: ExecPlan
+    impl values never produce host<->device transfers in the IR transfer
+    planner, so the surrogate reduces to its more-offload tiebreak and the
+    search converges to all-offload.  That makes the fallback a fast
+    structural smoke path (graph/coding/pipeline round-trips without a
+    mesh); for decisions that matter, pass ``lower_fn`` so chromosomes are
+    scored by compiled artifacts."""
+
+    name = "module"
+
+    def build_graph(self, cfg: ArchConfig, inputs, config) -> RegionGraph:
+        return build_graph(cfg)
+
+    def make_fitness(self, graph: RegionGraph, cfg: ArchConfig, inputs,
+                     config):
+        from repro.core.block_offload import block_offload_pass
+        from repro.core.frontends.registry import (FitnessBundle,
+                                                   static_cost_fitness_factory)
+        from repro.core.pattern_db import default_db
+
+        opts = config.options
+        db = config.db or default_db()
+        block = block_offload_pass(graph, db, confirm=config.confirm)
+        base = (opts.get("base_plan") or ExecPlan()).replace(
+            **block.plan_updates)
+        exclude = block.claimed_regions
+        lower_fn = opts.get("lower_fn")
+        context = {"base_plan": base}
+
+        if lower_fn is None:
+            return FitnessBundle(
+                fitness_factory=static_cost_fitness_factory(graph),
+                block=block, claimed=exclude,
+                cache_extra=f"arch={cfg.arch_id}|staticcost",
+                measured=False, context=context)
+
+        n_devices = int(opts.get("n_devices", 1))
+        model_flops = float(opts.get("model_flops", 0.0))
+        hbm_budget = float(opts.get("hbm_budget", 16e9))
+
+        def fitness_factory(coding):
+            from repro.core.fitness import CostModelFitness
+            return CostModelFitness(
+                lower=lambda values: lower_fn(
+                    plan_from_coding(graph, coding, values, base)),
+                n_devices=n_devices, model_flops=model_flops,
+                hbm_budget=hbm_budget)
+
+        # compiled step-time estimates are machine-portable — key the
+        # persistent cache by architecture + mesh + scale
+        cache_extra = (f"arch={cfg.arch_id}|dev={n_devices}"
+                       f"|flops={model_flops:.3g}|hbm={hbm_budget:.3g}"
+                       f"|base={base}|costmodel")
+        return FitnessBundle(
+            fitness_factory=fitness_factory, block=block, claimed=exclude,
+            cache_extra=cache_extra, measured=True, context=context)
+
+    def apply_plan(self, graph: RegionGraph, coding, values, bundle
+                   ) -> ExecPlan:
+        return plan_from_coding(graph, coding, values,
+                                bundle.context["base_plan"])

@@ -43,6 +43,19 @@ class GAConfig:
     workers: int = 0                  # 0/1 serial; N>1 thread pool (compile-
                                       # bound fitness only — keep wall-clock
                                       # fitness serial for timing fidelity)
+    pool: Optional[str] = None        # registered fitness-factory name: run
+                                      # measurements in an evaluator.
+                                      # ProcessPool of `workers` spawn
+                                      # processes built from that factory
+                                      # (XLA serializes LLVM compiles
+                                      # in-process, so compile-bound fitness
+                                      # only scales across processes).  Takes
+                                      # effect via ga_search /
+                                      # loop_offload_pass, whose caller owns
+                                      # keeping the factory's fitness in sync
+                                      # with the searched coding; bare run_ga
+                                      # and Offloader.plan (which composes a
+                                      # fitness workers can't rebuild) raise
     screen_top_k: Optional[int] = None  # surrogate pre-screen: measure at
                                         # most k new offspring per generation.
                                         # Needs a surrogate ranking fn, so it
@@ -82,6 +95,11 @@ class GAResult:
     duplicates_avoided: int = 0       # dup children re-mutated to fresh ones
     wall_s: float = 0.0               # total search wall-clock
     eval_wall_s: float = 0.0          # wall-clock inside measurement batches
+    surrogate_rank_corr: float = float("nan")  # Spearman corr of the
+                                      # surrogate's ranking vs measured
+                                      # fitness (nan when no surrogate or
+                                      # too few finite measurements) — the
+                                      # number that justifies screen_top_k
 
     @property
     def speedup_vs_baseline(self) -> float:
@@ -100,8 +118,15 @@ FitnessFn = Callable[[tuple], Evaluation]
 
 def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
            log: Optional[Callable[[str], None]] = None,
-           evaluator=None) -> GAResult:
-    """Search binary chromosomes of `length`; returns the fastest valid one.
+           evaluator=None, arity: int = 2,
+           seeds: Sequence[Sequence[int]] = ()) -> GAResult:
+    """Search chromosomes of `length`; returns the fastest valid one.
+
+    Genes range over ``{0 .. arity-1}`` (2 = the paper's binary CPU/GPU
+    encoding; larger alphabets come from multi-destination gene codings —
+    see :mod:`repro.core.genes`).  ``seeds`` are extra chromosomes injected
+    into the initial population after the always-seeded all-off / all-on
+    patterns — the pattern-DB and similarity-neighbor warm starts.
 
     ``evaluator`` is an optional pre-built :class:`repro.core.evaluator.
     Evaluator` (callers that want a persistent cache keyed to a program
@@ -113,6 +138,7 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
     """
     from repro.core.evaluator import Evaluator  # deferred: avoids import cycle
 
+    assert arity >= 2, arity
     t_start = time.perf_counter()
     rng = np.random.default_rng(cfg.seed)
     owns_evaluator = evaluator is None
@@ -125,11 +151,18 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
                 "GAConfig.cache_dir requires a program fingerprint; call "
                 "loop_offload_pass (which keys the cache by the region "
                 "graph) or pass a pre-built Evaluator")
+        if cfg.pool is not None:
+            raise ValueError(
+                "GAConfig.pool requires a fitness-factory ProcessPool; call "
+                "loop_offload_pass / Offloader.plan (which own the pool "
+                "lifecycle) or pass a pre-built Evaluator")
         evaluator = Evaluator(fitness_fn, workers=cfg.workers,
                               screen_top_k=cfg.screen_top_k)
 
     def finish(best, history, baseline) -> GAResult:
         st = evaluator.stats
+        corr = getattr(evaluator, "surrogate_rank_correlation",
+                       lambda: float("nan"))()
         if owns_evaluator:
             evaluator.close()
         return GAResult(
@@ -139,17 +172,32 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
             screened_out=st.screened_out,
             duplicates_avoided=dup_avoided,
             wall_s=time.perf_counter() - t_start,
-            eval_wall_s=st.eval_wall_s)
+            eval_wall_s=st.eval_wall_s,
+            surrogate_rank_corr=corr)
 
     dup_avoided = 0
     if length == 0:
         ev = evaluator.evaluate(())
         return finish(ev, [], ev)
 
-    # --- population init: random + seeded all-off / all-on -----------------
+    def _remutate(chromo: list, pos: int) -> None:
+        """Reassign one gene: bit flip for binary, random *other* value else
+        (binary keeps the historical rng stream byte-identical)."""
+        if arity == 2:
+            chromo[pos] ^= 1
+        else:
+            chromo[pos] = int((chromo[pos] + 1 + rng.integers(0, arity - 1))
+                              % arity)
+
+    # --- population init: all-off / all-on, warm-start seeds, random -------
     pop: list[tuple] = [tuple([0] * length), tuple([1] * length)]
+    for s in seeds:
+        s = tuple(int(v) for v in s)
+        if len(s) == length and all(0 <= v < arity for v in s) \
+                and s not in pop:
+            pop.append(s)
     while len(pop) < cfg.population:
-        pop.append(tuple(int(b) for b in rng.integers(0, 2, length)))
+        pop.append(tuple(int(b) for b in rng.integers(0, arity, length)))
     pop = pop[: cfg.population]
 
     baseline = evaluator.evaluate(tuple([0] * length))
@@ -197,9 +245,9 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
             if rng.random() < cfg.crossover_rate and length > 1:
                 cut = int(rng.integers(1, length))
                 a = a[:cut] + b[cut:]
-            for t in range(length):                       # bit-flip mutation
+            for t in range(length):                       # gene mutation
                 if rng.random() < cfg.mutation_rate:
-                    a[t] = 1 - a[t]
+                    _remutate(a, t)
             # duplicate-avoiding offspring (arXiv:2002.12115): a child whose
             # pattern is already measured (or already in this generation)
             # wastes its measurement slot — re-mutate it a bounded number of
@@ -208,7 +256,7 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
             while (retries < cfg.dup_retries
                    and (tuple(a) in proposed
                         or evaluator.is_measured(tuple(a)))):
-                a[int(rng.integers(0, length))] ^= 1
+                _remutate(a, int(rng.integers(0, length)))
                 retries += 1
             child = tuple(a)
             if retries and child not in proposed \

@@ -1,9 +1,22 @@
-"""Gene encoding of offload patterns (paper §3.2.1).
+"""Gene encoding of offload patterns (paper §3.2.1), generalized to a
+multi-destination alphabet (arXiv:2011.12431 direction).
 
-A chromosome is a binary string, one bit per offloadable region: ``1`` = run
-the region on the accelerator (its offloaded alternative), ``0`` = keep the
-reference path.  The encoding is language/frontend-independent; frontends
-only contribute the ordered site list.
+The paper's chromosome is a binary string, one gene per offloadable region:
+``1`` = run the region on the accelerator, ``0`` = keep the reference path.
+This module keeps that encoding as the default while letting a gene range
+over a *destination alphabet* — an ordered tuple of :class:`Destination`
+names such as ``("cpu", "gpu", "fpga_stub")``.  Gene value ``k`` assigns the
+region to alphabet entry ``k``; value 0 is always the reference (CPU) path
+and value 1 the primary accelerator, so binary chromosomes keep their exact
+historical meaning.
+
+Destinations are pluggable via :func:`register_destination`.  A destination
+may be *cost-only* (``executable=False``): regions assigned to it execute
+their reference implementation for correctness, and a deterministic modeled
+cost (:func:`modeled_cost_s`) is charged on top of the measurement — so the
+enlarged search space is real (the GA weighs it) before the hardware exists.
+The encoding stays language/frontend-independent; frontends only contribute
+the ordered site list.
 """
 from __future__ import annotations
 
@@ -15,6 +28,70 @@ import numpy as np
 
 from repro.core.ir import Region, RegionGraph
 
+# ---------------------------------------------------------------------------
+# destination alphabet
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Destination:
+    """One place a region can run.
+
+    ``executable`` destinations map to a real implementation of the site
+    (``impl_index`` selects it: 0 = reference, 1 = offloaded alternative).
+    Cost-only destinations (``executable=False``) execute the reference
+    implementation and charge a modeled time instead — a stand-in device
+    whose cost model keeps the search space honest before hardware exists.
+    """
+
+    name: str
+    executable: bool = True
+    impl_index: int = 0
+    # cost model for cost-only destinations (seconds):
+    launch_overhead_s: float = 0.0     # fixed per-region dispatch/transfer cost
+    per_trip_s: float = 0.0            # modeled cost per (static) loop trip
+
+
+CPU = Destination("cpu", executable=True, impl_index=0)
+GPU = Destination("gpu", executable=True, impl_index=1)
+#: FPGA stub: no backend yet — reference execution plus a modeled cost of a
+#: PCIe-attached reconfigurable card (fixed DMA/launch latency, cheap trips).
+FPGA_STUB = Destination("fpga_stub", executable=False, impl_index=0,
+                        launch_overhead_s=2e-4, per_trip_s=5e-8)
+
+_DESTINATIONS: dict[str, Destination] = {
+    d.name: d for d in (CPU, GPU, FPGA_STUB)
+}
+
+#: the paper's original binary CPU/GPU alphabet — the default everywhere.
+DEFAULT_ALPHABET: tuple[str, ...] = ("cpu", "gpu")
+#: the extended mixed-destination alphabet from the ROADMAP.
+EXTENDED_ALPHABET: tuple[str, ...] = ("cpu", "gpu", "fpga_stub")
+
+
+def register_destination(dest: Destination, replace: bool = False) -> None:
+    """Add a destination to the alphabet registry (pluggable devices)."""
+    if dest.name in _DESTINATIONS and not replace:
+        raise ValueError(f"destination {dest.name!r} already registered")
+    _DESTINATIONS[dest.name] = dest
+
+
+def get_destination(name: str) -> Destination:
+    try:
+        return _DESTINATIONS[name]
+    except KeyError:
+        raise KeyError(f"unknown destination {name!r}; registered: "
+                       f"{sorted(_DESTINATIONS)}") from None
+
+
+def destination_names() -> tuple[str, ...]:
+    return tuple(sorted(_DESTINATIONS))
+
+
+# ---------------------------------------------------------------------------
+# gene coding
+# ---------------------------------------------------------------------------
+
 
 @dataclass(frozen=True)
 class Site:
@@ -24,22 +101,47 @@ class Site:
     ref_impl: Any
     offload_impl: Any
 
+    @property
+    def impls(self) -> tuple:
+        """Implementation by index — what ``Destination.impl_index`` selects."""
+        return (self.ref_impl, self.offload_impl)
+
 
 @dataclass(frozen=True)
 class GeneCoding:
     sites: tuple[Site, ...]
+    destinations: tuple[str, ...] = DEFAULT_ALPHABET
 
     @property
     def length(self) -> int:
         return len(self.sites)
 
-    def decode(self, bits: Sequence[int]) -> dict[str, Any]:
-        """bits -> {region name: chosen implementation}."""
-        assert len(bits) == self.length, (len(bits), self.length)
-        return {
-            s.region: (s.offload_impl if b else s.ref_impl)
-            for s, b in zip(self.sites, bits)
-        }
+    @property
+    def arity(self) -> int:
+        """Alphabet size: how many values each gene ranges over."""
+        return len(self.destinations)
+
+    def decode(self, values: Sequence[int]) -> dict[str, Any]:
+        """values -> {region name: chosen implementation}.
+
+        A cost-only destination decodes to the site implementation its
+        ``impl_index`` names (the reference path for the shipped stubs), so
+        executors run correct code; the modeled cost is charged separately
+        (:func:`modeled_cost_s`).
+        """
+        assert len(values) == self.length, (len(values), self.length)
+        out: dict[str, Any] = {}
+        for s, v in zip(self.sites, values):
+            dest = get_destination(self.destinations[int(v)])
+            impls = s.impls
+            out[s.region] = impls[min(dest.impl_index, len(impls) - 1)]
+        return out
+
+    def destinations_of(self, values: Sequence[int]) -> dict[str, str]:
+        """values -> {region name: destination name}."""
+        assert len(values) == self.length, (len(values), self.length)
+        return {s.region: self.destinations[int(v)]
+                for s, v in zip(self.sites, values)}
 
     def all_off(self) -> tuple[int, ...]:
         return (0,) * self.length
@@ -49,11 +151,15 @@ class GeneCoding:
 
 
 def coding_from_graph(graph: RegionGraph,
-                      exclude: Sequence[str] = ()) -> GeneCoding:
+                      exclude: Sequence[str] = (),
+                      destinations: Sequence[str] = DEFAULT_ALPHABET
+                      ) -> GeneCoding:
     """Build the gene coding from a region graph's offloadable regions,
     excluding regions already claimed by the function-block pass (paper
     §4.2: ループ文オフロードはオフロード可能だった機能ブロック部分を抜いた
     コードに対して試行)."""
+    for d in destinations:
+        get_destination(d)           # fail fast on unknown alphabet entries
     sites = []
     for r in graph.offloadable():
         if r.name in exclude:
@@ -61,4 +167,39 @@ def coding_from_graph(graph: RegionGraph,
         ref = r.alternatives[0] if r.alternatives else "ref"
         off = r.alternatives[1] if len(r.alternatives) > 1 else "offload"
         sites.append(Site(r.name, ref, off))
-    return GeneCoding(tuple(sites))
+    return GeneCoding(tuple(sites), tuple(destinations))
+
+
+# ---------------------------------------------------------------------------
+# cost model for cost-only destinations
+# ---------------------------------------------------------------------------
+
+
+def _trip_product(graph: RegionGraph, region: Region) -> int:
+    """Static dynamic-trip estimate: own trip count times enclosing loops'."""
+    trips = region.trip_count or 1 if region.kind == "loop" else 1
+    r = region
+    while r.parent is not None:
+        r = graph.by_name(r.parent)
+        if r.kind == "loop":
+            trips *= r.trip_count or 1
+    return trips
+
+
+def modeled_cost_s(graph: RegionGraph, coding: GeneCoding,
+                   values: Sequence[int]) -> float:
+    """Deterministic modeled time for genes on cost-only destinations.
+
+    Charged on top of the measured time of the chromosome (whose cost-only
+    regions executed their reference path), so patterns that park work on a
+    stub device pay that device's modeled latency in the fitness.
+    """
+    total = 0.0
+    for site, v in zip(coding.sites, values):
+        dest = get_destination(coding.destinations[int(v)])
+        if dest.executable:
+            continue
+        region = graph.by_name(site.region)
+        total += (dest.launch_overhead_s
+                  + _trip_product(graph, region) * dest.per_trip_s)
+    return total

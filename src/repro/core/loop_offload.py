@@ -1,22 +1,21 @@
-"""Loop-statement offload pass (paper §3.2.1 / §4.2.2): GA over the loops the
-function-block pass did not claim.
+"""Loop-statement offload pass (paper §3.2.1 / §4.2.2) — now a thin shim.
 
-This pass is where the GA meets the evaluation engine
-(:mod:`repro.core.evaluator`): it derives the gene coding from the region
-graph, builds an :class:`~repro.core.evaluator.Evaluator` keyed by the
-graph's content fingerprint (so the persistent measurement cache survives
-process restarts and is shared between benchmark runs of the same program),
-optionally attaches the static transfer-cost surrogate for offspring
-pre-screening, and hands both to :func:`repro.core.ga.run_ga`.
+The GA-over-unclaimed-regions search lives in the unified pipeline
+(:func:`repro.core.offload.ga_search`): gene coding from the region graph,
+an :class:`~repro.core.evaluator.Evaluator` keyed by the graph's content
+fingerprint (persistent measurement cache), the static transfer-cost
+surrogate (always attached, so every search reports surrogate rank
+correlation), optional pre-screening and process-pool dispatch.  This module
+keeps the historical entry point and result type.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
-from repro.core.evaluator import Evaluator, transfer_cost_surrogate
-from repro.core.ga import GAConfig, GAResult, run_ga
-from repro.core.genes import GeneCoding, coding_from_graph
+from repro.core.evaluator import Evaluator
+from repro.core.ga import GAConfig, GAResult
+from repro.core.genes import GeneCoding
 from repro.core.ir import RegionGraph
 
 
@@ -36,30 +35,18 @@ def loop_offload_pass(graph: RegionGraph,
                       exclude: Sequence[str] = (),
                       log: Optional[Callable[[str], None]] = None,
                       cache_extra: str = "",
-                      evaluator: Optional[Evaluator] = None) -> LoopOffloadResult:
+                      evaluator: Optional[Evaluator] = None,
+                      seeds: Sequence[Sequence[int]] = ()
+                      ) -> LoopOffloadResult:
     """Run the GA over the unclaimed offloadable regions.
 
     ``cache_extra`` folds measurement-relevant context the graph cannot see
     (input shapes, device count) into the persistent-cache fingerprint.
     A pre-built ``evaluator`` overrides the GAConfig-derived one.
     """
-    cfg = ga_cfg or GAConfig()
-    coding = coding_from_graph(graph, exclude=exclude)
-    if evaluator is None:
-        surrogate = None
-        if cfg.screen_top_k is not None:
-            surrogate = transfer_cost_surrogate(graph, coding)
-        evaluator = Evaluator(
-            fitness_fn, workers=cfg.workers, cache_dir=cfg.cache_dir,
-            fingerprint=graph.fingerprint(
-                f"{cache_extra}|exclude={sorted(exclude)}"),
-            surrogate=surrogate, screen_top_k=cfg.screen_top_k)
-        try:
-            ga = run_ga(coding.length, fitness_fn, cfg, log=log,
-                        evaluator=evaluator)
-        finally:
-            evaluator.close()
-    else:
-        ga = run_ga(coding.length, fitness_fn, cfg, log=log,
-                    evaluator=evaluator)
+    from repro.core.offload import ga_search  # deferred: keeps the shim light
+
+    coding, ga = ga_search(graph, fitness_fn, ga_cfg, exclude=exclude,
+                           log=log, cache_extra=cache_extra,
+                           evaluator=evaluator, seeds=seeds)
     return LoopOffloadResult(coding, ga)

@@ -1,0 +1,364 @@
+"""The unified offload pipeline: one entry point for every frontend.
+
+The paper's claim is a *common* automatic offloading method across source
+languages (§3.3): parse each language into the common loop/structure
+representation, then run one GA-based search over it.  This module is that
+method as an API: :meth:`Offloader.plan` takes any target — Python source, a
+parsed :class:`PyProgram`, a jax-traceable callable, an :class:`ArchConfig`,
+or a bare :class:`RegionGraph` — resolves the registered frontend for it,
+and drives the same pipeline for all of them:
+
+  normalize -> build RegionGraph -> function-block pass (pattern DB)
+     -> gene coding over a destination alphabet (CPU/GPU/FPGA-stub, §genes)
+     -> seed the GA population (pattern-DB hits + similarity neighbors)
+     -> evaluate through the batching engine (cache, dedup, screening,
+        workers / process pool)  -> verify  -> one unified OffloadResult.
+
+``plan_python_offload`` / ``plan_module_offload`` (repro.core.planner) and
+``loop_offload_pass`` are thin shims over this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core import similarity as sim
+from repro.core.evaluator import (Evaluator, ProcessPool,
+                                  transfer_cost_surrogate)
+from repro.core.frontends.registry import (FitnessBundle, OffloadConfig,
+                                           decoded_pattern, detect_frontend,
+                                           get_frontend)
+from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
+from repro.core.genes import (GeneCoding, coding_from_graph, get_destination,
+                              modeled_cost_s)
+from repro.core.ir import RegionGraph
+from repro.core.transfer_planner import TransferPlan, plan_transfers
+
+__all__ = ["OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
+           "ga_search", "plan_offload"]
+
+
+# ---------------------------------------------------------------------------
+# GA search stage (shared with the legacy loop_offload_pass shim)
+# ---------------------------------------------------------------------------
+
+
+def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
+              ga_cfg: Optional[GAConfig] = None,
+              *, coding: Optional[GeneCoding] = None,
+              exclude: Sequence[str] = (),
+              log: Optional[Callable[[str], None]] = None,
+              cache_extra: str = "",
+              evaluator: Optional[Evaluator] = None,
+              seeds: Sequence[Sequence[int]] = ()
+              ) -> tuple[GeneCoding, GAResult]:
+    """Run the GA over a graph's unclaimed offloadable regions.
+
+    Owns the evaluation engine unless one is passed in: persistent cache
+    keyed by the graph's content fingerprint (plus ``cache_extra`` for
+    measurement context the graph can't see), the static transfer-cost
+    surrogate (always attached, so every search reports its surrogate rank
+    correlation; screening additionally requires ``screen_top_k``), and —
+    when ``ga_cfg.pool`` names a registered fitness factory — a spawn
+    :class:`ProcessPool` for cross-process measurement.
+    """
+    cfg = ga_cfg or GAConfig()
+    if coding is None:
+        coding = coding_from_graph(graph, exclude=exclude)
+    owns = evaluator is None
+    pool: Optional[ProcessPool] = None
+    if evaluator is None:
+        surrogate = transfer_cost_surrogate(graph, coding)
+        fingerprint = graph.fingerprint(
+            f"{cache_extra}|exclude={sorted(exclude)}"
+            f"|dest={coding.destinations}")
+        common = dict(cache_dir=cfg.cache_dir, fingerprint=fingerprint,
+                      surrogate=surrogate, screen_top_k=cfg.screen_top_k)
+        if cfg.pool is not None:
+            pool = ProcessPool(cfg.pool, workers=cfg.workers or None)
+            evaluator = Evaluator(None, **pool.evaluator_kwargs(), **common)
+        else:
+            evaluator = Evaluator(fitness_fn, workers=cfg.workers, **common)
+    try:
+        ga = run_ga(coding.length, fitness_fn, cfg, log=log,
+                    evaluator=evaluator, arity=coding.arity, seeds=seeds)
+    finally:
+        if owns:
+            evaluator.close()
+            if pool is not None:
+                pool.close()
+    return coding, ga
+
+
+# ---------------------------------------------------------------------------
+# seed bank: similarity-based warm starts across programs
+# ---------------------------------------------------------------------------
+
+
+class SeedBank:
+    """Persistent (frontend, graph-vector) -> best-pattern store.
+
+    The measurement cache only helps the *same* program; the seed bank helps
+    a *near*-identical one (ROADMAP: similarity-based reuse): after every
+    search the winning pattern is recorded with the program's Deckard-style
+    characteristic vector, and a new search seeds its GA population from the
+    best patterns of its nearest neighbors (mapped by region name, unknown
+    regions defaulting to the reference destination).
+    """
+
+    def __init__(self, cache_dir: str):
+        os.makedirs(cache_dir, exist_ok=True)
+        self.path = os.path.join(cache_dir, "seed_bank.jsonl")
+
+    def _load(self) -> list[dict]:
+        out: list[dict] = []
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        out.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        continue  # torn concurrent write; journal append-only
+        except FileNotFoundError:
+            pass
+        return out
+
+    def record(self, graph: RegionGraph, coding: GeneCoding,
+               values: Sequence[int]) -> None:
+        rec = {
+            "frontend": graph.frontend,
+            "source": graph.source_name,
+            "vector": sim.graph_vector(graph),
+            "sites": [s.region for s in coding.sites],
+            "values": [int(v) for v in values],
+            "destinations": list(coding.destinations),
+        }
+        with open(self.path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(rec) + "\n")
+
+    def neighbor_seeds(self, graph: RegionGraph, coding: GeneCoding,
+                       min_similarity: float = 0.75,
+                       limit: int = 3) -> list[tuple]:
+        vec = sim.graph_vector(graph)
+        scored: list[tuple[float, dict]] = []
+        for rec in self._load():
+            if rec.get("frontend") != graph.frontend:
+                continue
+            s = sim.similarity(vec, rec.get("vector") or {})
+            if s >= min_similarity:
+                scored.append((s, rec))
+        scored.sort(key=lambda sr: -sr[0])
+        seeds: list[tuple] = []
+        seen: set = set()
+        for _, rec in scored:
+            site_vals = dict(zip(rec.get("sites", ()), rec.get("values", ())))
+            seed = tuple(min(int(site_vals.get(s.region, 0)),
+                             coding.arity - 1)
+                         for s in coding.sites)
+            if seed not in seen:
+                seeds.append(seed)
+                seen.add(seed)
+            if len(seeds) >= limit:
+                break
+        return seeds
+
+
+def _pattern_db_seed(graph: RegionGraph, coding: GeneCoding,
+                     db) -> list[tuple]:
+    """One warm-start chromosome: every gene whose region name-matches a
+    pattern-DB record starts on the primary accelerator."""
+    values = []
+    any_hit = False
+    for site in coding.sites:
+        region = graph.by_name(site.region)
+        hit = any(m.how == "name"
+                  for m in db.match_region(region, graph.frontend))
+        values.append(1 if hit else 0)
+        any_hit |= hit
+    return [tuple(values)] if any_hit else []
+
+
+# ---------------------------------------------------------------------------
+# the unified result
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class OffloadResult:
+    """What every frontend's planning run returns."""
+
+    frontend: str
+    graph: RegionGraph
+    coding: GeneCoding
+    block: Any                        # BlockOffloadResult
+    ga: GAResult
+    pattern: dict                     # region -> implementation (incl. blocks)
+    destinations: dict                # gene region -> destination name
+    baseline: Evaluation              # the all-reference program
+    best: Evaluation
+    transfer_plan: TransferPlan
+    artifact: Any                     # frontend deliverable (impl map,
+                                      # PyOffloadArtifact, ExecPlan, ...)
+    verification: dict                # {"mode": ..., "verified": bool}
+    details: dict = field(default_factory=dict)  # frontend-private extras
+
+    @property
+    def speedup(self) -> float:
+        if not self.baseline.valid or not math.isfinite(self.best.time_s) \
+                or self.best.time_s <= 0:
+            return float("nan")
+        return self.baseline.time_s / self.best.time_s
+
+    @property
+    def savings(self) -> dict:
+        """The measurement-economy report (arXiv:2002.12115 accounting)."""
+        g = self.ga
+        return {
+            "measurements": g.evaluations,
+            "cache_hits": g.cache_hits,
+            "persistent_hits": g.persistent_hits,
+            "screened_out": g.screened_out,
+            "duplicates_avoided": g.duplicates_avoided,
+            "measurements_saved": g.measurements_saved,
+            "surrogate_rank_corr": g.surrogate_rank_corr,
+            "wall_s": g.wall_s,
+            "eval_wall_s": g.eval_wall_s,
+        }
+
+    def summary(self) -> dict:
+        return {
+            "frontend": self.frontend,
+            "gene_length": self.coding.length,
+            "destinations": self.coding.destinations,
+            "best": "".join(str(int(v)) for v in self.best.bits),
+            "speedup": self.speedup,
+            "verified": self.verification.get("verified", False),
+            **self.savings,
+        }
+
+
+# ---------------------------------------------------------------------------
+# the pipeline
+# ---------------------------------------------------------------------------
+
+
+def _with_destination_costs(graph: RegionGraph, coding: GeneCoding,
+                            fitness_fn: Callable) -> Callable:
+    """Charge cost-only destinations' modeled time on top of measurements."""
+    if all(get_destination(d).executable for d in coding.destinations):
+        return fitness_fn
+
+    def wrapped(values: tuple) -> Evaluation:
+        values = tuple(values)
+        ev = fitness_fn(values)
+        pen = modeled_cost_s(graph, coding, values)
+        if pen > 0 and math.isfinite(ev.time_s):
+            ev = Evaluation(ev.bits, ev.time_s + pen, ev.valid,
+                            {**ev.detail, "modeled_cost_s": pen})
+        return ev
+
+    return wrapped
+
+
+@dataclass
+class Offloader:
+    """The unified multi-frontend offload planner."""
+
+    config: OffloadConfig = field(default_factory=OffloadConfig)
+
+    def plan(self, target: Any, inputs: Optional[dict] = None,
+             config: Optional[OffloadConfig] = None) -> OffloadResult:
+        """Plan offloading for any supported target; see module docstring."""
+        from repro.core.pattern_db import default_db
+
+        cfg = config or self.config
+        log = cfg.log or (lambda s: None)
+        name = cfg.frontend or detect_frontend(target, cfg)
+        fe = get_frontend(name)
+        log(f"frontend: {name}")
+
+        if hasattr(fe, "normalize_target"):
+            target = fe.normalize_target(target, inputs, cfg)
+        graph = fe.build_graph(target, inputs, cfg)
+        bundle: FitnessBundle = fe.make_fitness(graph, target, inputs, cfg)
+        coding = coding_from_graph(graph, exclude=bundle.claimed,
+                                   destinations=cfg.destinations)
+        log(f"graph: {graph.summary()} gene_length={coding.length} "
+            f"alphabet={coding.destinations}")
+
+        fitness = cfg.fitness_fn or bundle.fitness_factory(coding)
+        fitness = _with_destination_costs(graph, coding, fitness)
+
+        ga_cfg = cfg.ga
+        if bundle.serial_only and (ga_cfg.workers > 1
+                                   or ga_cfg.pool is not None):
+            # wall-clock measurements interleave on shared hardware —
+            # parallel timing is meaningless
+            log("wall-clock fitness: forcing serial evaluation (workers=0)")
+            ga_cfg = dataclasses.replace(ga_cfg, workers=0, pool=None)
+        if ga_cfg.pool is not None:
+            # pool workers rebuild their fitness from the registered factory
+            # and cannot see the fitness this pipeline just composed (block
+            # claims folded into base_impl, gene exclusions, destination
+            # costs, cfg.fitness_fn) — measuring one function while planning
+            # another would silently corrupt the result
+            raise ValueError(
+                "GAConfig.pool cannot be used through Offloader.plan: the "
+                "factory-built worker fitness cannot match the pipeline-"
+                "composed fitness. Drive ga_search/loop_offload_pass "
+                "directly with a factory that reproduces your fitness, or "
+                "use thread workers (GAConfig.workers) here")
+
+        # --- GA population warm starts ---------------------------------
+        seeds: list[tuple] = []
+        if cfg.seed_from_db and coding.length:
+            seeds += _pattern_db_seed(graph, coding, cfg.db or default_db())
+        bank: Optional[SeedBank] = None
+        if cfg.seed_from_neighbors and ga_cfg.cache_dir:
+            bank = SeedBank(ga_cfg.cache_dir)
+            if coding.length:
+                neigh = bank.neighbor_seeds(graph, coding)
+                if neigh:
+                    log(f"seed bank: {len(neigh)} neighbor seed(s)")
+                seeds += neigh
+
+        coding, ga = ga_search(
+            graph, fitness, ga_cfg, coding=coding, exclude=bundle.claimed,
+            log=log, cache_extra=bundle.cache_extra, seeds=seeds)
+
+        best = ga.best
+        pattern = decoded_pattern(coding, best.bits, bundle.base_impl)
+        artifact = fe.apply_plan(graph, coding, tuple(best.bits), bundle)
+        tp = plan_transfers(graph, pattern, hoist=cfg.hoist_transfers)
+        if bank is not None and coding.length:
+            bank.record(graph, coding, best.bits)
+
+        baseline = bundle.context.get("baseline") or ga.baseline or best
+        verification = {
+            "mode": "measured" if bundle.measured else "static-cost",
+            "verified": bool(best.valid) and bundle.measured,
+        }
+        return OffloadResult(
+            frontend=name, graph=graph, coding=coding, block=bundle.block,
+            ga=ga, pattern=pattern,
+            destinations=coding.destinations_of(best.bits),
+            baseline=baseline, best=best, transfer_plan=tp,
+            artifact=artifact, verification=verification,
+            details=dict(bundle.context))
+
+
+def plan_offload(target: Any, inputs: Optional[dict] = None,
+                 config: Optional[OffloadConfig] = None,
+                 **config_kwargs) -> OffloadResult:
+    """Convenience wrapper: ``plan_offload(src, inputs, ga=GAConfig(...))``."""
+    if config is not None and config_kwargs:
+        raise ValueError("pass either config= or keyword fields, not both")
+    cfg = config or OffloadConfig(**config_kwargs)
+    return Offloader(cfg).plan(target, inputs)

@@ -1,92 +1,37 @@
-"""End-to-end offload planner (paper §4.2 実装動作).
+"""Legacy planner entry points — thin deprecation shims (paper §4.2 実装動作).
 
-Order is the paper's: *function-block offload first* (algorithm-level
-replacement beats loop-level parallelization), each matched block measured
-on/off (and combinations when several match), then *loop offload by GA* over
-the remaining regions; the best-measured pattern is the final solution.
+The real pipeline is :class:`repro.core.offload.Offloader`: one
+``plan(target, inputs, config)`` for every frontend, with the paper's order
+preserved inside it (*function-block offload first*, then *loop offload by
+GA* over the remaining regions, best measured pattern wins).
 
-Two entry points:
-  * :func:`plan_python_offload` — the ast frontend, real wall-clock fitness.
-  * :func:`plan_module_offload` — the module frontend, cost-model fitness at
-    production scale (the caller provides the ``lower_fn`` built by the
-    runtime: plan -> jax.stages.Lowered).
-
-Measurement scheduling goes through the evaluation engine
-(:mod:`repro.core.evaluator`): both entry points key a persistent
-measurement cache by (graph fingerprint, measurement context) via
-``GAConfig.cache_dir``, so re-planning the same program never re-measures a
-known pattern.  The wall-clock path pins serial evaluation (timings on
-shared hardware don't interleave); the cost-model path may parallelize
-compile-bound measurements with ``GAConfig.workers`` or an external process
-pool (see ``benchmarks/bench_ga_offload.py``).
+These wrappers keep the original call signatures and result types
+(:class:`PythonPlanResult`, :class:`ModulePlanResult`) for existing callers
+and examples; new code should use ``Offloader.plan`` / ``plan_offload`` and
+get the unified :class:`~repro.core.offload.OffloadResult` instead.
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import itertools
-import os
-import platform
-import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import similarity as sim
-from repro.core.block_offload import BlockOffloadResult, block_offload_pass
-from repro.core.fitness import CostModelFitness, WallClockFitness
-from repro.core.frontends import module_frontend
-from repro.core.frontends.ast_frontend import Executor, PyProgram
+from repro.core.block_offload import BlockOffloadResult
+from repro.core.frontends.ast_frontend import PyProgram
+from repro.core.frontends.registry import OffloadConfig
 from repro.core.ga import Evaluation, GAConfig
-from repro.core.genes import coding_from_graph
-from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
-from repro.core.pattern_db import PatternDB, default_db
-from repro.core.transfer_planner import TransferPlan, plan_transfers
+from repro.core.loop_offload import LoopOffloadResult
+from repro.core.offload import Offloader
+from repro.core.pattern_db import PatternDB
+from repro.core.transfer_planner import TransferPlan
 from repro.models.plan import ExecPlan
 
-# ---------------------------------------------------------------------------
-# library-call adapters for the ast frontend ("CUDA library" substitution)
-# ---------------------------------------------------------------------------
 
-
-def _order_by_appearance(names, source: str) -> list:
-    return sorted(names, key=lambda v: source.find(v) if v in source else 1 << 30)
-
-
-def _adapt_matmul(region, env, source):
-    arrays_in = [v for v in region.uses - region.defs
-                 if isinstance(env.get(v), np.ndarray) and env[v].ndim == 2]
-    outs = [v for v in region.defs
-            if isinstance(env.get(v), np.ndarray) and env[v].ndim == 2]
-    arrays_in = _order_by_appearance(arrays_in, source)
-    if len(arrays_in) != 2 or len(outs) != 1:
-        raise ValueError("matmul adapter needs exactly (a, b) -> c")
-    return (lambda a, b: jnp.matmul(a, b)), arrays_in, outs
-
-
-def _adapt_fft(region, env, source):
-    ins = _order_by_appearance(
-        [v for v in region.uses - region.defs
-         if isinstance(env.get(v), np.ndarray)], source)
-    outs = _order_by_appearance(
-        [v for v in region.defs if isinstance(env.get(v), np.ndarray)], source)
-    if len(ins) == 2 and len(outs) == 2:    # (re, im) -> (re, im): adapt complex
-        def fft2ri(re, im):
-            z = jnp.fft.fft(re + 1j * im)
-            return jnp.real(z), jnp.imag(z)
-        return fft2ri, ins, outs
-    if len(ins) == 1 and len(outs) == 1:
-        return (lambda x: jnp.abs(jnp.fft.fft(x))), ins, outs
-    raise ValueError("fft adapter: unsupported interface")
-
-
-_AST_ADAPTERS: dict[str, Callable] = {
-    "matmul": _adapt_matmul,
-    "fft": _adapt_fft,
-}
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use repro.core.offload.Offloader.plan "
+        f"(one entry point for every frontend, unified OffloadResult)",
+        DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -119,126 +64,22 @@ def plan_python_offload(program: PyProgram, inputs: dict,
                         repeats: int = 3,
                         log: Optional[Callable[[str], None]] = None,
                         hoist_transfers: bool = True) -> PythonPlanResult:
-    db = db or default_db()
-    log = log or (lambda s: None)
-
-    # --- calibration: interpret once; snapshots + reference outputs ---------
-    snaps: dict[str, dict] = {}
-    ex0 = Executor(program, {}, hoist_transfers=False)
-    ex0.pre_loop_hook = lambda name, env: snaps.setdefault(name, dict(env))
-    env0 = ex0.run(**inputs)
-    out_names = program.output_names or sorted(
-        v for v in env0 if isinstance(env0[v], (np.ndarray,)))
-    reference = {n: np.asarray(env0[n]) for n in out_names}
-    program.check_offloadable(inputs)
-
-    def runner(impl: dict, lib_calls: dict) -> Callable[[], dict]:
-        def run():
-            ex = Executor(program, impl, hoist_transfers=hoist_transfers,
-                          lib_calls=lib_calls)
-            env = ex.run(**inputs)
-            return {n: np.asarray(env[n]) for n in out_names}
-        return run
-
-    # one fitness instance for the whole planning run (it was re-built per
-    # chromosome, re-capturing the reference tree each measurement); `build`
-    # reads the measurement spec staged by `timed` / the GA fitness below
-    _spec: dict = {"impl": {}, "lib": {}}
-    wall_fit = WallClockFitness(
-        build=lambda bits: runner(_spec["impl"], _spec["lib"]),
-        reference_output=reference, repeats=repeats)
-
-    def timed(impl: dict, lib_calls: dict) -> Evaluation:
-        _spec["impl"], _spec["lib"] = impl, lib_calls
-        return wall_fit(())
-
-    baseline = timed({}, {})
-    log(f"baseline (all-interpreted): {baseline.time_s:.4f}s")
-
-    # --- Step A: function-block offload (first, per paper §4.2) -------------
-    block = block_offload_pass(graph=program.graph, db=db, confirm=confirm)
-    candidates = {}
-    for bo in block.offloads:
-        adapter = _AST_ADAPTERS.get(bo.pattern)
-        if adapter is None:
-            continue
-        envs = snaps.get(bo.region)
-        if envs is None:
-            continue
-        try:
-            candidates[bo.region] = adapter(
-                program.graph.by_name(bo.region), envs, program.source)
-        except ValueError as e:
-            log(f"block {bo.region} ({bo.pattern}): adapter failed: {e}")
-
-    # measure each block and combinations (paper §4.2.1)
-    best_lib: dict = {}
-    best_time = baseline.time_s
-    keys = list(candidates)
-    combos = itertools.chain.from_iterable(
-        itertools.combinations(keys, r) for r in range(1, len(keys) + 1)) \
-        if len(keys) <= 3 else [tuple(keys)] + [(k,) for k in keys]
-    for combo in combos:
-        lib = {k: candidates[k] for k in combo}
-        impl = {k: "lib" for k in combo}
-        ev = timed(impl, lib)
-        log(f"block combo {combo}: {ev.time_s:.4f}s valid={ev.valid}")
-        if ev.valid and ev.time_s < best_time:
-            best_time, best_lib = ev.time_s, lib
-    block_impl = {k: "lib" for k in best_lib}
-    block_time = best_time
-
-    # --- Step B: GA loop offload over the remaining loops -------------------
-    claimed = set(best_lib)
-    for r in program.graph.regions:      # descendants of claimed blocks too
-        p_ = r.parent
-        while p_ is not None:
-            if p_ in claimed:
-                claimed.add(r.name)
-                break
-            p_ = program.graph.by_name(p_).parent
-    claimed = tuple(sorted(claimed))
-    coding = coding_from_graph(program.graph, exclude=claimed)
-
-    def fitness(bits: tuple) -> Evaluation:
-        impl = dict(block_impl)
-        impl.update(coding.decode(bits))
-        _spec["impl"], _spec["lib"] = impl, best_lib
-        return wall_fit(bits)
-
-    # persistent-cache key context: wall-clock measurements are only
-    # comparable for the same source, constants, input shapes AND the same
-    # machine — unlike cost-model estimates, timings are not portable, so a
-    # shared cache_dir must not serve one host's timings to another
-    shapes = {k: getattr(v, "shape", ()) for k, v in sorted(inputs.items())}
-    block_patterns = sorted((bo.region, bo.pattern) for bo in block.offloads
-                            if bo.region in best_lib)
-    cache_extra = (f"src={hashlib.sha256(program.source.encode()).hexdigest()[:12]}"
-                   f"|consts={sorted(program.consts.items())}"
-                   f"|shapes={sorted(shapes.items())}"
-                   f"|block={block_patterns}"
-                   f"|hoist={hoist_transfers}|repeats={repeats}"
-                   f"|host={platform.node()}|ncpu={os.cpu_count()}"
-                   f"|dev={jax.default_backend()}|wallclock")
-    cfg_ga = ga_cfg or GAConfig()
-    if cfg_ga.workers > 1:
-        # wall-clock measurements interleave on shared hardware — parallel
-        # timing is meaningless; only compile-bound fitness may parallelize
-        log("wall-clock fitness: forcing serial evaluation (workers=0)")
-        cfg_ga = dataclasses.replace(cfg_ga, workers=0)
-    loops = loop_offload_pass(program.graph, fitness, cfg_ga,
-                              exclude=claimed, log=log,
-                              cache_extra=cache_extra)
-
-    final_impl = dict(block_impl)
-    final_impl.update(coding.decode(loops.ga.best.bits))
-    tp = plan_transfers(program.graph, final_impl, hoist=hoist_transfers)
+    """Deprecated shim over ``Offloader.plan`` (ast frontend, wall clock)."""
+    _deprecated("plan_python_offload")
+    cfg = OffloadConfig(
+        frontend="python_ast", ga=ga_cfg or GAConfig(), db=db,
+        confirm=confirm, repeats=repeats, hoist_transfers=hoist_transfers,
+        log=log)
+    res = Offloader(cfg).plan(program, inputs)
+    block_time = res.details.get("block_time_s", res.baseline.time_s)
     return PythonPlanResult(
-        program=program, block=block, loops=loops, impl=final_impl,
-        lib_calls=best_lib, transfer_plan=tp,
-        baseline_time_s=baseline.time_s, block_time_s=block_time,
-        final_time_s=min(loops.ga.best.time_s, block_time),
-        ga_history=loops.ga.history)
+        program=res.details["program"], block=res.block,
+        loops=LoopOffloadResult(res.coding, res.ga),
+        impl=res.pattern, lib_calls=res.details["lib_calls"],
+        transfer_plan=res.transfer_plan,
+        baseline_time_s=res.baseline.time_s, block_time_s=block_time,
+        final_time_s=min(res.ga.best.time_s, block_time),
+        ga_history=res.ga.history)
 
 
 # ---------------------------------------------------------------------------
@@ -263,33 +104,19 @@ def plan_module_offload(cfg, lower_fn: Callable[[ExecPlan], Any],
                         db: Optional[PatternDB] = None,
                         base_plan: Optional[ExecPlan] = None,
                         hbm_budget: float = 16e9,
-                        log: Optional[Callable[[str], None]] = None) -> ModulePlanResult:
-    """Offload planning for an assigned architecture at production scale.
-
-    The verification environment is the AOT compiler: each chromosome lowers
-    and compiles on the production mesh, the roofline step time is its
-    measured fitness, per-device HBM overflow disqualifies (time = ∞).
-    """
-    db = db or default_db()
-    graph = module_frontend.build_graph(cfg)
-    block = block_offload_pass(graph, db)
-    base = (base_plan or ExecPlan()).replace(**block.plan_updates)
-    exclude = block.claimed_regions
-
-    fitness = CostModelFitness(
-        lower=lambda bits: lower_fn(
-            module_frontend.plan_from_bits(graph, bits, base, exclude)),
-        n_devices=n_devices, model_flops=model_flops, hbm_budget=hbm_budget)
-
-    # compile-bound fitness parallelizes safely (XLA releases the GIL), and
-    # compiled step-time estimates are machine-portable — key the persistent
-    # cache by architecture + mesh + scale
-    cache_extra = (f"arch={cfg.arch_id}|dev={n_devices}"
-                   f"|flops={model_flops:.3g}|hbm={hbm_budget:.3g}"
-                   f"|base={base}|costmodel")
-    loops = loop_offload_pass(graph, fitness, ga_cfg or GAConfig(), exclude,
-                              log=log, cache_extra=cache_extra)
-    final = module_frontend.plan_from_bits(graph, loops.ga.best.bits, base, exclude)
+                        log: Optional[Callable[[str], None]] = None
+                        ) -> ModulePlanResult:
+    """Deprecated shim over ``Offloader.plan`` (module frontend, AOT cost
+    model at production scale)."""
+    _deprecated("plan_module_offload")
+    ocfg = OffloadConfig(
+        frontend="module", ga=ga_cfg or GAConfig(), db=db, log=log,
+        options={"lower_fn": lower_fn, "n_devices": n_devices,
+                 "model_flops": model_flops, "hbm_budget": hbm_budget,
+                 "base_plan": base_plan})
+    res = Offloader(ocfg).plan(cfg)
     return ModulePlanResult(
-        graph=graph, block=block, loops=loops, base_plan=base,
-        final_plan=final, baseline=loops.ga.baseline, best=loops.ga.best)
+        graph=res.graph, block=res.block,
+        loops=LoopOffloadResult(res.coding, res.ga),
+        base_plan=res.details["base_plan"], final_plan=res.artifact,
+        baseline=res.ga.baseline, best=res.best)

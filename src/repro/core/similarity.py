@@ -125,3 +125,18 @@ def similarity(a: dict[str, int], b: dict[str, int]) -> float:
     """Cosine over characteristic vectors (Deckard uses euclidean LSH; cosine
     is scale-invariant which suits loop-trip-count differences)."""
     return cosine(a, b)
+
+
+def graph_vector(graph) -> dict[str, int]:
+    """Whole-program characteristic vector of a RegionGraph: the sum of the
+    regions' vectors plus weighted callee names — what the offload seed bank
+    compares to find *near*-identical programs whose best patterns can warm-
+    start a new search (ROADMAP: similarity-based measurement reuse)."""
+    counts: Counter = Counter()
+    for r in graph.regions:
+        for k, v in r.feature_vector.items():
+            counts[k] += v
+        for name in r.callees:
+            counts[f"call:{name.split('.')[-1]}"] += _CALL_WEIGHT
+        counts[f"kind:{r.kind}"] += 1
+    return dict(counts)

@@ -63,10 +63,12 @@ class TransferPlan:
 
 def plan_transfers(graph: RegionGraph, impl: dict[str, str],
                    hoist: bool = True) -> TransferPlan:
-    """impl: region -> "jit"/"lib" (accelerator) or anything else (host)."""
+    """impl: region -> "jit"/"lib"/"kernel" (accelerator: the ast frontend's
+    jit path, a library substitution, or the jaxpr frontend's kernel
+    alternative) or anything else (host)."""
 
     def on_device(r: Region) -> bool:
-        return impl.get(r.name) in ("jit", "lib")
+        return impl.get(r.name) in ("jit", "lib", "kernel")
 
     plan = TransferPlan()
     device_vars: set = set()      # vars whose current value lives on device

@@ -1,0 +1,394 @@
+"""Frontend-conformance suite for the unified offload API.
+
+One parametrized contract runs across every registered frontend: graph
+invariants, plan round-trip through ``Offloader.plan`` with a unified
+``OffloadResult``, serial==parallel reproducibility at fixed seed, and
+multi-destination gene decode.  Plus the satellite surfaces: deprecation
+shims, ``GAConfig.pool`` process-pool selection, surrogate rank-correlation
+reporting, and the similarity seed bank.
+"""
+import math
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (EXTENDED_ALPHABET, Evaluation, GAConfig,
+                        OffloadConfig, OffloadResult, Offloader, Region,
+                        RegionGraph, coding_from_graph, detect_frontend,
+                        frontend_names, get_frontend, modeled_cost_s,
+                        plan_offload, run_ga)
+from repro.core.ga import GAResult
+from repro.core.loop_offload import loop_offload_pass
+from repro.core.offload import SeedBank, _pattern_db_seed, ga_search
+from repro.core.pattern_db import default_db
+
+# ---------------------------------------------------------------------------
+# per-frontend fixtures: (target, inputs, OffloadConfig kwargs)
+# ---------------------------------------------------------------------------
+
+PY_SRC = """
+def app(a, x, n, iters):
+    y = np.zeros((n,))
+    for it in range(iters):
+        y = y + np.tanh(a @ x) * 0.1
+    s = 0.0
+    for i in range(n):
+        s = s + y[i] * y[i]
+    return y, s
+"""
+PY_CONSTS = {"n": 10, "iters": 8}
+
+
+def _py_inputs():
+    rng = np.random.default_rng(0)
+    return dict(a=rng.random((10, 10)), x=rng.random(10))
+
+
+def _traced_fn(x):
+    def step(c, t):
+        return c * 0.9 + t, c
+    _, ys = jax.lax.scan(step, jnp.zeros(()), x)
+    return ys * 2.0
+
+
+def _ir_graph():
+    # no callees / vectors, so the pattern DB cannot claim any region and
+    # the gene covers all three sites
+    regions = [
+        Region("outer", "loop", trip_count=50),
+        Region("hot", "loop", parent="outer", depth=1,
+               uses=frozenset({"a"}), defs=frozenset({"a"}),
+               offloadable=True, alternatives=("ref", "kernel"),
+               trip_count=10),
+        Region("mid", "loop", uses=frozenset({"b"}), defs=frozenset({"b"}),
+               offloadable=True, alternatives=("ref", "kernel"),
+               trip_count=4),
+        Region("cold", "loop", uses=frozenset({"c"}), defs=frozenset({"c"}),
+               offloadable=True, alternatives=("ref", "kernel"),
+               trip_count=2),
+    ]
+    return RegionGraph(regions, "ir", "toy")
+
+
+FRONTEND_CASES = {
+    "python_ast": lambda: (PY_SRC, _py_inputs(),
+                           {"repeats": 1, "options": {"consts": PY_CONSTS}}),
+    "jaxpr": lambda: (_traced_fn, None,
+                      {"options": {"example_args": (jnp.ones(8),)}}),
+    "module": lambda: (get_config("qwen3_0_6b"), None, {}),
+    "ir": lambda: (_ir_graph(), None, {}),
+}
+
+ALL_FRONTENDS = sorted(FRONTEND_CASES)
+
+
+def _config(kwargs, **over) -> OffloadConfig:
+    ga = over.pop("ga", GAConfig(population=6, generations=2, seed=0))
+    return OffloadConfig(ga=ga, **{**kwargs, **over})
+
+
+def _det_fitness(values) -> Evaluation:
+    # deterministic stand-in verification environment for contracts that
+    # need bit-exact reproducibility regardless of wall-clock noise
+    t = 1.0 + 0.05 * sum(int(v) * (i + 1) for i, v in enumerate(values))
+    return Evaluation(tuple(values), t, True)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_frontends():
+    assert set(ALL_FRONTENDS) <= set(frontend_names())
+
+
+@pytest.mark.parametrize("name", ALL_FRONTENDS)
+def test_detection_maps_target_to_frontend(name):
+    target, inputs, kwargs = FRONTEND_CASES[name]()
+    assert detect_frontend(target, _config(kwargs)) == name
+
+
+def test_detection_rejects_unknown_target():
+    with pytest.raises(TypeError):
+        detect_frontend(12345, OffloadConfig())
+
+
+# ---------------------------------------------------------------------------
+# contract 1: graph invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FRONTENDS)
+def test_graph_invariants(name):
+    target, inputs, kwargs = FRONTEND_CASES[name]()
+    fe = get_frontend(name)
+    cfg = _config(kwargs)
+    if hasattr(fe, "normalize_target"):
+        target = fe.normalize_target(target, inputs, cfg)
+    graph = fe.build_graph(target, inputs, cfg)
+
+    names = [r.name for r in graph.regions]
+    assert len(names) == len(set(names)), "region names must be unique"
+    for r in graph.regions:
+        assert r.kind in ("loop", "call", "block", "stmt")
+        if r.parent is not None:
+            graph.by_name(r.parent)            # parents must exist
+        if r.offloadable:
+            assert len(r.alternatives) >= 2, \
+                f"offloadable region {r.name} needs (ref, offload) impls"
+    assert graph.offloadable(), "every fixture must expose offload sites"
+    # the fingerprint is a pure content hash: rebuilding the same target
+    # yields the same persistent-cache key
+    target2, inputs2, _ = FRONTEND_CASES[name]()
+    if hasattr(fe, "normalize_target"):
+        target2 = fe.normalize_target(target2, inputs2, cfg)
+    graph2 = fe.build_graph(target2, inputs2, cfg)
+    assert graph.fingerprint("ctx") == graph2.fingerprint("ctx")
+
+
+# ---------------------------------------------------------------------------
+# contract 2: plan round-trip, one unified result
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FRONTENDS)
+def test_plan_roundtrip_unified_result(name):
+    target, inputs, kwargs = FRONTEND_CASES[name]()
+    res = plan_offload(target, inputs, config=_config(kwargs))
+
+    assert isinstance(res, OffloadResult)
+    assert res.frontend == name
+    assert isinstance(res.ga, GAResult)
+    assert res.coding.length > 0, "fixtures must leave genes for the GA"
+    # decode(best) is embedded in the final pattern verbatim
+    decoded = res.coding.decode(res.best.bits)
+    for region, impl in decoded.items():
+        assert res.pattern[region] == impl
+    # destinations cover exactly the gene sites
+    assert set(res.destinations) == {s.region for s in res.coding.sites}
+    assert set(res.destinations.values()) <= set(res.coding.destinations)
+    # result surfaces: baseline/best/savings/verification/artifact
+    assert math.isfinite(res.baseline.time_s)
+    assert math.isfinite(res.best.time_s)
+    assert res.best.time_s <= res.ga.baseline.time_s + 1e-12
+    assert res.artifact is not None
+    assert res.verification["mode"] in ("measured", "static-cost")
+    for key in ("measurements", "measurements_saved", "wall_s",
+                "surrogate_rank_corr"):
+        assert key in res.savings
+    assert res.summary()["frontend"] == name
+
+
+def test_python_artifact_runs_and_matches_reference():
+    target, inputs, kwargs = FRONTEND_CASES["python_ast"]()
+    res = plan_offload(target, inputs, config=_config(kwargs))
+    out = res.artifact.run(**inputs)
+    ref = res.details["program"]  # reference: interpret with no offloads
+    from repro.core.frontends.ast_frontend import Executor
+    env = Executor(ref, {}, hoist_transfers=False).run(**inputs)
+    np.testing.assert_allclose(out["y"], np.asarray(env["y"]), rtol=1e-2)
+
+
+def test_module_artifact_is_execplan_with_block_claims():
+    target, inputs, kwargs = FRONTEND_CASES["module"]()
+    res = plan_offload(target, inputs, config=_config(kwargs))
+    from repro.models.plan import ExecPlan
+    assert isinstance(res.artifact, ExecPlan)
+    # block-pass claims survive into the final plan regardless of the GA
+    for field, value in res.block.plan_updates.items():
+        assert getattr(res.artifact, field) == value
+
+
+# ---------------------------------------------------------------------------
+# contract 3: serial == parallel reproducibility at fixed seed
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FRONTENDS)
+def test_serial_parallel_reproducible(name):
+    target, inputs, kwargs = FRONTEND_CASES[name]()
+
+    def plan(workers):
+        t, i, k = FRONTEND_CASES[name]()
+        cfg = _config(k, fitness_fn=_det_fitness,
+                      ga=GAConfig(population=8, generations=3, seed=7,
+                                  workers=workers))
+        return Offloader(cfg).plan(t, i)
+
+    r_ser = plan(0)
+    r_par = plan(4)
+    assert r_ser.best.bits == r_par.best.bits
+    assert r_ser.best.time_s == r_par.best.time_s
+    assert [h["best_time_s"] for h in r_ser.ga.history] == \
+        [h["best_time_s"] for h in r_par.ga.history]
+
+
+# ---------------------------------------------------------------------------
+# contract 4: multi-destination decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FRONTENDS)
+def test_multi_destination_decode(name):
+    target, inputs, kwargs = FRONTEND_CASES[name]()
+
+    def plan():
+        t, i, k = FRONTEND_CASES[name]()
+        cfg = _config(k, destinations=EXTENDED_ALPHABET,
+                      fitness_fn=_det_fitness,
+                      ga=GAConfig(population=8, generations=3, seed=3))
+        return Offloader(cfg).plan(t, i)
+
+    r1 = plan()
+    assert r1.coding.arity == 3
+    assert all(0 <= int(v) < 3 for v in r1.best.bits)
+
+    # an all-stub chromosome decodes every site to its *reference*
+    # implementation (cost-only device) and charges a positive modeled cost
+    stub = tuple(2 for _ in r1.coding.sites)
+    decoded = r1.coding.decode(stub)
+    for site in r1.coding.sites:
+        assert decoded[site.region] == site.ref_impl
+    assert set(r1.coding.destinations_of(stub).values()) == {"fpga_stub"}
+    assert modeled_cost_s(r1.graph, r1.coding, stub) > 0
+    ref = tuple(0 for _ in r1.coding.sites)
+    assert modeled_cost_s(r1.graph, r1.coding, ref) == 0.0
+
+    # fixed-seed search over the enlarged space is reproducible bit-for-bit
+    r2 = plan()
+    assert r1.best.bits == r2.best.bits
+    assert [h["best_time_s"] for h in r1.ga.history] == \
+        [h["best_time_s"] for h in r2.ga.history]
+
+
+def test_destination_cost_steers_search_away_from_stub():
+    # with a fitness that ignores the genes, the modeled stub cost is the
+    # only signal — the GA must keep regions off the cost-only device
+    g = _ir_graph()
+    cfg = OffloadConfig(
+        destinations=EXTENDED_ALPHABET,
+        fitness_fn=lambda values: Evaluation(tuple(values), 1.0, True),
+        ga=GAConfig(population=10, generations=6, seed=0),
+        seed_from_db=False)
+    res = Offloader(cfg).plan(g)
+    assert "fpga_stub" not in res.destinations.values()
+    # and a measured chromosome that used the stub was charged for it
+    assert modeled_cost_s(g, res.coding, (2, 2, 2)) > 0
+
+
+# ---------------------------------------------------------------------------
+# satellites: shims, process pool, rank correlation, seed bank
+# ---------------------------------------------------------------------------
+
+
+def test_deprecated_shims_warn_and_work():
+    from repro.core import plan_python_offload
+    from repro.core.frontends.ast_frontend import PyProgram
+    from repro.core.planner import PythonPlanResult
+
+    p = PyProgram(PY_SRC, consts=PY_CONSTS)
+    with pytest.warns(DeprecationWarning):
+        res = plan_python_offload(
+            p, _py_inputs(), repeats=1,
+            ga_cfg=GAConfig(population=6, generations=2, seed=0))
+    assert isinstance(res, PythonPlanResult)
+    assert res.final_time_s <= res.baseline_time_s * 1.5
+    assert set(res.impl) >= {s.region for s in res.loops.coding.sites}
+
+
+def test_gaconfig_pool_runs_search_in_processes():
+    # "smoke" is the registry's shipped factory; spawn workers rebuild it
+    g = _ir_graph()
+    cfg = GAConfig(population=6, generations=2, seed=0,
+                   pool="smoke", workers=2)
+    coding, ga = ga_search(g, None, cfg)
+    # same trajectory as the in-process run of the identical fitness
+    from repro.core.evaluator import _smoke_fitness_factory
+    coding2, ga2 = ga_search(g, _smoke_fitness_factory(),
+                             GAConfig(population=6, generations=2, seed=0))
+    assert ga.best.bits == ga2.best.bits
+    assert ga.best.time_s == ga2.best.time_s
+
+
+def test_unknown_pool_factory_raises():
+    with pytest.raises(KeyError):
+        ga_search(_ir_graph(), None,
+                  GAConfig(pool="no-such-factory", workers=2))
+
+
+def test_offloader_rejects_pool():
+    # the pipeline composes a fitness (block claims, exclusions, destination
+    # costs) that spawn workers cannot rebuild from a factory — measuring a
+    # different function than the one planned must be an error, not silent
+    cfg = OffloadConfig(fitness_fn=_det_fitness,
+                        ga=GAConfig(pool="smoke", workers=2))
+    with pytest.raises(ValueError, match="Offloader.plan"):
+        Offloader(cfg).plan(_ir_graph())
+
+
+def test_surrogate_ranks_stub_behind_reference():
+    # cost-only genes decode to the reference path (zero transfers); the
+    # surrogate must charge their modeled cost so screening doesn't invert
+    from repro.core.evaluator import transfer_cost_surrogate
+
+    g = _ir_graph()
+    coding = coding_from_graph(g, destinations=EXTENDED_ALPHABET)
+    cost = transfer_cost_surrogate(g, coding)
+    n = coding.length
+    assert cost((2,) * n) > cost((0,) * n), \
+        "stub-parked chromosome must rank behind the free reference path"
+
+
+def test_surrogate_rank_corr_reported_by_search():
+    g = _ir_graph()
+    res = loop_offload_pass(g, _det_fitness,
+                            GAConfig(population=8, generations=4, seed=1))
+    corr = res.ga.surrogate_rank_corr
+    assert math.isfinite(corr) and -1.0 <= corr <= 1.0
+
+
+def test_seed_bank_neighbor_warm_start(tmp_path):
+    g = _ir_graph()
+    coding = coding_from_graph(g)
+    bank = SeedBank(str(tmp_path))
+    bank.record(g, coding, (1, 0, 1))
+    seeds = bank.neighbor_seeds(g, coding)
+    assert seeds == [(1, 0, 1)]
+    # a different frontend's record never leaks in
+    g2 = RegionGraph(list(g.regions), "jaxpr", "other")
+    assert bank.neighbor_seeds(g2, coding_from_graph(g2)) == []
+    # values clamp to the current alphabet
+    bank2 = SeedBank(str(tmp_path / "b2"))
+    coding3 = coding_from_graph(g, destinations=EXTENDED_ALPHABET)
+    bank2.record(g, coding3, (2, 0, 2))
+    assert bank2.neighbor_seeds(g, coding)[0] == (1, 0, 1)
+
+
+def test_pattern_db_seed_sets_matched_regions():
+    regions = [
+        Region("mm", "loop", callees=("np.matmul",), offloadable=True,
+               alternatives=("interp", "jit")),
+        Region("plain", "loop", offloadable=True,
+               alternatives=("interp", "jit")),
+    ]
+    g = RegionGraph(regions, "python_ast", "seeded")
+    coding = coding_from_graph(g)
+    seeds = _pattern_db_seed(g, coding, default_db())
+    assert seeds == [(1, 0)]
+
+
+def test_run_ga_seed_injection_measures_seed_first():
+    measured = []
+
+    def fit(values):
+        measured.append(tuple(values))
+        return _det_fitness(values)
+
+    run_ga(4, fit, GAConfig(population=6, generations=1, seed=0),
+           seeds=[(1, 0, 1, 0)])
+    assert (1, 0, 1, 0) in measured
