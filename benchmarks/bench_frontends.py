@@ -3,7 +3,12 @@
 The SAME gene coding, GA engine, pattern DB, and transfer planner operate on
 all three frontends; only parsing is frontend-specific.  Reports per-frontend
 region extraction time, gene length, and DB match results — plus the shared
-pattern DB matching the same block (attention) in both the ast and jaxpr IRs.
+pattern DB matching the same block (attention) in both the ast and jaxpr IRs,
+and the jaxpr substitution path: per-variant substituted-program timings
+(verified against the reference) and, outside quick mode, a full measured
+plan.  ``main(quick=True)`` is the CI smoke: it still exercises
+parse -> match -> substitute -> verify for every variant, skipping only the
+GA search.
 """
 from __future__ import annotations
 
@@ -20,8 +25,9 @@ from repro.core.frontends import jaxpr_frontend, module_frontend
 from repro.core.frontends.ast_frontend import PyProgram
 from repro.core.genes import coding_from_graph
 from repro.core.pattern_db import default_db
+from repro.core.substitution import SubstitutionEngine
 
-from benchmarks.common import DEMO_CONSTS, DEMO_SRC, demo_inputs, row
+from benchmarks.common import DEMO_CONSTS, DEMO_SRC, demo_inputs, row, timeit
 
 
 def _jax_app(q, k, v, w):
@@ -38,7 +44,7 @@ def _jax_app(q, k, v, w):
     return h
 
 
-def main() -> list[str]:
+def main(quick: bool = False) -> list[str]:
     db = default_db()
     rows = []
 
@@ -85,6 +91,41 @@ def main() -> list[str]:
     assert b1.offloads and b3.offloads
     # identical core objects: gene coding type, GA engine, DB instance
     assert type(c1) is type(c2) is type(c3)
+
+    # --- jaxpr substitution: variants spliced in, verified, timed ----------
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 32)) * 0.1, jnp.float32)
+    args = (q, k, v, w)     # distinct operands: catches role-order bugs
+    g4 = jaxpr_frontend.build_graph(_jax_app, *args)
+    jaxpr_frontend.annotate_variants(g4, db)
+    engine = SubstitutionEngine(_jax_app, args, g4)
+    attn = next(r.name for r in g4.offloadable()
+                if r.meta.get("pattern") == "softmax_attention")
+    for variant in ("ref", "fused_jnp", "pallas"):
+        sub = engine.substitute({attn: variant})
+        jitted = jax.jit(sub.fn)
+        jax.block_until_ready(jitted(*args))          # compile outside timing
+        dt = timeit(lambda: jax.block_until_ready(jitted(*args)))
+        v = engine.verify(sub)
+        rows.append(row(f"frontends.substitution.{variant}", dt * 1e6,
+                        f"verified={v.ok} "
+                        f"substituted={sub.report.substituted or '{}'}"))
+        assert v.ok, f"substituted {variant} failed verification"
+
+    if not quick:
+        from repro.core import GAConfig, OffloadConfig, plan_offload
+        t0 = time.perf_counter()
+        res = plan_offload(_jax_app, config=OffloadConfig(
+            ga=GAConfig(population=6, generations=3, seed=0),
+            options={"example_args": args}, repeats=2))
+        dt = time.perf_counter() - t0
+        rows.append(row("frontends.jaxpr.measured_plan", dt * 1e6,
+                        f"speedup={res.speedup:.2f} "
+                        f"verified={res.verification['verified']} "
+                        f"best={''.join(map(str, res.best.bits))}"))
     return rows
 
 

@@ -1,12 +1,14 @@
 """Benchmark driver — one bench per paper claim/table.
 
-  PYTHONPATH=src python -m benchmarks.run [--only ga,block,transfer,...]
+  PYTHONPATH=src python -m benchmarks.run [--only ga,block,transfer,...] [--quick]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs benches
+that support it in smoke mode (no GA searches) — the CI regression gate.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -15,6 +17,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: ga,block,transfer,frontends,kernels,roofline")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode for benches that support it")
     args = ap.parse_args()
 
     from benchmarks import (bench_block_offload, bench_frontends,
@@ -35,7 +39,9 @@ def main() -> None:
         if only and name not in only:
             continue
         try:
-            for line in fn():
+            kwargs = {"quick": True} if args.quick and \
+                "quick" in inspect.signature(fn).parameters else {}
+            for line in fn(**kwargs):
                 print(line)
         except Exception as e:  # noqa: BLE001
             failed.append(name)

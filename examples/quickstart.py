@@ -4,12 +4,17 @@ implementations, train a few steps, serve a few tokens.
 The planner is one call for every frontend (`repro.core.offload.Offloader`):
 here the *module* frontend plans an ArchConfig — the function-block pass
 matches pattern-DB records, the GA searches the remaining offload sites, and
-the returned artifact is the ExecPlan to train with.
+the returned artifact is the ExecPlan to train with.  The *jaxpr* frontend
+goes further: its plan is **measured** — every chromosome becomes a
+substituted program (kernel-registry variants spliced into the trace),
+verified against the reference and wall-clock timed, and the artifact is
+that runnable substituted callable.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import GAConfig, OffloadConfig, plan_offload
@@ -37,6 +42,34 @@ def main():
           f"{[b.pattern for b in res.block.offloads]} "
           f"best={''.join(map(str, res.best.bits))} "
           f"destinations={res.destinations}")
+
+    # 2b. measured jaxpr plan: a traced callable with an attention-shaped
+    #     block — the plan's fitness is real wall-clock over substituted
+    #     programs, and the artifact is the runnable winner
+    def tiny_app(q, k, v, w):
+        s = q @ k.T / jnp.sqrt(q.shape[-1] * 1.0)
+        mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), bool))
+        h = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1) @ v
+
+        def body(c, _):
+            return jnp.tanh(c @ w), ()
+
+        h, _ = jax.lax.scan(body, h, None, length=4)
+        return h
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 32)) * 0.1, jnp.float32)
+    jres = plan_offload(tiny_app, config=OffloadConfig(
+        ga=GAConfig(population=6, generations=3, seed=0),
+        options={"example_args": (q, k, v, w)}, repeats=2))
+    print(f"jaxpr plan: destinations={jres.destinations} "
+          f"speedup={jres.speedup:.2f}x "
+          f"verified={jres.verification['verified']} "
+          f"substituted={jres.artifact.report.substituted}")
+    _ = jres.artifact(q, k, v, w)            # the deliverable runs as-is
 
     # 3. train a few steps under the planned ExecPlan
     data = SyntheticLMDataset(DataConfig(seq_len=64, global_batch=4,

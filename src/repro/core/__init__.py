@@ -6,6 +6,7 @@ one pipeline (`repro.core.offload.Offloader`) and a frontend registry.
 from repro.core.block_offload import BlockOffloadResult, block_offload_pass
 from repro.core.evaluator import (EvalStats, Evaluator, ProcessPool,
                                   fitness_factory, fitness_factory_names,
+                                  last_rank_corr, record_search_meta,
                                   register_fitness_factory,
                                   transfer_cost_surrogate)
 from repro.core.fitness import CostModelFitness, WallClockFitness
@@ -13,9 +14,10 @@ from repro.core.frontends import (Frontend, FitnessBundle, detect_frontend,
                                   frontend_names, get_frontend,
                                   register_frontend)
 from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
-from repro.core.genes import (DEFAULT_ALPHABET, EXTENDED_ALPHABET, CPU,
-                              FPGA_STUB, GPU, Destination, GeneCoding, Site,
-                              coding_from_graph, destination_names,
+from repro.core.genes import (DEFAULT_ALPHABET, EXTENDED_ALPHABET,
+                              VARIANT_ALPHABET, CPU, FPGA_STUB, GPU,
+                              GPU_FUSED, GPU_PALLAS, Destination, GeneCoding,
+                              Site, coding_from_graph, destination_names,
                               get_destination, modeled_cost_s,
                               register_destination)
 from repro.core.ir import Region, RegionGraph
@@ -23,6 +25,8 @@ from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
 from repro.core.offload import (OffloadConfig, OffloadResult, Offloader,
                                 SeedBank, ga_search, plan_offload)
 from repro.core.pattern_db import Match, PatternDB, PatternRecord, default_db
+from repro.core.substitution import (SubstitutedCallable, SubstitutionEngine,
+                                     SubstitutionReport)
 from repro.core.planner import (ModulePlanResult, PythonPlanResult,
                                 plan_module_offload, plan_python_offload)
 from repro.core.transfer_planner import Transfer, TransferPlan, plan_transfers
@@ -33,13 +37,16 @@ __all__ = [
     "CostModelFitness", "WallClockFitness",
     "EvalStats", "Evaluator", "ProcessPool", "transfer_cost_surrogate",
     "fitness_factory", "fitness_factory_names", "register_fitness_factory",
+    "last_rank_corr", "record_search_meta",
     "Frontend", "FitnessBundle", "detect_frontend", "frontend_names",
     "get_frontend", "register_frontend",
     "Evaluation", "GAConfig", "GAResult", "run_ga",
-    "DEFAULT_ALPHABET", "EXTENDED_ALPHABET", "CPU", "GPU", "FPGA_STUB",
+    "DEFAULT_ALPHABET", "EXTENDED_ALPHABET", "VARIANT_ALPHABET",
+    "CPU", "GPU", "FPGA_STUB", "GPU_FUSED", "GPU_PALLAS",
     "Destination", "GeneCoding", "Site", "coding_from_graph",
     "destination_names", "get_destination", "modeled_cost_s",
     "register_destination",
+    "SubstitutedCallable", "SubstitutionEngine", "SubstitutionReport",
     "Region", "RegionGraph",
     "LoopOffloadResult", "loop_offload_pass",
     "OffloadConfig", "OffloadResult", "Offloader", "SeedBank",

@@ -31,6 +31,7 @@ which is true of the cost-model path).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import math
 import os
@@ -47,7 +48,7 @@ from repro.core.ga import Evaluation
 
 __all__ = ["EvalStats", "Evaluator", "ProcessPool", "transfer_cost_surrogate",
            "register_fitness_factory", "fitness_factory",
-           "fitness_factory_names"]
+           "fitness_factory_names", "record_search_meta", "last_rank_corr"]
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +113,94 @@ class MeasurementCache:
         with self._lock:
             with open(self.path, "a", encoding="utf-8") as f:
                 f.write(line)
+
+
+# ---------------------------------------------------------------------------
+# per-search metadata: the surrogate's measured track record
+# ---------------------------------------------------------------------------
+
+_SEARCH_META_FILE = "search_meta.jsonl"
+_SEARCH_META_MAX_LINES = 512
+
+
+@contextlib.contextmanager
+def _file_lock(lock_path: str):
+    """Exclusive advisory lock; no-op where fcntl is unavailable."""
+    try:
+        import fcntl
+    except ImportError:
+        yield
+        return
+    with open(lock_path, "w") as lf:
+        fcntl.flock(lf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
+def record_search_meta(cache_dir: str, fingerprint: str,
+                       rank_corr: float) -> None:
+    """Journal one search's surrogate rank correlation for its program
+    fingerprint — the evidence :func:`last_rank_corr` serves back so a later
+    search of the same program can justify screening automatically.
+
+    Append-only with a bounded compaction: past ``_SEARCH_META_MAX_LINES``
+    the journal collapses to the newest record per fingerprint (writes
+    serialize on a sidecar flock, like the seed bank's journal)."""
+    if not math.isfinite(rank_corr):
+        return
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, _SEARCH_META_FILE)
+    rec = {"fingerprint": fingerprint, "rank_corr": float(rank_corr)}
+    with _file_lock(path + ".lock"):
+        with open(path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(rec) + "\n")
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                lines = f.readlines()
+        except FileNotFoundError:
+            return
+        if len(lines) <= _SEARCH_META_MAX_LINES:
+            return
+        newest: dict[str, str] = {}
+        for line in lines:
+            try:
+                fp = json.loads(line).get("fingerprint")
+            except json.JSONDecodeError:
+                continue
+            if fp:
+                newest.pop(fp, None)
+                newest[fp] = line            # reinsert: keeps recency order
+        keep = list(newest.values())[-_SEARCH_META_MAX_LINES:]
+        tmp = path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.writelines(keep)
+        os.replace(tmp, path)
+
+
+def last_rank_corr(cache_dir: str, fingerprint: str) -> Optional[float]:
+    """Most recent recorded surrogate rank correlation for a fingerprint."""
+    out: Optional[float] = None
+    try:
+        with open(os.path.join(cache_dir, _SEARCH_META_FILE), "r",
+                  encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn concurrent write
+                if rec.get("fingerprint") == fingerprint:
+                    corr = rec.get("rank_corr")
+                    if isinstance(corr, (int, float)) \
+                            and math.isfinite(corr):
+                        out = float(corr)
+    except FileNotFoundError:
+        pass
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,7 @@ from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 from repro.core.evaluator import transfer_cost_surrogate
 from repro.core.ga import Evaluation, GAConfig
-from repro.core.genes import DEFAULT_ALPHABET, GeneCoding
+from repro.core.genes import GeneCoding
 from repro.core.ir import RegionGraph
 
 __all__ = [
@@ -55,7 +55,11 @@ class OffloadConfig:
     """One knob surface for every frontend's planning run."""
 
     frontend: Optional[str] = None            # None = detect from the target
-    destinations: tuple[str, ...] = DEFAULT_ALPHABET
+    destinations: Optional[tuple] = None      # gene alphabet; None = the
+                                              # frontend's proposed alphabet
+                                              # (FitnessBundle.destinations)
+                                              # or DEFAULT_ALPHABET — an
+                                              # explicit value always wins
     ga: GAConfig = field(default_factory=GAConfig)
     db: Optional[Any] = None                  # PatternDB; default_db() if None
     confirm: Callable | bool = True           # interface-change confirmation
@@ -94,6 +98,11 @@ class FitnessBundle:
                                               # interleave; force workers=0
     measured: bool = True                     # False = static-cost stub (no
                                               # real execution behind fitness)
+    destinations: Optional[tuple] = None      # frontend-proposed gene
+                                              # alphabet (e.g. the jaxpr
+                                              # variant alphabet); used when
+                                              # the config left the default
+
     context: dict = field(default_factory=dict)    # frontend-private state,
                                               # consumed by apply_plan / shims
 

@@ -67,6 +67,13 @@ class GAConfig:
                                       # only takes effect via
                                       # loop_offload_pass (or a hand-built
                                       # Evaluator); bare run_ga raises
+    auto_screen: bool = True          # when screen_top_k is unset and a prior
+                                      # search of the same fingerprint (in
+                                      # cache_dir) recorded a surrogate rank
+                                      # correlation >= auto_screen_corr,
+                                      # ga_search sets screen_top_k to
+                                      # population // 2 by itself
+    auto_screen_corr: float = 0.6     # evidence bar for auto-screening
     dup_retries: int = 3              # re-mutation attempts per duplicate child
 
 

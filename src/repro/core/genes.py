@@ -58,15 +58,23 @@ GPU = Destination("gpu", executable=True, impl_index=1)
 #: PCIe-attached reconfigurable card (fixed DMA/launch latency, cheap trips).
 FPGA_STUB = Destination("fpga_stub", executable=False, impl_index=0,
                         launch_overhead_s=2e-4, per_trip_s=5e-8)
+#: variant destinations: same accelerator, different *implementation* of the
+#: site (the kernel-substitution alphabet — a gene picks which code runs).
+GPU_FUSED = Destination("gpu_fused", executable=True, impl_index=1)
+GPU_PALLAS = Destination("gpu_pallas", executable=True, impl_index=2)
 
 _DESTINATIONS: dict[str, Destination] = {
-    d.name: d for d in (CPU, GPU, FPGA_STUB)
+    d.name: d for d in (CPU, GPU, FPGA_STUB, GPU_FUSED, GPU_PALLAS)
 }
 
 #: the paper's original binary CPU/GPU alphabet — the default everywhere.
 DEFAULT_ALPHABET: tuple[str, ...] = ("cpu", "gpu")
 #: the extended mixed-destination alphabet from the ROADMAP.
 EXTENDED_ALPHABET: tuple[str, ...] = ("cpu", "gpu", "fpga_stub")
+#: the implementation-variant alphabet the measured jaxpr frontend proposes:
+#: gene k selects site implementation k — reference, the fused-jnp rewrite,
+#: or the Pallas kernel (see repro.kernels.registry).
+VARIANT_ALPHABET: tuple[str, ...] = ("cpu", "gpu_fused", "gpu_pallas")
 
 
 def register_destination(dest: Destination, replace: bool = False) -> None:
@@ -95,16 +103,23 @@ def destination_names() -> tuple[str, ...]:
 
 @dataclass(frozen=True)
 class Site:
-    """One gene position: a region plus its off/on implementations."""
+    """One gene position: a region plus its implementation menu.
+
+    The first two implementations keep the paper's off/on pair; regions
+    with more than one accelerated alternative (kernel-substitution
+    variants) extend the menu via ``extra_impls``, indexed by
+    ``Destination.impl_index`` (2 = the first extra, and so on).
+    """
 
     region: str
     ref_impl: Any
     offload_impl: Any
+    extra_impls: tuple = ()
 
     @property
     def impls(self) -> tuple:
         """Implementation by index — what ``Destination.impl_index`` selects."""
-        return (self.ref_impl, self.offload_impl)
+        return (self.ref_impl, self.offload_impl) + tuple(self.extra_impls)
 
 
 @dataclass(frozen=True)
@@ -166,7 +181,7 @@ def coding_from_graph(graph: RegionGraph,
             continue
         ref = r.alternatives[0] if r.alternatives else "ref"
         off = r.alternatives[1] if len(r.alternatives) > 1 else "offload"
-        sites.append(Site(r.name, ref, off))
+        sites.append(Site(r.name, ref, off, tuple(r.alternatives[2:])))
     return GeneCoding(tuple(sites), tuple(destinations))
 
 

@@ -27,14 +27,15 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core import similarity as sim
-from repro.core.evaluator import (Evaluator, ProcessPool,
+from repro.core.evaluator import (Evaluator, ProcessPool, _file_lock,
+                                  last_rank_corr, record_search_meta,
                                   transfer_cost_surrogate)
 from repro.core.frontends.registry import (FitnessBundle, OffloadConfig,
                                            decoded_pattern, detect_frontend,
                                            get_frontend)
 from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
-from repro.core.genes import (GeneCoding, coding_from_graph, get_destination,
-                              modeled_cost_s)
+from repro.core.genes import (DEFAULT_ALPHABET, GeneCoding, coding_from_graph,
+                              get_destination, modeled_cost_s)
 from repro.core.ir import RegionGraph
 from repro.core.transfer_planner import TransferPlan, plan_transfers
 
@@ -71,13 +72,27 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
         coding = coding_from_graph(graph, exclude=exclude)
     owns = evaluator is None
     pool: Optional[ProcessPool] = None
+    fingerprint = ""
     if evaluator is None:
         surrogate = transfer_cost_surrogate(graph, coding)
         fingerprint = graph.fingerprint(
             f"{cache_extra}|exclude={sorted(exclude)}"
             f"|dest={coding.destinations}")
+        top_k = cfg.screen_top_k
+        if top_k is None and cfg.auto_screen and cfg.cache_dir:
+            # surrogate auto-screening (ROADMAP): a prior search of this
+            # exact program recorded how well the surrogate ranked its
+            # offspring — when that correlation clears the bar, screening
+            # is evidence-backed and switches itself on
+            corr = last_rank_corr(cfg.cache_dir, fingerprint)
+            if corr is not None and corr >= cfg.auto_screen_corr:
+                top_k = max(2, cfg.population // 2)
+                if log:
+                    log(f"auto-screen: prior surrogate rank corr "
+                        f"{corr:.2f} >= {cfg.auto_screen_corr:.2f} -> "
+                        f"screen_top_k={top_k}")
         common = dict(cache_dir=cfg.cache_dir, fingerprint=fingerprint,
-                      surrogate=surrogate, screen_top_k=cfg.screen_top_k)
+                      surrogate=surrogate, screen_top_k=top_k)
         if cfg.pool is not None:
             pool = ProcessPool(cfg.pool, workers=cfg.workers or None)
             evaluator = Evaluator(None, **pool.evaluator_kwargs(), **common)
@@ -86,6 +101,13 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
     try:
         ga = run_ga(coding.length, fitness_fn, cfg, log=log,
                     evaluator=evaluator, arity=coding.arity, seeds=seeds)
+        if owns and cfg.cache_dir and ga.screened_out == 0:
+            # only unscreened searches are evidence: a screened search
+            # measures the correlation on surrogate-selected survivors
+            # (range-restricted), which would let auto-screening justify
+            # itself with its own output
+            record_search_meta(cfg.cache_dir, fingerprint,
+                               ga.surrogate_rank_corr)
     finally:
         if owns:
             evaluator.close()
@@ -99,6 +121,32 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
 # ---------------------------------------------------------------------------
 
 
+def _map_destination_value(value: int, rec_destinations: Sequence[str],
+                           coding: GeneCoding) -> int:
+    """Translate one recorded gene value into the current alphabet.
+
+    Cross-destination mapping (ROADMAP): a neighbor searched over a
+    *different* alphabet (a GPU gene seeding an FPGA search, a binary gene
+    seeding a variant search).  The recorded *destination name* is looked up
+    in the current alphabet; a name the alphabet lacks maps by intent —
+    reference stays reference, anything offloaded maps to the current
+    primary accelerator (index 1) so the warm start preserves the on/off
+    shape of the neighbor's pattern.  Legacy records without destination
+    names clamp, preserving historical behavior.
+    """
+    value = int(value)
+    if not rec_destinations:
+        return min(value, coding.arity - 1)
+    if not (0 <= value < len(rec_destinations)):
+        return 0
+    name = rec_destinations[value]
+    if name in coding.destinations:
+        return coding.destinations.index(name)
+    if value == 0:
+        return 0
+    return 1 if coding.arity > 1 else 0
+
+
 class SeedBank:
     """Persistent (frontend, graph-vector) -> best-pattern store.
 
@@ -106,13 +154,35 @@ class SeedBank:
     a *near*-identical one (ROADMAP: similarity-based reuse): after every
     search the winning pattern is recorded with the program's Deckard-style
     characteristic vector, and a new search seeds its GA population from the
-    best patterns of its nearest neighbors (mapped by region name, unknown
-    regions defaulting to the reference destination).
+    best patterns of its nearest neighbors (mapped by region name and by
+    destination *name* across alphabets, unknown regions defaulting to the
+    reference destination).
+
+    Hygiene: the journal is append-only (concurrent writers share it), with
+    line order as the recency order.  A record that contributes a seed is
+    re-appended ("touched"), and when the file outgrows ``2 * max_records``
+    lines it is compacted — duplicates collapse to their most recent
+    occurrence and only the newest ``max_records`` survive — an LRU bound
+    instead of unbounded growth.  Writes (appends and the
+    read-rewrite-replace compaction) serialize on a sidecar lock file so a
+    concurrent writer's append can't vanish mid-compaction; reads stay
+    lock-free (torn trailing lines are skipped by the loader).
     """
 
-    def __init__(self, cache_dir: str):
+    def __init__(self, cache_dir: str, max_records: int = 128):
         os.makedirs(cache_dir, exist_ok=True)
         self.path = os.path.join(cache_dir, "seed_bank.jsonl")
+        self._lock_path = self.path + ".lock"
+        self.max_records = max(1, int(max_records))
+
+    def _write_lock(self):
+        return _file_lock(self._lock_path)
+
+    @staticmethod
+    def _key(rec: dict) -> tuple:
+        return (rec.get("frontend"), rec.get("source"),
+                tuple(rec.get("sites", ())), tuple(rec.get("values", ())),
+                tuple(rec.get("destinations", ())))
 
     def _load(self) -> list[dict]:
         out: list[dict] = []
@@ -130,6 +200,37 @@ class SeedBank:
             pass
         return out
 
+    def _live(self) -> list[dict]:
+        """Journal collapsed to unique records, oldest -> newest, bounded."""
+        by_key: dict[tuple, dict] = {}
+        for rec in self._load():
+            by_key.pop(self._key(rec), None)
+            by_key[self._key(rec)] = rec      # reinsert: moves to the tail
+        live = list(by_key.values())
+        return live[-self.max_records:]
+
+    def _append(self, recs: list[dict]) -> None:
+        with self._write_lock():
+            with open(self.path, "a", encoding="utf-8") as f:
+                for rec in recs:
+                    f.write(json.dumps(rec) + "\n")
+
+    def _maybe_compact(self) -> None:
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                n_lines = sum(1 for _ in f)
+        except FileNotFoundError:
+            return
+        if n_lines <= 2 * self.max_records:
+            return
+        with self._write_lock():
+            live = self._live()          # re-read under the lock: no append
+            tmp = self.path + ".tmp"     # can land between read and replace
+            with open(tmp, "w", encoding="utf-8") as f:
+                for rec in live:
+                    f.write(json.dumps(rec) + "\n")
+            os.replace(tmp, self.path)
+
     def record(self, graph: RegionGraph, coding: GeneCoding,
                values: Sequence[int]) -> None:
         rec = {
@@ -140,15 +241,15 @@ class SeedBank:
             "values": [int(v) for v in values],
             "destinations": list(coding.destinations),
         }
-        with open(self.path, "a", encoding="utf-8") as f:
-            f.write(json.dumps(rec) + "\n")
+        self._append([rec])
+        self._maybe_compact()
 
     def neighbor_seeds(self, graph: RegionGraph, coding: GeneCoding,
                        min_similarity: float = 0.75,
                        limit: int = 3) -> list[tuple]:
         vec = sim.graph_vector(graph)
         scored: list[tuple[float, dict]] = []
-        for rec in self._load():
+        for rec in self._live():
             if rec.get("frontend") != graph.frontend:
                 continue
             s = sim.similarity(vec, rec.get("vector") or {})
@@ -157,16 +258,23 @@ class SeedBank:
         scored.sort(key=lambda sr: -sr[0])
         seeds: list[tuple] = []
         seen: set = set()
+        used: list[dict] = []
         for _, rec in scored:
             site_vals = dict(zip(rec.get("sites", ()), rec.get("values", ())))
-            seed = tuple(min(int(site_vals.get(s.region, 0)),
-                             coding.arity - 1)
-                         for s in coding.sites)
+            dests = list(rec.get("destinations", ()))
+            seed = tuple(
+                _map_destination_value(site_vals.get(s.region, 0), dests,
+                                       coding)
+                for s in coding.sites)
             if seed not in seen:
                 seeds.append(seed)
                 seen.add(seed)
+                used.append(rec)
             if len(seeds) >= limit:
                 break
+        if used:
+            self._append(used)            # LRU touch: contributors stay fresh
+            self._maybe_compact()
         return seeds
 
 
@@ -288,8 +396,12 @@ class Offloader:
             target = fe.normalize_target(target, inputs, cfg)
         graph = fe.build_graph(target, inputs, cfg)
         bundle: FitnessBundle = fe.make_fitness(graph, target, inputs, cfg)
+        if cfg.destinations is not None:       # explicit config always wins
+            destinations = tuple(cfg.destinations)
+        else:                                  # else the frontend's proposal
+            destinations = tuple(bundle.destinations or DEFAULT_ALPHABET)
         coding = coding_from_graph(graph, exclude=bundle.claimed,
-                                   destinations=cfg.destinations)
+                                   destinations=destinations)
         log(f"graph: {graph.summary()} gene_length={coding.length} "
             f"alphabet={coding.destinations}")
 

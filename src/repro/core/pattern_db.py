@@ -189,6 +189,21 @@ def _py_vector(code: str) -> dict:
     return sim.ast_vector(tree)
 
 
+def _scan_region_vector(fn, *example_args) -> dict:
+    """Characteristic vector of a canonical *scan region*: trace the
+    reference implementation, find its scan equation, and count the body's
+    primitives plus the ``scan`` itself — exactly how the jaxpr frontend
+    vectorizes a scan region, so scan-shaped comparison code matches
+    scan-shaped user regions instead of whole-program traces."""
+    closed = jax.make_jaxpr(fn)(*example_args)
+    for eqn in closed.jaxpr.eqns:
+        if eqn.primitive.name == "scan":
+            vec = sim.jaxpr_vector(eqn.params["jaxpr"])
+            vec["scan"] = vec.get("scan", 0) + 1
+            return vec
+    return sim.jaxpr_vector(closed)
+
+
 # --- canonical jnp reference blocks (traced -> jaxpr vectors) ---------------
 
 
@@ -260,7 +275,7 @@ def default_db() -> PatternDB:
             callee_names=("rglru", "lru", "linear_recurrence", "ssm_scan",
                           "selective_scan"),
             vectors={"python_ast": _py_vector(_PY_COMPARISON_CODE["linear_recurrence"]),
-                     "jaxpr": sim.vector_of_callable(_jx_recurrence, la, la)},
+                     "jaxpr": _scan_region_vector(_jx_recurrence, la, la)},
             replacement="repro.kernels.ops.rglru_scan",
             plan_field=("rglru_impl", "chunked"),
             threshold=0.85,
@@ -268,7 +283,7 @@ def default_db() -> PatternDB:
         PatternRecord(
             name="wkv_recurrence",
             callee_names=("wkv", "wkv6", "rwkv", "time_mix"),
-            vectors={"jaxpr": sim.vector_of_callable(
+            vectors={"jaxpr": _scan_region_vector(
                 _jx_wkv, q, q, q, la, jnp.zeros((4,), f32))},
             replacement="repro.kernels.ops.wkv6",
             plan_field=("wkv_impl", "chunked"),

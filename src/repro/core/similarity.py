@@ -70,19 +70,44 @@ def _call_name(node: pyast.Call) -> str:
     return ".".join(reversed(parts))
 
 
+#: dtype plumbing, not structure: counting these would make the same block
+#: in bf16 look unlike its f32 comparison code.
+_IGNORED_PRIMS = {"convert_element_type"}
+
+
 def jaxpr_vector(jaxpr: Any) -> dict[str, int]:
     """Primitive counts over a (Closed)Jaxpr, recursing into sub-jaxprs."""
     counts: Counter = Counter()
 
     def walk(jx):
         for eqn in jx.eqns:
-            counts[eqn.primitive.name] += 1
+            if eqn.primitive.name not in _IGNORED_PRIMS:
+                counts[eqn.primitive.name] += 1
             for v in eqn.params.values():
                 inner = _sub_jaxpr(v)
                 for sub in inner:
                     walk(sub)
 
     walk(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+    return dict(counts)
+
+
+def eqns_vector(eqns: Any) -> dict[str, int]:
+    """Primitive counts over a list of jaxpr equations, recursing into
+    sub-jaxprs (glue calls like a pjit'd ``tril`` contribute their inner
+    primitives, so region vectors stay comparable with the whole-trace
+    vectors the pattern DB stores)."""
+    counts: Counter = Counter()
+
+    def walk_eqns(es):
+        for eqn in es:
+            if eqn.primitive.name not in _IGNORED_PRIMS:
+                counts[eqn.primitive.name] += 1
+            for v in eqn.params.values():
+                for sub in _sub_jaxpr(v):
+                    walk_eqns(sub.eqns)
+
+    walk_eqns(eqns)
     return dict(counts)
 
 

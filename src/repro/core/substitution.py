@@ -1,0 +1,405 @@
+"""Jaxpr kernel-substitution engine: plans become runnable programs.
+
+The paper's pipeline ends with *converted code* — matched functional blocks
+replaced by library implementations, the converted program measured and
+verified on the target.  This module closes that loop for the jaxpr
+frontend: given the traced program, its :class:`~repro.core.ir.RegionGraph`
+(whose regions carry equation spans from the frontend) and a
+region -> implementation map decoded from a chromosome, it re-emits the
+program with each matched region routed through the chosen variant from the
+kernel registry (:mod:`repro.kernels.registry`).
+
+Interception is equation-group based: the engine walks the jaxpr in program
+order, and at a substituted region's span it feeds the span's free inputs to
+the variant's bound adapter and binds the adapter's outputs to the span's
+outputs, skipping the original equations; everything else executes through
+``primitive.bind`` exactly as ``jax.core.eval_jaxpr`` would.  Variant
+binding happens *eagerly* against the jaxpr's abstract values (plus an
+``eval_shape`` output check), so every fallback decision is recorded in the
+:class:`SubstitutionReport` before anything runs — and a variant whose
+predicate rejects the concrete shapes silently degrades to the reference
+equations instead of failing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+from jax import core as jcore
+
+from repro.core.ir import RegionGraph
+from repro.kernels.registry import (CallSite, KernelRegistry,
+                                    VariantUnavailable, auto_variant_order,
+                                    default_registry)
+
+__all__ = ["SiteBinding", "SubstitutionChoice", "SubstitutionReport",
+           "SubstitutedCallable", "SubstitutionEngine"]
+
+
+_REF_IMPLS = frozenset({"ref", "interp", "host", "cpu"})
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SubstitutionChoice:
+    """What happened at one substitutable region."""
+
+    region: str
+    pattern: Optional[str]
+    requested: str                    # the impl the plan asked for
+    chosen: str                       # "ref" or the bound variant name
+    why: str = ""                     # fallback / resolution reason
+
+
+@dataclass
+class SubstitutionReport:
+    choices: list[SubstitutionChoice] = field(default_factory=list)
+
+    @property
+    def substituted(self) -> dict[str, str]:
+        """region -> variant for every region not on the reference path."""
+        return {c.region: c.chosen for c in self.choices if c.chosen != "ref"}
+
+    @property
+    def fallbacks(self) -> dict[str, str]:
+        """region -> reason for every request the engine had to refuse."""
+        return {c.region: c.why for c in self.choices
+                if c.chosen == "ref" and c.requested not in _REF_IMPLS}
+
+    def summary(self) -> dict:
+        return {"substituted": self.substituted, "fallbacks": self.fallbacks}
+
+
+class SubstitutedCallable:
+    """A runnable substituted program: same signature as the traced source.
+
+    ``fn`` is the raw (traceable) callable; calling the object runs a
+    cached ``jax.jit`` of it.  ``report`` says which regions were
+    substituted with which variant and why the rest fell back.
+    """
+
+    def __init__(self, fn: Callable, report: SubstitutionReport,
+                 name: str = "substituted"):
+        self.fn = fn
+        self.report = report
+        self.name = name
+        self._jitted: Optional[Callable] = None
+
+    def __call__(self, *args):
+        if self._jitted is None:
+            self._jitted = jax.jit(self.fn)
+        return self._jitted(*args)
+
+    def __repr__(self) -> str:
+        return (f"SubstitutedCallable({self.name!r}, "
+                f"substituted={self.report.substituted}, "
+                f"fallbacks={list(self.report.fallbacks)})")
+
+
+# ---------------------------------------------------------------------------
+# sites: regions concretized against the jaxpr
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SiteBinding:
+    """One substitutable region resolved to jaxpr vars."""
+
+    region: str
+    pattern: Optional[str]
+    kind: str                          # "span" | "call" | "scan"
+    span: tuple                       # (start, end) eqn indices
+    in_vars: tuple                     # free inputs (first-use order for spans)
+    out_vars: tuple                    # outputs (DropVar-preserving for eqns)
+    params: dict = field(default_factory=dict)
+
+    def call_site(self, out_used: Sequence[bool], backend: str,
+                  eqns: tuple = ()) -> CallSite:
+        return CallSite(
+            pattern=self.pattern or "",
+            kind=self.kind,
+            in_avals=tuple(v.aval for v in self.in_vars),
+            out_avals=tuple(v.aval for v in self.out_vars),
+            out_used=tuple(out_used),
+            params=dict(self.params),
+            backend=backend,
+            eqns=tuple(eqns),
+            in_vars=tuple(self.in_vars))
+
+
+def _span_io(eqns: Sequence, used_later: Callable) -> tuple[tuple, tuple]:
+    """Free inputs (first-use order) and live outputs of an equation group."""
+    defined: set = set()
+    ins: list = []
+    for eqn in eqns:
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal) or v in defined or v in ins:
+                continue
+            ins.append(v)
+        defined.update(o for o in eqn.outvars
+                       if not isinstance(o, jcore.DropVar))
+    outs = [o for eqn in eqns for o in eqn.outvars
+            if not isinstance(o, jcore.DropVar) and used_later(o)]
+    return tuple(ins), tuple(outs)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class SubstitutionEngine:
+    """Re-emit a traced function with matched regions routed to variants.
+
+    The graph must come from the jaxpr frontend with ``meta["eqn_span"]``
+    populated.  The frontend's own trace (``graph.meta["closed_jaxpr"]`` /
+    ``["out_tree"]``) is reused when present — the spans then index this
+    engine's jaxpr by construction; otherwise ``fn`` is re-traced with the
+    same example arguments.
+    """
+
+    def __init__(self, fn: Callable, example_args: tuple,
+                 graph: RegionGraph,
+                 registry: Optional[KernelRegistry] = None,
+                 backend: Optional[str] = None):
+        self.fn = fn
+        self.example_args = tuple(example_args)
+        self.graph = graph
+        self.registry = registry or default_registry()
+        self.backend = backend or jax.default_backend()
+        self.closed = graph.meta.get("closed_jaxpr")
+        self._out_tree = graph.meta.get("out_tree")
+        if self.closed is None or self._out_tree is None:
+            self.closed, out_shape = jax.make_jaxpr(
+                fn, return_shape=True)(*self.example_args)
+            self._out_tree = jax.tree_util.tree_structure(out_shape)
+        self._sites = self._resolve_sites()
+        self._reference: Any = None
+        self._resolved: dict = {}      # (region, requested) -> resolution
+
+    # -- site resolution ----------------------------------------------------
+
+    def _resolve_sites(self) -> list[SiteBinding]:
+        jaxpr = self.closed.jaxpr
+        eqns = jaxpr.eqns
+        # var -> last eqn index that reads it (or +inf if a program output)
+        last_use: dict = {}
+        for i, eqn in enumerate(eqns):
+            for v in eqn.invars:
+                if not isinstance(v, jcore.Literal):
+                    last_use[v] = i
+        program_outs = {v for v in jaxpr.outvars
+                        if not isinstance(v, jcore.Literal)}
+
+        sites: list[SiteBinding] = []
+        for region in self.graph.offloadable():
+            span = region.meta.get("eqn_span")
+            if span is None:
+                continue
+            s, e = span
+            if not (0 <= s < e <= len(eqns)):
+                continue
+            pattern = region.meta.get("pattern")
+            if e - s == 1 and region.meta.get("primitive"):
+                # a loop/call region wrapping exactly one closed equation
+                eqn = eqns[s]
+                pname = eqn.primitive.name
+                kind = "scan" if pname == "scan" else "call"
+                params = {}
+                if kind == "scan":
+                    params = {k: eqn.params.get(k)
+                              for k in ("num_consts", "num_carry", "length",
+                                        "reverse")}
+                sites.append(SiteBinding(
+                    region.name, pattern, kind, (s, e),
+                    in_vars=tuple(v for v in eqn.invars
+                                  if not isinstance(v, jcore.Literal)),
+                    out_vars=tuple(eqn.outvars), params=params))
+            else:
+                def used_later(v, _e=e):
+                    return v in program_outs or last_use.get(v, -1) >= _e
+                ins, outs = _span_io(eqns[s:e], used_later)
+                sites.append(SiteBinding(
+                    region.name, pattern, "span", (s, e), ins, outs))
+        return sites
+
+    @property
+    def sites(self) -> tuple[SiteBinding, ...]:
+        return tuple(self._sites)
+
+    # -- variant resolution -------------------------------------------------
+
+    def _out_used(self, site: SiteBinding) -> list[bool]:
+        if site.kind == "span":
+            return [True] * len(site.out_vars)   # spans keep live outs only
+        jaxpr = self.closed.jaxpr
+        last_use: set = set()
+        for eqn in jaxpr.eqns[site.span[1]:]:
+            last_use.update(v for v in eqn.invars
+                            if not isinstance(v, jcore.Literal))
+        last_use.update(v for v in jaxpr.outvars
+                        if not isinstance(v, jcore.Literal))
+        return [not isinstance(v, jcore.DropVar) and v in last_use
+                for v in site.out_vars]
+
+    def _resolve_variant(self, site: SiteBinding, requested: str
+                         ) -> tuple[Optional[Callable], str, str]:
+        """-> (adapter or None, chosen name, why).  Resolution depends only
+        on (region, requested) for the engine's lifetime, and substitute()
+        runs once per GA chromosome — memoized."""
+        key = (site.region, requested)
+        hit = self._resolved.get(key)
+        if hit is not None:
+            return hit
+        self._resolved[key] = out = self._resolve_variant_uncached(
+            site, requested)
+        return out
+
+    def _resolve_variant_uncached(self, site: SiteBinding, requested: str
+                                  ) -> tuple[Optional[Callable], str, str]:
+        if requested in _REF_IMPLS:
+            return None, "ref", "requested"
+        if site.pattern is None:
+            return None, "ref", "no pattern matched this region"
+        names = self.registry.variant_names(site.pattern)
+        if requested in names:
+            candidates = (requested,)
+        elif requested in ("kernel", "offload", "auto"):
+            candidates = tuple(n for n in auto_variant_order(self.backend)
+                               if n in names) or names
+        else:
+            return None, "ref", f"unknown implementation {requested!r}"
+        out_used = self._out_used(site)
+        eqns = self.closed.jaxpr.eqns[site.span[0]:site.span[1]] \
+            if site.kind == "span" else ()
+        call_site = site.call_site(out_used, self.backend, eqns=eqns)
+        why = ""
+        for name in candidates:
+            try:
+                adapter = self.registry.get(site.pattern, name).bind(call_site)
+                self._check_adapter(adapter, call_site)
+                return adapter, name, ""
+            except VariantUnavailable as e:
+                why = f"{name}: {e}"
+        return None, "ref", why
+
+    @staticmethod
+    def _check_adapter(adapter: Callable, site: CallSite) -> None:
+        """Abstract-evaluate the adapter and require aval-exact outputs for
+        every used output (None stands for an output the variant skips)."""
+        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in site.in_avals]
+        try:
+            outs = jax.eval_shape(lambda *xs: adapter(*xs), *specs)
+        except Exception as e:  # noqa: BLE001 — adapter bug == unavailable
+            raise VariantUnavailable(f"adapter failed abstract eval: "
+                                     f"{type(e).__name__}: {e}") from None
+        outs = tuple(outs) if isinstance(outs, (tuple, list)) else (outs,)
+        if len(outs) != len(site.out_avals):
+            raise VariantUnavailable(
+                f"adapter returned {len(outs)} outputs, site has "
+                f"{len(site.out_avals)}")
+        for i, (got, want, used) in enumerate(
+                zip(outs, site.out_avals, site.out_used)):
+            if got is None:
+                if used:
+                    raise VariantUnavailable(
+                        f"output {i} is used but the variant skips it")
+                continue
+            if tuple(got.shape) != tuple(want.shape) \
+                    or got.dtype != want.dtype:
+                raise VariantUnavailable(
+                    f"output {i} aval mismatch: {got.shape}/{got.dtype} vs "
+                    f"{want.shape}/{want.dtype}")
+
+    # -- substitution -------------------------------------------------------
+
+    def substitute(self, impl: dict) -> SubstitutedCallable:
+        """``impl``: region -> implementation id ("ref", a variant name, or
+        the legacy "kernel" auto choice).  Returns the runnable program."""
+        report = SubstitutionReport()
+        actions: dict[int, tuple[SiteBinding, Callable]] = {}
+        skip_until: dict[int, int] = {}
+        for site in self._sites:
+            requested = str(impl.get(site.region, "ref"))
+            adapter, chosen, why = self._resolve_variant(site, requested)
+            report.choices.append(SubstitutionChoice(
+                site.region, site.pattern, requested, chosen, why))
+            if adapter is not None:
+                actions[site.span[0]] = (site, adapter)
+                skip_until[site.span[0]] = site.span[1]
+
+        closed, out_tree = self.closed, self._out_tree
+        n_in = len(closed.jaxpr.invars)
+
+        def run(*args):
+            flat = jax.tree_util.tree_leaves(args)
+            if len(flat) != n_in:
+                raise TypeError(f"expected {n_in} input leaves, got "
+                                f"{len(flat)}")
+            jaxpr = closed.jaxpr
+            env: dict = {}
+
+            def read(v):
+                return v.val if isinstance(v, jcore.Literal) else env[v]
+
+            def write(v, val):
+                if not isinstance(v, jcore.DropVar):
+                    env[v] = val
+
+            for v, c in zip(jaxpr.constvars, closed.consts):
+                env[v] = c
+            for v, a in zip(jaxpr.invars, flat):
+                env[v] = a
+
+            i = 0
+            eqns = jaxpr.eqns
+            while i < len(eqns):
+                act = actions.get(i)
+                if act is not None:
+                    site, adapter = act
+                    outs = adapter(*[read(v) for v in site.in_vars])
+                    for v, o in zip(site.out_vars, outs):
+                        if o is not None:
+                            write(v, o)
+                    i = skip_until[i]
+                    continue
+                eqn = eqns[i]
+                subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+                ans = eqn.primitive.bind(
+                    *subfuns, *[read(v) for v in eqn.invars], **bind_params)
+                if eqn.primitive.multiple_results:
+                    for v, a in zip(eqn.outvars, ans):
+                        write(v, a)
+                else:
+                    write(eqn.outvars[0], ans)
+                i += 1
+
+            outvals = [read(v) for v in jaxpr.outvars]
+            return jax.tree_util.tree_unflatten(out_tree, outvals)
+
+        return SubstitutedCallable(run, report, self.graph.source_name)
+
+    # -- convenience --------------------------------------------------------
+
+    def reference(self) -> Any:
+        """The unsubstituted program's outputs on the example arguments
+        (computed once, then cached)."""
+        if self._reference is None:
+            self._reference = self.fn(*self.example_args)
+        return self._reference
+
+    def verify(self, impl, rtol: float = 1e-2, atol: float = 1e-2):
+        """Numeric equivalence of a substituted program vs the reference
+        (:func:`repro.core.verifier.verify`).  ``impl`` is a region -> impl
+        map, or a :class:`SubstitutedCallable` already built from one."""
+        from repro.core.verifier import verify as _verify
+
+        sub = impl if isinstance(impl, SubstitutedCallable) \
+            else self.substitute(impl)
+        return _verify(self.reference(), sub(*self.example_args),
+                       rtol=rtol, atol=atol)

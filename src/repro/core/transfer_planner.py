@@ -61,14 +61,19 @@ class TransferPlan:
         return total
 
 
+#: implementation ids that place a region on the accelerator side: the ast
+#: frontend's jit path, a library substitution, the jaxpr frontend's legacy
+#: auto-kernel choice, and the kernel registry's named variants.
+DEVICE_IMPLS = frozenset({"jit", "lib", "kernel", "fused_jnp", "pallas"})
+
+
 def plan_transfers(graph: RegionGraph, impl: dict[str, str],
                    hoist: bool = True) -> TransferPlan:
-    """impl: region -> "jit"/"lib"/"kernel" (accelerator: the ast frontend's
-    jit path, a library substitution, or the jaxpr frontend's kernel
-    alternative) or anything else (host)."""
+    """impl: region -> an id in :data:`DEVICE_IMPLS` (accelerator) or
+    anything else (host)."""
 
     def on_device(r: Region) -> bool:
-        return impl.get(r.name) in ("jit", "lib", "kernel")
+        return impl.get(r.name) in DEVICE_IMPLS
 
     plan = TransferPlan()
     device_vars: set = set()      # vars whose current value lives on device

@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Accelerated kernels + the implementation-variant registry.
+
+``ops`` holds the jit'd Pallas kernel wrappers, ``ref`` the pure-jnp
+oracles, and ``registry`` maps pattern-DB entries to executable variants
+(``fused_jnp`` / ``pallas``) for the jaxpr substitution engine.  Kernel
+modules import lazily through the registry's bind functions, so importing
+this package stays cheap.
+"""
+from repro.kernels.registry import (CallSite, KernelRegistry, Variant,
+                                    VariantUnavailable, auto_variant_order,
+                                    default_registry)
+
+__all__ = [
+    "CallSite", "KernelRegistry", "Variant", "VariantUnavailable",
+    "auto_variant_order", "default_registry",
+]

@@ -369,6 +369,90 @@ def test_seed_bank_neighbor_warm_start(tmp_path):
     assert bank2.neighbor_seeds(g, coding)[0] == (1, 0, 1)
 
 
+def test_seed_bank_size_bound_and_lru_eviction(tmp_path):
+    g = _ir_graph()
+    coding = coding_from_graph(g)
+    bank = SeedBank(str(tmp_path), max_records=4)
+    # 12 distinct records against a 4-record bound: journal must compact
+    for i in range(12):
+        bank.record(RegionGraph(list(g.regions), "ir", f"prog{i}"),
+                    coding, (i % 2, 0, 1))
+    live = bank._live()
+    assert len(live) <= 4
+    assert [r["source"] for r in live] == ["prog8", "prog9", "prog10",
+                                           "prog11"]
+    with open(bank.path) as f:
+        assert sum(1 for _ in f) <= 2 * 4 + 1   # file itself stays bounded
+
+    # LRU: a touched record outlives contemporaries it was older than
+    bank2 = SeedBank(str(tmp_path / "lru"), max_records=3)
+    bank2.record(g, coding, (1, 0, 1))                     # the survivor
+    for i in range(2):
+        bank2.record(RegionGraph(list(g.regions), "ir", f"noise{i}"),
+                     coding, (0, 1, 0))
+    assert bank2.neighbor_seeds(g, coding, limit=1) == [(1, 0, 1)]  # touch
+    bank2.record(RegionGraph(list(g.regions), "ir", "noise2"),
+                 coding, (0, 1, 0))
+    sources = [r["source"] for r in bank2._live()]
+    assert "toy" in sources and "noise0" not in sources    # LRU, not FIFO
+
+
+def test_seed_bank_cross_destination_mapping(tmp_path):
+    # a neighbor's GPU gene (binary alphabet) seeds a search over alphabets
+    # that don't contain "gpu": offloaded genes land on the new primary
+    # accelerator, reference genes stay reference
+    from repro.core import VARIANT_ALPHABET
+
+    g = _ir_graph()
+    bank = SeedBank(str(tmp_path))
+    bank.record(g, coding_from_graph(g), (1, 0, 1))        # cpu/gpu record
+    variant_coding = coding_from_graph(g, destinations=VARIANT_ALPHABET)
+    assert bank.neighbor_seeds(g, variant_coding) == [(1, 0, 1)]
+    stub_coding = coding_from_graph(g, destinations=("cpu", "fpga_stub"))
+    assert bank.neighbor_seeds(g, stub_coding) == [(1, 0, 1)]
+    # and the reverse: a variant-alphabet record seeding a binary search
+    bank2 = SeedBank(str(tmp_path / "rev"))
+    bank2.record(g, variant_coding, (2, 0, 1))             # pallas/ref/fused
+    assert bank2.neighbor_seeds(g, coding_from_graph(g)) == [(1, 0, 1)]
+
+
+def test_auto_screen_from_prior_rank_corr(tmp_path):
+    # search 1 records the surrogate's rank correlation for the program
+    # fingerprint; search 2 sees it clear the bar and screens automatically.
+    # (6 genes = 64 patterns, so a reseeded search still proposes offspring
+    # the first search never measured — the ones screening acts on.)
+    g = RegionGraph([
+        Region(f"r{i}", "loop", uses=frozenset({f"v{i}"}),
+               defs=frozenset({f"v{i}"}), offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=2 + i)
+        for i in range(6)], "ir", "wide")
+
+    def fit(values):
+        # fitness aligned with the transfer-cost surrogate -> high corr
+        return Evaluation(tuple(values),
+                          1.0 + sum(int(v) * (i + 1)
+                                    for i, v in enumerate(values)), True)
+
+    cfg = GAConfig(population=8, generations=4, seed=1,
+                   cache_dir=str(tmp_path))
+    _, ga1 = ga_search(g, fit, cfg)
+    assert ga1.screened_out == 0
+    assert math.isfinite(ga1.surrogate_rank_corr)
+    assert ga1.surrogate_rank_corr >= cfg.auto_screen_corr
+
+    logs = []
+    _, ga2 = ga_search(g, fit, GAConfig(population=8, generations=4, seed=2,
+                                        cache_dir=str(tmp_path)),
+                       log=logs.append)
+    assert ga2.screened_out > 0
+    assert any("auto-screen" in line for line in logs)
+    # explicit opt-out wins
+    _, ga3 = ga_search(g, fit, GAConfig(population=8, generations=4, seed=3,
+                                        cache_dir=str(tmp_path),
+                                        auto_screen=False))
+    assert ga3.screened_out == 0
+
+
 def test_pattern_db_seed_sets_matched_regions():
     regions = [
         Region("mm", "loop", callees=("np.matmul",), offloadable=True,
