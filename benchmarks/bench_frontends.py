@@ -115,6 +115,54 @@ def main(quick: bool = False) -> list[str]:
                         f"substituted={sub.report.substituted or '{}'}"))
         assert v.ok, f"substituted {variant} failed verification"
 
+    # --- ast substitution: the same registry variants behind python loops --
+    from repro.core.frontends import registry as fe_registry
+    from repro.core.frontends.ast_frontend import Executor
+
+    rms_src = """
+def rms_app(x, scale, n, d):
+    out = np.zeros((n, d))
+    for i in range(n):
+        ss = 0.0
+        for t in range(d):
+            ss = ss + x[i][t] * x[i][t]
+        inv = 1.0 / np.sqrt(ss / d + 1e-06)
+        for t in range(d):
+            out[i][t] = x[i][t] * inv * (1.0 + scale[t])
+    return out
+"""
+    consts = {"n": 64, "d": 32}
+    ast_inputs = dict(x=np.asarray(rng.normal(size=(64, 32))),
+                      scale=np.asarray(rng.normal(size=32)) * 0.1)
+    fe = fe_registry.get_frontend("python_ast")
+    from repro.core import OffloadConfig
+    acfg = OffloadConfig(repeats=1, options={"consts": consts})
+    ap = fe.normalize_target(rms_src, ast_inputs, acfg)
+    ag = fe.build_graph(ap, ast_inputs, acfg)
+    abundle = fe.make_fitness(ag, ap, ast_inputs, acfg)
+    assert abundle.destinations, (
+        "no registry variant bound for the ast rmsnorm site: "
+        f"{abundle.context.get('variant_fallbacks')}")
+    acoding = coding_from_graph(ag, exclude=abundle.claimed,
+                                destinations=abundle.destinations)
+    ref_env = Executor(ap, {}, hoist_transfers=False).run(**ast_inputs)
+    ref_out = np.asarray(ref_env["out"])
+    matched = [s.region for s in acoding.sites
+               if ag.by_name(s.region).meta.get("pattern")]
+    assert matched, "rmsnorm loop must match and keep its gene"
+    for gene, name in ((0, "interp"), (1, "fused_jnp"), (2, "pallas")):
+        values = tuple(gene if s.region in matched else 0
+                       for s in acoding.sites)
+        art = fe.apply_plan(ag, acoding, values, abundle)
+        art.run(**ast_inputs)                         # compile outside timing
+        dt = timeit(lambda: art.run(**ast_inputs))
+        ok = np.allclose(art.run(**ast_inputs)["out"], ref_out,
+                         rtol=1e-2, atol=1e-2)
+        rows.append(row(f"frontends.ast_substitution.{name}", dt * 1e6,
+                        f"verified={ok} "
+                        f"substituted={art.report.substituted or '{}'}"))
+        assert ok, f"ast variant {name} failed verification"
+
     if not quick:
         from repro.core import GAConfig, OffloadConfig, plan_offload
         t0 = time.perf_counter()

@@ -71,6 +71,33 @@ def main():
           f"substituted={jres.artifact.report.substituted}")
     _ = jres.artifact(q, k, v, w)            # the deliverable runs as-is
 
+    # 2c. measured python_ast plan: the SAME variant alphabet on plain
+    #     numeric Python — the matched loop nest keeps its gene, and the GA
+    #     picks between the CPython interpreter and the kernel-registry
+    #     variants (gpu_fused / gpu_pallas) by measured wall clock
+    py_src = """
+def rms_app(x, scale, n, d):
+    out = np.zeros((n, d))
+    for i in range(n):
+        ss = 0.0
+        for t in range(d):
+            ss = ss + x[i][t] * x[i][t]
+        inv = 1.0 / np.sqrt(ss / d + 1e-06)
+        for t in range(d):
+            out[i][t] = x[i][t] * inv * (1.0 + scale[t])
+    return out
+"""
+    py_inputs = dict(x=rng.standard_normal((64, 32)),
+                     scale=rng.standard_normal(32) * 0.1)
+    pres = plan_offload(py_src, py_inputs, config=OffloadConfig(
+        ga=GAConfig(population=6, generations=2, seed=0), repeats=1,
+        options={"consts": {"n": 64, "d": 32}}))
+    print(f"python_ast plan: destinations={pres.destinations} "
+          f"speedup={pres.speedup:.2f}x "
+          f"verified={pres.verification['verified']} "
+          f"substituted={pres.report.substituted}")
+    _ = pres.artifact.run(**py_inputs)       # runs under the chosen variant
+
     # 3. train a few steps under the planned ExecPlan
     data = SyntheticLMDataset(DataConfig(seq_len=64, global_batch=4,
                                          vocab=cfg.vocab, seed=0))

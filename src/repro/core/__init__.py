@@ -23,10 +23,13 @@ from repro.core.genes import (DEFAULT_ALPHABET, EXTENDED_ALPHABET,
 from repro.core.ir import Region, RegionGraph
 from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
 from repro.core.offload import (OffloadConfig, OffloadResult, Offloader,
-                                SeedBank, ga_search, plan_offload)
+                                SeedBank, ga_search, phenotype_key,
+                                plan_offload)
 from repro.core.pattern_db import Match, PatternDB, PatternRecord, default_db
 from repro.core.substitution import (SubstitutedCallable, SubstitutionEngine,
                                      SubstitutionReport)
+from repro.core.variants import (SubstitutionChoice, generic_plan_report,
+                                 resolve_variant)
 from repro.core.planner import (ModulePlanResult, PythonPlanResult,
                                 plan_module_offload, plan_python_offload)
 from repro.core.transfer_planner import Transfer, TransferPlan, plan_transfers
@@ -47,10 +50,11 @@ __all__ = [
     "destination_names", "get_destination", "modeled_cost_s",
     "register_destination",
     "SubstitutedCallable", "SubstitutionEngine", "SubstitutionReport",
+    "SubstitutionChoice", "generic_plan_report", "resolve_variant",
     "Region", "RegionGraph",
     "LoopOffloadResult", "loop_offload_pass",
     "OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
-    "ga_search", "plan_offload",
+    "ga_search", "phenotype_key", "plan_offload",
     "Match", "PatternDB", "PatternRecord", "default_db",
     "ModulePlanResult", "PythonPlanResult",
     "plan_module_offload", "plan_python_offload",

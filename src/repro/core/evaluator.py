@@ -32,6 +32,7 @@ which is true of the cost-model path).
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import json
 import math
 import os
@@ -121,6 +122,10 @@ class MeasurementCache:
 
 _SEARCH_META_FILE = "search_meta.jsonl"
 _SEARCH_META_MAX_LINES = 512
+#: default staleness horizon for rank-corr records: a fingerprint's surrogate
+#: track record from last week says little about today's machine/load, and
+#: auto-screening must never act on a stale fingerprint.
+_SEARCH_META_HORIZON_S = 7 * 24 * 3600.0
 
 
 @contextlib.contextmanager
@@ -140,19 +145,26 @@ def _file_lock(lock_path: str):
 
 
 def record_search_meta(cache_dir: str, fingerprint: str,
-                       rank_corr: float) -> None:
+                       rank_corr: float, now: Optional[float] = None,
+                       horizon_s: Optional[float] = None) -> None:
     """Journal one search's surrogate rank correlation for its program
     fingerprint — the evidence :func:`last_rank_corr` serves back so a later
     search of the same program can justify screening automatically.
 
-    Append-only with a bounded compaction: past ``_SEARCH_META_MAX_LINES``
-    the journal collapses to the newest record per fingerprint (writes
-    serialize on a sidecar flock, like the seed bank's journal)."""
+    Records are timestamped, and the journal decays: records older than the
+    staleness horizon (``horizon_s``, default one week) are compacted away,
+    as are legacy records without a timestamp (their age is unprovable).
+    Past ``_SEARCH_META_MAX_LINES`` live lines the journal additionally
+    collapses to the newest record per fingerprint (writes serialize on a
+    sidecar flock, like the seed bank's journal)."""
     if not math.isfinite(rank_corr):
         return
+    now = time.time() if now is None else float(now)
+    horizon = _SEARCH_META_HORIZON_S if horizon_s is None else float(horizon_s)
     os.makedirs(cache_dir, exist_ok=True)
     path = os.path.join(cache_dir, _SEARCH_META_FILE)
-    rec = {"fingerprint": fingerprint, "rank_corr": float(rank_corr)}
+    rec = {"fingerprint": fingerprint, "rank_corr": float(rank_corr),
+           "ts": now}
     with _file_lock(path + ".lock"):
         with open(path, "a", encoding="utf-8") as f:
             f.write(json.dumps(rec) + "\n")
@@ -161,10 +173,18 @@ def record_search_meta(cache_dir: str, fingerprint: str,
                 lines = f.readlines()
         except FileNotFoundError:
             return
-        if len(lines) <= _SEARCH_META_MAX_LINES:
+        fresh: list[str] = []
+        for line in lines:
+            try:
+                ts = json.loads(line).get("ts")
+            except json.JSONDecodeError:
+                continue
+            if isinstance(ts, (int, float)) and now - ts <= horizon:
+                fresh.append(line)
+        if len(fresh) == len(lines) and len(lines) <= _SEARCH_META_MAX_LINES:
             return
         newest: dict[str, str] = {}
-        for line in lines:
+        for line in fresh:
             try:
                 fp = json.loads(line).get("fingerprint")
             except json.JSONDecodeError:
@@ -179,8 +199,16 @@ def record_search_meta(cache_dir: str, fingerprint: str,
         os.replace(tmp, path)
 
 
-def last_rank_corr(cache_dir: str, fingerprint: str) -> Optional[float]:
-    """Most recent recorded surrogate rank correlation for a fingerprint."""
+def last_rank_corr(cache_dir: str, fingerprint: str,
+                   max_age_s: Optional[float] = None,
+                   now: Optional[float] = None) -> Optional[float]:
+    """Most recent recorded surrogate rank correlation for a fingerprint.
+
+    Records older than ``max_age_s`` (default: the one-week staleness
+    horizon) — and legacy records with no timestamp — are ignored, so
+    auto-screening can never act on a stale fingerprint."""
+    now = time.time() if now is None else float(now)
+    max_age = _SEARCH_META_HORIZON_S if max_age_s is None else float(max_age_s)
     out: Optional[float] = None
     try:
         with open(os.path.join(cache_dir, _SEARCH_META_FILE), "r",
@@ -194,6 +222,10 @@ def last_rank_corr(cache_dir: str, fingerprint: str) -> Optional[float]:
                 except json.JSONDecodeError:
                     continue  # torn concurrent write
                 if rec.get("fingerprint") == fingerprint:
+                    ts = rec.get("ts")
+                    if not isinstance(ts, (int, float)) \
+                            or now - ts > max_age:
+                        continue         # stale (or unprovably fresh)
                     corr = rec.get("rank_corr")
                     if isinstance(corr, (int, float)) \
                             and math.isfinite(corr):
@@ -258,6 +290,15 @@ class Evaluator:
         measure at most this many unmeasured chromosomes per batch (the
         rest are deferred: reported invalid/unmeasured, never cached, so a
         later generation may still measure them).
+    phenotype_key:
+        optional ``bits -> hashable`` canonicalization.  Chromosomes with
+        equal keys are *phenotype duplicates* — they decode to the same
+        program (clamped ``impl_index`` on short implementation menus,
+        predicate fallbacks) — and share one measurement: dedup, the
+        in-memory/persistent caches, and in-flight joining all key on it.
+        Results are re-labelled with the requesting chromosome's bits, so
+        the GA's bookkeeping is unaffected.  Default: identity (key by raw
+        bits, the historical behavior).
     """
 
     def __init__(self, fitness_fn: Optional[Callable[[tuple], Evaluation]],
@@ -267,9 +308,11 @@ class Evaluator:
                  surrogate: Optional[Callable[[tuple], float]] = None,
                  screen_top_k: Optional[int] = None,
                  executor: Optional[Any] = None,
-                 dispatch_fn: Optional[Callable[[tuple], Evaluation]] = None):
+                 dispatch_fn: Optional[Callable[[tuple], Evaluation]] = None,
+                 phenotype_key: Optional[Callable[[tuple], Any]] = None):
         self.fitness_fn = fitness_fn
         self.workers = max(0, int(workers))
+        self._key = phenotype_key or (lambda bits: bits)
         # external executor (e.g. a spawn-based ProcessPoolExecutor whose
         # workers rebuilt the fitness in an initializer): XLA serializes LLVM
         # compilation process-wide, so compile-bound measurement only scales
@@ -300,28 +343,30 @@ class Evaluator:
         if cache_dir:
             self._store = MeasurementCache(cache_dir, fingerprint or "anon")
             persisted = self._store.load()
-            self._cache.update(persisted)
-            self._persisted_unseen = set(persisted)
+            for bits, ev in persisted.items():
+                self._cache[self._key(bits)] = ev
+            self._persisted_unseen = set(self._cache)
         else:
             self._persisted_unseen = set()
 
     # -- cache interface ----------------------------------------------------
 
     def is_measured(self, bits: Sequence[int]) -> bool:
-        """True if this chromosome already has a measurement (memory or disk).
-        Used by duplicate-avoiding offspring generation."""
-        return tuple(bits) in self._cache
+        """True if this chromosome (or a phenotype-equivalent one) already
+        has a measurement (memory or disk).  Used by duplicate-avoiding
+        offspring generation."""
+        return self._key(tuple(bits)) in self._cache
 
     @property
     def unique_measured(self) -> int:
         return len(self._cache)
 
-    def _lookup(self, bits: tuple) -> Optional[Evaluation]:
-        ev = self._cache.get(bits)
+    def _lookup(self, key) -> Optional[Evaluation]:
+        ev = self._cache.get(key)
         if ev is None:
             return None
-        if bits in self._persisted_unseen:
-            self._persisted_unseen.discard(bits)
+        if key in self._persisted_unseen:
+            self._persisted_unseen.discard(key)
             self.stats.persistent_hits += 1
         else:
             self.stats.cache_hits += 1
@@ -338,7 +383,7 @@ class Evaluator:
                 score = None   # loses calibration data, never a measurement
         with self._lock:
             self.stats.measurements += 1
-            self._cache[bits] = ev
+            self._cache[self._key(bits)] = ev
             if score is not None:
                 self._surrogate_pairs.append((score, ev.time_s))
         if self._store is not None:
@@ -410,43 +455,51 @@ class Evaluator:
         """
         t0 = time.perf_counter()
         pop = [tuple(int(b) for b in p) for p in population]
-        results: dict[tuple, Evaluation] = {}
-        to_measure: list[tuple] = []   # unique, in first-appearance order
-        joined: dict[tuple, Future] = {}
+        # everything below keys on the phenotype key (identity by default):
+        # decode-equivalent chromosomes share one measurement
+        keys = [self._key(bits) for bits in pop]
+        results: dict[Any, Evaluation] = {}
+        to_measure: list[tuple] = []   # representative bits per unique key,
+        measure_keys: list = []        # in first-appearance order
+        joined: dict[Any, Future] = {}
         seen: set = set()
 
-        dup_pending: dict[tuple, int] = {}
+        dup_pending: dict[Any, int] = {}
         with self._lock:
-            for bits in pop:
-                if bits in seen:
+            for bits, key in zip(pop, keys):
+                if key in seen:
                     # within-batch duplicate: one measurement serves all.
-                    # Attribution for still-pending bits waits until we know
+                    # Attribution for still-pending keys waits until we know
                     # whether they were measured or screened out (a screened
                     # chromosome has no measurement to save).
-                    if bits in results:
+                    if key in results:
                         self.stats.cache_hits += 1
                     else:
-                        dup_pending[bits] = dup_pending.get(bits, 0) + 1
+                        dup_pending[key] = dup_pending.get(key, 0) + 1
                     continue
-                seen.add(bits)
-                ev = self._lookup(bits)
+                seen.add(key)
+                ev = self._lookup(key)
                 if ev is not None:
-                    results[bits] = ev
-                elif bits in self._inflight:
+                    results[key] = ev
+                elif key in self._inflight:
                     self.stats.inflight_hits += 1
-                    joined[bits] = self._inflight[bits]
+                    joined[key] = self._inflight[key]
                 else:
                     to_measure.append(bits)
+                    measure_keys.append(key)
 
         # --- surrogate pre-screen: rank, measure only the top-k ------------
-        deferred: list[tuple] = []
+        deferred: list[tuple[Any, tuple]] = []
         if (self.screen_top_k is not None and self.surrogate is not None
                 and len(to_measure) > self.screen_top_k):
             ranked = sorted(range(len(to_measure)),
                             key=lambda i: (self.surrogate(to_measure[i]), i))
             keep = set(ranked[: self.screen_top_k])
-            deferred = [b for i, b in enumerate(to_measure) if i not in keep]
+            deferred = [(k, b) for i, (k, b)
+                        in enumerate(zip(measure_keys, to_measure))
+                        if i not in keep]
             to_measure = [b for i, b in enumerate(to_measure) if i in keep]
+            measure_keys = [k for i, k in enumerate(measure_keys) if i in keep]
             self.stats.screened_out += len(deferred)
 
         # --- dispatch -------------------------------------------------------
@@ -454,20 +507,22 @@ class Evaluator:
         # concurrent callers (serial or pooled) join it instead of repeating
         # it.  The screen above ran outside the lock, so re-check here: a
         # concurrent batch may have announced (or finished) one of ours.
-        futures: dict[tuple, Future] = {}
+        futures: dict[Any, Future] = {}
+        fut_bits: dict[Any, tuple] = {}
         with self._lock:
             announced: list[tuple] = []
-            for bits in to_measure:
-                ev = self._lookup(bits)
+            for bits, key in zip(to_measure, measure_keys):
+                ev = self._lookup(key)
                 if ev is not None:
-                    results[bits] = ev
-                elif bits in self._inflight:
+                    results[key] = ev
+                elif key in self._inflight:
                     self.stats.inflight_hits += 1
-                    joined[bits] = self._inflight[bits]
+                    joined[key] = self._inflight[key]
                 else:
                     fut: Future = Future()
-                    self._inflight[bits] = fut
-                    futures[bits] = fut
+                    self._inflight[key] = fut
+                    futures[key] = fut
+                    fut_bits[key] = bits
                     announced.append(bits)
             to_measure = announced
         try:
@@ -476,32 +531,33 @@ class Evaluator:
                 # Only results the worker actually returned are recorded and
                 # persisted — a dead worker / broken pool is transient infra
                 # failure, not a measurement, and must not poison the cache.
-                raw = [(bits, self._executor.submit(self._dispatch_fn, bits))
-                       for bits in to_measure]
-                for bits, rf in raw:
+                raw = [(key, bits,
+                        self._executor.submit(self._dispatch_fn, bits))
+                       for key, bits in fut_bits.items()]
+                for key, bits, rf in raw:
                     try:
                         ev = self._record(bits, rf.result())
                     except Exception as e:  # noqa: BLE001 — worker died etc.
                         ev = Evaluation(bits, float("inf"), False,
                                         {"error": f"{type(e).__name__}: {e}"[:300],
                                          "transient": True})
-                    futures[bits].set_result(ev)
+                    futures[key].set_result(ev)
             elif self.workers > 1 and len(to_measure) > 1:
                 pool = self._ensure_pool()
-                for bits in to_measure:
-                    pool.submit(self._run_measure, bits, futures[bits])
+                for key, bits in fut_bits.items():
+                    pool.submit(self._run_measure, bits, futures[key])
             else:
-                for bits in to_measure:
-                    self._run_measure(bits, futures[bits])
+                for key, bits in fut_bits.items():
+                    self._run_measure(bits, futures[key])
             # let every dispatched measurement finish before collecting, so a
             # stored exception can't abort the batch while siblings still run
             # (the abandoned-future cleanup below must never race a worker)
             _wait_futures(list(futures.values()))
-            for bits, fut in futures.items():
-                results[bits] = fut.result()
+            for key, fut in futures.items():
+                results[key] = fut.result()
         finally:
             with self._lock:
-                for bits, fut in futures.items():
+                for key, fut in futures.items():
                     # resolve anything still pending (e.g. the serial loop
                     # aborted on an earlier chromosome) so concurrent
                     # callers joined on these futures don't hang forever
@@ -509,25 +565,32 @@ class Evaluator:
                         fut.set_exception(
                             RuntimeError("measurement abandoned: batch "
                                          "aborted before this chromosome"))
-                    self._inflight.pop(bits, None)
+                    self._inflight.pop(key, None)
 
-        for bits, fut in joined.items():
-            results[bits] = fut.result()
-        for bits in deferred:
+        for key, fut in joined.items():
+            results[key] = fut.result()
+        for key, bits in deferred:
             # deferred chromosomes are NOT measurements: zero fitness this
             # generation, absent from the cache so they can be measured later
-            results[bits] = Evaluation(
+            results[key] = Evaluation(
                 bits, float("inf"), False, {"screened": True})
 
         if dup_pending:
             with self._lock:
-                for bits, n in dup_pending.items():
-                    ev = results.get(bits)
+                for key, n in dup_pending.items():
+                    ev = results.get(key)
                     if ev is not None and not ev.detail.get("screened"):
                         self.stats.inflight_hits += n
 
         self.stats.eval_wall_s += time.perf_counter() - t0
-        return [results[bits] for bits in pop]
+        out: list[Evaluation] = []
+        for bits, key in zip(pop, keys):
+            ev = results[key]
+            # a phenotype hit carries the measured sibling's bits: re-label
+            # with the requesting chromosome so GA bookkeeping stays exact
+            out.append(ev if tuple(ev.bits) == bits
+                       else dataclasses.replace(ev, bits=bits))
+        return out
 
     def _ensure_pool(self) -> ThreadPoolExecutor:
         with self._lock:

@@ -15,6 +15,14 @@ Loops that fail to compile under the offload rewrite are excluded from the
 gene (paper: エラーが出る for 文は GA の対象外とする).  The executor counts
 host↔device transfers and consults the transfer planner to hoist
 loop-invariant transfers out of interpreted loops (paper's 一括転送).
+
+Matched loop nests whose pattern has kernel-registry variants additionally
+keep their gene over the *variant alphabet*: role inference concretizes the
+loop to the same :class:`~repro.kernels.registry.CallSite` the jaxpr engine
+binds against, the shared resolver (:mod:`repro.core.variants`) applies
+each variant's availability predicate, and the bound adapters become the
+region's lib-call menu — gene value k runs implementation k, exactly as on
+the jaxpr path.
 """
 from __future__ import annotations
 
@@ -423,7 +431,14 @@ class Executor:
                  lib_calls: Optional[dict] = None):
         self.p = program
         self.impl = impl
-        self.lib_calls = lib_calls or {}  # region -> (callable, in_names, out_names)
+        # region -> {impl id: (callable, in_names, out_names)}: the variant
+        # menu of library implementations for a matched block.  The legacy
+        # single-implementation form (region -> triple) normalizes to a
+        # one-entry menu under the historical "lib" id.
+        self.lib_calls: dict[str, dict] = {}
+        for region, entry in (lib_calls or {}).items():
+            self.lib_calls[region] = dict(entry) if isinstance(entry, dict) \
+                else {"lib": entry}
         self.hoist = hoist_transfers
         self.stats = ExecStats()
         self.globals = {"np": np, "math": __import__("math"),
@@ -472,7 +487,11 @@ class Executor:
     # --- execution ------------------------------------------------------------
     def run(self, **inputs) -> dict:
         env = dict(self.p.consts)
-        env.update(inputs)
+        # interpreted statements write arrays IN PLACE (a[i] = v); copy array
+        # inputs so repeated measurement runs (and the calibration run before
+        # them) start from identical state instead of each other's leftovers
+        env.update({k: v.copy() if isinstance(v, np.ndarray) else v
+                    for k, v in inputs.items()})
         for name in list(env):
             self._ver[name] = 0
         self._exec_nodes(self.p.tree_nodes, env)
@@ -485,15 +504,18 @@ class Executor:
             else:
                 if self.pre_loop_hook is not None:
                     self.pre_loop_hook(node.region, env)
-                if node.region in self.lib_calls and \
-                        self.impl.get(node.region) == "lib":
-                    self._exec_lib(node, env)
+                menu = self.lib_calls.get(node.region)
+                chosen = self.impl.get(node.region)
+                if menu and chosen in menu:
+                    self._exec_lib(node, env, menu[chosen])
                     continue
                 region = self.p.graph.by_name(node.region)
                 offload = region.offloadable and self.impl.get(node.region) == "jit"
                 if offload:
                     self._exec_offloaded(node, env)
                 else:
+                    # includes the fallback for a variant that did not bind:
+                    # the reference interpreter is the ast "ref" path
                     self._exec_interp_loop(node, env)
 
     def _exec_stmts(self, node: _Node, env: dict) -> None:
@@ -522,10 +544,10 @@ class Executor:
             self._ver[v] = self._ver.get(v, 0) + 1
             self._dev_cache[v] = (self._ver[v], o)
 
-    def _exec_lib(self, node: _Node, env: dict) -> None:
+    def _exec_lib(self, node: _Node, env: dict, entry: tuple) -> None:
         """Function-block offload: run a device-tuned library implementation
         in place of the matched block (paper §4.2.1)."""
-        fn, in_names, out_names = self.lib_calls[node.region]
+        fn, in_names, out_names = entry
         args = [self._to_device(v, env) for v in in_names]
         outs = fn(*args)
         self.stats.jit_calls += 1
@@ -605,6 +627,213 @@ _AST_ADAPTERS: dict[str, Callable] = {
 
 
 # ---------------------------------------------------------------------------
+# registry-variant lib-call sites (kernel substitution for the ast path)
+# ---------------------------------------------------------------------------
+#
+# A matched loop nest concretizes to the same CallSite the jaxpr engine
+# binds variants against: role inference maps the region's live arrays onto
+# the pattern's signature — structurally where the loop AST proves the role
+# (q is the array rows-indexed by the outer loop variable, log_a the scan
+# input inside exp(...)), by in-loop appearance order otherwise — the
+# interface-matching step the paper's library substitution performs.  The
+# environment snapshot supplies the abstract values, and the shared
+# resolution rule (repro.core.variants.resolve_variant) applies every
+# variant's availability predicate.  A bound variant becomes one entry of
+# the region's lib-call menu; anything role inference or the avals cannot
+# prove (a mis-assigned operand, a non-causal attention loop against the
+# causal kernels) is caught by the per-measurement verifier, the paper's
+# PCAST flow — the chromosome measures invalid and the site stays on its
+# reference path.
+
+
+def _walk_program_order(node: ast.AST):
+    """DFS pre-order (ast.walk is BFS, which scrambles appearance order)."""
+    yield node
+    for child in ast.iter_child_nodes(node):
+        yield from _walk_program_order(child)
+
+
+def _loop_order(loop: ast.AST, names) -> list:
+    """`names` by first occurrence as a Name node inside the loop subtree —
+    token-exact, unlike substring search over the source."""
+    pos: dict[str, int] = {}
+    for i, n in enumerate(_walk_program_order(loop)):
+        if isinstance(n, ast.Name) and n.id in names and n.id not in pos:
+            pos[n.id] = i
+    return sorted(names, key=lambda v: pos.get(v, 1 << 30))
+
+
+def _sub_base(node: ast.AST) -> Optional[str]:
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _first_index_names(loop: ast.AST, arr: str) -> set:
+    """Name ids used as `arr`'s leading subscript index inside the loop."""
+    out: set = set()
+    for n in ast.walk(loop):
+        if isinstance(n, ast.Subscript) and isinstance(n.value, ast.Name) \
+                and n.value.id == arr and isinstance(n.slice, ast.Name):
+            out.add(n.slice.id)
+    return out
+
+
+def _mult_partners(loop: ast.AST, arr: str) -> set:
+    """Arrays that share a product (BinOp Mult subtree) with `arr`."""
+    partners: set = set()
+    for n in ast.walk(loop):
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult):
+            arrs = {_sub_base(m) for m in ast.walk(n)
+                    if isinstance(m, ast.Subscript)}
+            if arr in arrs:
+                partners |= arrs - {arr, None}
+    return partners
+
+
+def _used_inside_exp(loop: ast.AST, arr: str) -> bool:
+    for n in ast.walk(loop):
+        if isinstance(n, ast.Call):
+            fname = n.func.attr if isinstance(n.func, ast.Attribute) \
+                else getattr(n.func, "id", "")
+            if fname == "exp" and any(
+                    _sub_base(m) == arr for a in n.args
+                    for m in ast.walk(a) if isinstance(m, ast.Subscript)):
+                return True
+    return False
+
+
+def _snapshot_arrays(region, node: "_Node", env: dict, *, read_only: bool,
+                     ndim: int) -> list:
+    pool = (region.uses - region.defs) if read_only else region.defs
+    names = [v for v in pool
+             if isinstance(env.get(v), (np.ndarray, jax.Array))
+             and env[v].ndim == ndim]
+    return _loop_order(node.loop, names)
+
+
+def _aval_of(value) -> jax.ShapeDtypeStruct:
+    # canonicalize: interpreted numpy defaults to float64, which jax (x64
+    # disabled) would silently demote mid-trace and fail the output check
+    return jax.ShapeDtypeStruct(
+        np.shape(value), jax.dtypes.canonicalize_dtype(value.dtype))
+
+
+def _site_attention(region, node, env):
+    from repro.kernels.registry import VariantUnavailable
+    ins = _snapshot_arrays(region, node, env, read_only=True, ndim=2)
+    outs = _snapshot_arrays(region, node, env, read_only=False, ndim=2)
+    if len(ins) != 3 or len(outs) != 1:
+        raise VariantUnavailable(
+            f"attention site needs (q, k, v) -> out arrays, found "
+            f"{len(ins)} in / {len(outs)} out")
+    # structural roles: q is rows-indexed by the outer loop variable only;
+    # k shares the score product with q; v is the remaining operand.  An
+    # attention loop the structure cannot prove keeps appearance order
+    # (the verifier rejects a wrong assignment at measurement time).
+    loop = node.loop
+    outer = loop.target.id if isinstance(loop.target, ast.Name) else None
+    if outer is not None:
+        qs = [a for a in ins if _first_index_names(loop, a) == {outer}]
+        rest = [a for a in ins if a not in qs]
+        if len(qs) == 1 and len(rest) == 2:
+            ks = [a for a in rest if qs[0] in _mult_partners(loop, a)]
+            if len(ks) == 1:
+                ins = [qs[0], ks[0],
+                       rest[0] if rest[1] == ks[0] else rest[1]]
+    return ins, outs, "call", {}
+
+
+def _site_rmsnorm(region, node, env):
+    from repro.kernels.registry import VariantUnavailable
+    xs = _snapshot_arrays(region, node, env, read_only=True, ndim=2)
+    scales = _snapshot_arrays(region, node, env, read_only=True, ndim=1)
+    outs = _snapshot_arrays(region, node, env, read_only=False, ndim=2)
+    if len(xs) != 1 or len(scales) != 1 or len(outs) != 1:
+        raise VariantUnavailable(
+            f"rmsnorm site needs (x, scale) -> out arrays, found "
+            f"{len(xs)}/{len(scales)} in / {len(outs)} out")
+    return [xs[0], scales[0]], outs, "call", {}
+
+
+def _site_recurrence(region, node, env):
+    from repro.kernels.registry import VariantUnavailable
+    xs = _snapshot_arrays(region, node, env, read_only=True, ndim=2)
+    carries = [v for v in region.uses & region.defs
+               if isinstance(env.get(v), (np.ndarray, jax.Array))
+               and env[v].ndim == 1]
+    ys = [v for v in _snapshot_arrays(region, node, env, read_only=False,
+                                      ndim=2) if v not in xs]
+    if len(xs) != 2 or len(carries) != 1 or len(ys) != 1:
+        raise VariantUnavailable(
+            f"recurrence site needs carry + (log_a, b) -> ys, found "
+            f"xs={len(xs)} carry={len(carries)} ys={len(ys)}")
+    # structural roles: log_a is the xs operand inside exp(...) — the decay
+    # coefficient of h = exp(log_a) * h + b; appearance order otherwise
+    in_exp = [a for a in xs if _used_inside_exp(node.loop, a)]
+    if len(in_exp) == 1:
+        xs = [in_exp[0], xs[0] if xs[1] == in_exp[0] else xs[1]]
+    h = carries[0]
+    # scan-site signature: inputs (carry, xs...), outputs (carry, ys);
+    # the adapters serve the final carry from ys[-1]
+    params = {"num_consts": 0, "num_carry": 1,
+              "length": int(env[xs[0]].shape[0]), "reverse": False}
+    return [h] + xs, [h, ys[0]], "scan", params
+
+
+#: pattern -> (region, env, source) -> (in_names, out_names, kind, params)
+_VARIANT_SITE_BUILDERS: dict[str, Callable] = {
+    "softmax_attention": _site_attention,
+    "rmsnorm": _site_rmsnorm,
+    "linear_recurrence": _site_recurrence,
+}
+
+
+def resolve_lib_variants(region, pattern: str, env: dict,
+                         program: "PyProgram",
+                         registry=None, backend: Optional[str] = None
+                         ) -> tuple[dict, dict]:
+    """Bind every registry variant of ``pattern`` against the region.
+
+    Returns ``(menu, fallbacks)``: ``menu`` maps bound variant names to
+    executor lib-call entries ``(callable, in_names, out_names)``,
+    ``fallbacks`` maps refused names to the predicate's reason — exactly
+    the record the jaxpr engine keeps, so both frontends report
+    substitution the same way.
+    """
+    from repro.core.variants import resolve_variant
+    from repro.kernels.registry import (CallSite, VariantUnavailable,
+                                        default_registry)
+
+    registry = registry or default_registry()
+    backend = backend or jax.default_backend()
+    builder = _VARIANT_SITE_BUILDERS.get(pattern)
+    if builder is None:
+        return {}, {"site": f"no ast site builder for pattern {pattern!r}"}
+    try:
+        node = program._find_loop(region.name)
+        in_names, out_names, kind, params = builder(region, node, env)
+    except (VariantUnavailable, KeyError) as e:
+        return {}, {"site": str(e)}
+    site = CallSite(
+        pattern=pattern, kind=kind,
+        in_avals=tuple(_aval_of(env[v]) for v in in_names),
+        out_avals=tuple(_aval_of(env[v]) for v in out_names),
+        out_used=(True,) * len(out_names),
+        params=params, backend=backend)
+    menu: dict[str, tuple] = {}
+    fallbacks: dict[str, str] = {}
+    for name in registry.variant_names(pattern):
+        adapter, chosen, why = resolve_variant(site, name, registry=registry,
+                                               backend=backend)
+        if adapter is not None:
+            menu[chosen] = (adapter, list(in_names), list(out_names))
+        else:
+            fallbacks[name] = why
+    return menu, fallbacks
+
+
+# ---------------------------------------------------------------------------
 # the Frontend adapter (repro.core.frontends.registry protocol)
 # ---------------------------------------------------------------------------
 
@@ -615,8 +844,11 @@ class PyOffloadArtifact:
 
     program: PyProgram
     impl: dict                       # region -> implementation id
-    lib_calls: dict                  # region -> (callable, in_names, out_names)
+    lib_calls: dict                  # region -> variant menu (or the legacy
+                                     # (callable, in_names, out_names) triple)
     hoist_transfers: bool = True
+    report: Optional[Any] = None     # SubstitutionReport: what runs where
+                                     # and why the rest fell back
 
     def executor(self) -> Executor:
         return Executor(self.program, self.impl,
@@ -634,7 +866,12 @@ class PyOffloadArtifact:
 class AstFrontend:
     """Python-source frontend for the unified pipeline: parse with ``ast``,
     measure with the interpreting Executor (wall clock, PCAST-style
-    verification), substitute device libraries for matched blocks."""
+    verification), substitute device libraries for matched blocks.
+
+    Matched blocks with kernel-registry variants stay in the gene and the
+    GA selects the implementation (``VARIANT_ALPHABET`` proposed via
+    ``FitnessBundle.destinations``); blocks with a single library adapter
+    (matmul, fft) keep the legacy measured-combination claim."""
 
     name = "python_ast"
 
@@ -699,17 +936,54 @@ class AstFrontend:
         # --- function-block offload first (paper §4.2) ---------------------
         block = block_offload_pass(graph=program.graph, db=db,
                                    confirm=config.confirm)
+
+        # registry-variant sites: a matched block whose pattern has
+        # executable kernel-registry variants stays IN the gene (exactly
+        # like the measured jaxpr path) with the variant menu as its extra
+        # implementations — the GA picks which code runs, and the paper's
+        # measure-replacements-on/off step becomes part of the search.
+        from repro.kernels.registry import default_registry
+        registry = config.options.get("registry") or default_registry()
+        variant_sites: dict[str, dict] = {}
+        variant_fallbacks: dict[str, dict] = {}
         candidates = {}
         for bo in block.offloads:
-            adapter = _AST_ADAPTERS.get(bo.pattern)
-            if adapter is None:
-                continue
             envs = snaps.get(bo.region)
             if envs is None:
                 continue
+            region = program.graph.by_name(bo.region)
+            names = registry.variant_names(bo.pattern)
+            if names and bo.pattern in _VARIANT_SITE_BUILDERS:
+                menu, fails = resolve_lib_variants(
+                    region, bo.pattern, envs, program, registry=registry)
+                variant_fallbacks[bo.region] = fails
+                if menu:
+                    variant_sites[bo.region] = menu
+                    region.meta["pattern"] = bo.pattern
+                    region.meta["pattern_match"] = {"how": bo.how,
+                                                    "score": round(bo.score, 4)}
+                    # a variant site needs no jit path of its own: the menu
+                    # is its accelerated implementation set, the interpreter
+                    # its reference — it joins the gene even when the loop
+                    # itself failed to compile under the offload rewrite
+                    region.offloadable = True
+                    region.meta.pop("offload_error", None)
+                    # only BOUND variants enter the menu: an unbound name in
+                    # the gene would decode to a variant label while running
+                    # the interpreter — a second, mislabeled measurement of
+                    # the gene-0 phenotype that could win on timing noise
+                    region.alternatives = ("interp",) + tuple(
+                        n for n in names if n in menu)
+                    log(f"block {bo.region} ({bo.pattern}): variants "
+                        f"{sorted(menu)} join the gene")
+                    continue
+                log(f"block {bo.region} ({bo.pattern}): no variant bound: "
+                    f"{fails}")
+            adapter = _AST_ADAPTERS.get(bo.pattern)
+            if adapter is None:
+                continue
             try:
-                candidates[bo.region] = adapter(
-                    program.graph.by_name(bo.region), envs, program.source)
+                candidates[bo.region] = adapter(region, envs, program.source)
             except ValueError as e:
                 log(f"block {bo.region} ({bo.pattern}): adapter failed: {e}")
 
@@ -730,12 +1004,15 @@ class AstFrontend:
                 best_time, best_lib = ev.time_s, lib
         block_impl = {k: "lib" for k in best_lib}
 
-        # claimed regions (and their descendants) leave the gene
+        # claimed regions (and their descendants) leave the gene; a variant
+        # site keeps its own gene — the GA picks its implementation — but
+        # claims its descendants (the nested loops it replaces wholesale)
         claimed = set(best_lib)
+        roots = set(best_lib) | set(variant_sites)
         for r in program.graph.regions:
             p_ = r.parent
             while p_ is not None:
-                if p_ in claimed:
+                if p_ in roots:
                     claimed.add(r.name)
                     break
                 p_ = program.graph.by_name(p_).parent
@@ -747,36 +1024,81 @@ class AstFrontend:
         shapes = {k: getattr(v, "shape", ()) for k, v in sorted(inputs.items())}
         block_patterns = sorted((bo.region, bo.pattern) for bo in block.offloads
                                 if bo.region in best_lib)
+        variants_sig = sorted((r, tuple(sorted(m)))
+                              for r, m in variant_sites.items())
         cache_extra = (
             f"src={hashlib.sha256(program.source.encode()).hexdigest()[:12]}"
             f"|consts={sorted(program.consts.items())}"
             f"|shapes={sorted(shapes.items())}"
             f"|block={block_patterns}"
+            f"|variants={variants_sig}"
             f"|hoist={config.hoist_transfers}|repeats={config.repeats}"
             f"|host={platform.node()}|ncpu={os.cpu_count()}"
             f"|dev={jax.default_backend()}|wallclock")
+
+        # the full lib-call table: legacy single-implementation claims plus
+        # the per-region variant menus the genes select from
+        lib_all: dict[str, dict] = {k: {"lib": v} for k, v in best_lib.items()}
+        lib_all.update(variant_sites)
 
         def fitness_factory(coding):
             def fitness(values: tuple):
                 impl = dict(block_impl)
                 impl.update(coding.decode(values))
-                _spec["impl"], _spec["lib"] = impl, best_lib
+                _spec["impl"], _spec["lib"] = impl, lib_all
                 return wall_fit(tuple(values))
             return fitness
 
+        from repro.core.genes import VARIANT_ALPHABET
         return FitnessBundle(
             fitness_factory=fitness_factory,
             block=block, claimed=claimed, base_impl=block_impl,
             cache_extra=cache_extra, serial_only=True, measured=True,
-            context={"program": program, "lib_calls": best_lib,
+            # variant sites make the gene an implementation choice, so the
+            # frontend proposes the variant alphabet; plain programs keep
+            # the paper's binary interp/jit gene
+            destinations=VARIANT_ALPHABET if variant_sites else None,
+            context={"program": program, "lib_calls": lib_all,
+                     "variant_sites": variant_sites,
+                     "variant_fallbacks": variant_fallbacks,
                      "baseline": baseline, "block_time_s": best_time,
                      "out_names": out_names,
                      "hoist": config.hoist_transfers})
 
     def apply_plan(self, graph, coding, values, bundle) -> PyOffloadArtifact:
         from repro.core.frontends.registry import decoded_pattern
+        from repro.core.variants import (_REF_IMPLS, SubstitutionChoice,
+                                         SubstitutionReport)
+
         impl = decoded_pattern(coding, values, bundle.base_impl)
+        menus = bundle.context.get("variant_sites", {})
+        fails = bundle.context.get("variant_fallbacks", {})
+        report = SubstitutionReport()
+        for s in coding.sites:
+            region = s.region
+            req = str(impl.get(region, s.ref_impl))
+            pattern = graph.by_name(region).meta.get("pattern")
+            if req in _REF_IMPLS:
+                report.choices.append(SubstitutionChoice(
+                    region, pattern, "ref", "ref", "requested"))
+            elif region in menus and req in menus[region]:
+                report.choices.append(SubstitutionChoice(
+                    region, pattern, req, req, ""))
+            elif region in menus:
+                why = fails.get(region, {}).get(
+                    req, f"variant {req!r} did not bind")
+                report.choices.append(SubstitutionChoice(
+                    region, pattern, req, "ref", why))
+            else:                        # the paper's plain jit offload path
+                report.choices.append(SubstitutionChoice(
+                    region, pattern, req, req, ""))
+        for region in sorted(bundle.base_impl):
+            report.choices.append(SubstitutionChoice(
+                region, graph.by_name(region).meta.get("pattern"),
+                "lib", "lib", "block-pass claim"))
+        bundle.context["substitution_report"] = report
         return PyOffloadArtifact(
             program=bundle.context["program"], impl=impl,
             lib_calls=bundle.context["lib_calls"],
-            hoist_transfers=bundle.context.get("hoist", True))
+            hoist_transfers=bundle.context.get("hoist", True),
+            report=report)

@@ -4,7 +4,10 @@ The third "source language" (the declarative one, playing Java's role in
 the paper's trio): a model described by an :class:`ArchConfig` lowers to
 regions named after its offloadable sites — the ExecPlan knobs applicable to
 that architecture family.  Gene bit k toggles site k between its reference
-and offloaded implementation, exactly as the paper toggles loop statements.
+and offloaded implementation, exactly as the paper toggles loop statements;
+sites with more than two shipped implementations (``ExecPlan.SITE_VARIANTS``,
+e.g. the rg-LRU step/assoc/chunked scans) expose the full menu, so a gene
+over the variant alphabet selects *which* implementation runs.
 """
 from __future__ import annotations
 
@@ -37,7 +40,11 @@ def build_graph(cfg: ArchConfig) -> RegionGraph:
     for field, applicable, callees in _SITE_DEFS:
         if not applicable(cfg):
             continue
-        ref, off = _REF_OFFLOAD[field]
+        # full implementation menu where the executors ship one (ExecPlan.
+        # SITE_VARIANTS, e.g. rglru step/assoc/chunked): genes then select
+        # WHICH implementation runs; binary sites clamp at their pair
+        alternatives = ExecPlan.SITE_VARIANTS.get(field) \
+            or _REF_OFFLOAD[field]
         regions.append(Region(
             name=field,
             kind="loop" if field in ("attn_impl", "rglru_impl", "wkv_impl",
@@ -47,7 +54,7 @@ def build_graph(cfg: ArchConfig) -> RegionGraph:
             callees=callees,
             feature_vector={},
             offloadable=True,
-            alternatives=(ref, off),
+            alternatives=tuple(alternatives),
             meta={"plan_field": field},
         ))
     return RegionGraph(regions, "module", cfg.arch_id)
@@ -95,10 +102,14 @@ class ModuleFrontend:
     ``lower_fn`` (options: lower_fn, n_devices, model_flops, hbm_budget,
     base_plan), else the static-cost stub.
 
-    The static fallback carries no real signal for module graphs: ExecPlan
-    impl values never produce host<->device transfers in the IR transfer
-    planner, so the surrogate reduces to its more-offload tiebreak and the
-    search converges to all-offload.  That makes the fallback a fast
+    The static fallback carries only structural signal for module graphs:
+    accelerated ExecPlan *compute* values count as device placements in the
+    IR transfer planner (``DEVICE_IMPLS``), so the static cost charges each
+    offloaded compute site its parameter/input uploads and those genes stay
+    conservative.  Schedule knobs (remat / gather_mode) are deliberately
+    transfer-free there, so they decay to the surrogate's more-offload
+    tiebreak and converge to their non-reference values.  Either way this
+    makes the fallback a fast
     structural smoke path (graph/coding/pipeline round-trips without a
     mesh); for decisions that matter, pass ``lower_fn`` so chromosomes are
     scored by compiled artifacts."""
@@ -124,12 +135,15 @@ class ModuleFrontend:
         lower_fn = opts.get("lower_fn")
         context = {"base_plan": base}
 
+        from repro.core.genes import VARIANT_ALPHABET
+
         if lower_fn is None:
             return FitnessBundle(
                 fitness_factory=static_cost_fitness_factory(graph),
                 block=block, claimed=exclude,
                 cache_extra=f"arch={cfg.arch_id}|staticcost",
-                measured=False, context=context)
+                measured=False, destinations=VARIANT_ALPHABET,
+                context=context)
 
         n_devices = int(opts.get("n_devices", 1))
         model_flops = float(opts.get("model_flops", 0.0))
@@ -150,7 +164,11 @@ class ModuleFrontend:
                        f"|base={base}|costmodel")
         return FitnessBundle(
             fitness_factory=fitness_factory, block=block, claimed=exclude,
-            cache_extra=cache_extra, measured=True, context=context)
+            cache_extra=cache_extra, measured=True,
+            # variant knobs (SITE_VARIANTS) make the gene an implementation
+            # choice: propose the 3-letter variant alphabet so chromosomes
+            # reach the extra implementations (binary sites clamp)
+            destinations=VARIANT_ALPHABET, context=context)
 
     def apply_plan(self, graph: RegionGraph, coding, values, bundle
                    ) -> ExecPlan:

@@ -74,6 +74,12 @@ class GAConfig:
                                       # ga_search sets screen_top_k to
                                       # population // 2 by itself
     auto_screen_corr: float = 0.6     # evidence bar for auto-screening
+    auto_screen_horizon_s: float = 7 * 24 * 3600.0
+                                      # staleness horizon for that evidence:
+                                      # rank-corr records older than this are
+                                      # ignored (and compacted away), so
+                                      # auto-screening never acts on a stale
+                                      # fingerprint
     dup_retries: int = 3              # re-mutation attempts per duplicate child
 
 

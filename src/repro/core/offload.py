@@ -38,14 +38,43 @@ from repro.core.genes import (DEFAULT_ALPHABET, GeneCoding, coding_from_graph,
                               get_destination, modeled_cost_s)
 from repro.core.ir import RegionGraph
 from repro.core.transfer_planner import TransferPlan, plan_transfers
+from repro.core.variants import generic_plan_report
 
 __all__ = ["OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
-           "ga_search", "plan_offload"]
+           "ga_search", "phenotype_key", "plan_offload"]
 
 
 # ---------------------------------------------------------------------------
 # GA search stage (shared with the legacy loop_offload_pass shim)
 # ---------------------------------------------------------------------------
+
+
+def phenotype_key(coding: GeneCoding) -> Callable[[tuple], Any]:
+    """Canonicalize a chromosome to its *phenotype*: the decoded
+    region -> implementation map plus any cost-only destination assignment.
+
+    Chromosomes that decode to the same program (clamped ``impl_index`` on
+    regions with short implementation menus, alphabet entries aliasing the
+    same impl) are measured once per *program*, not once per bit string —
+    the ROADMAP's phenotype-dedup.  Cost-only destinations decode to the
+    reference impl but charge a modeled cost, so their assignment is part
+    of the key: parking a gene on a stub is a different phenotype than
+    leaving it on the reference path.
+    """
+    dests = [get_destination(d) for d in coding.destinations]
+
+    def key(bits: tuple) -> Any:
+        bits = tuple(bits)
+        if len(bits) != coding.length:     # foreign bits (stale cache line)
+            return ("raw", bits)
+        impl = coding.decode(bits)
+        stubs = tuple((s.region, dests[int(v)].name)
+                      for s, v in zip(coding.sites, bits)
+                      if not dests[int(v)].executable)
+        return (tuple((s.region, str(impl[s.region])) for s in coding.sites),
+                stubs)
+
+    return key
 
 
 def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
@@ -82,9 +111,11 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
         if top_k is None and cfg.auto_screen and cfg.cache_dir:
             # surrogate auto-screening (ROADMAP): a prior search of this
             # exact program recorded how well the surrogate ranked its
-            # offspring — when that correlation clears the bar, screening
-            # is evidence-backed and switches itself on
-            corr = last_rank_corr(cfg.cache_dir, fingerprint)
+            # offspring — when that correlation clears the bar (and is
+            # fresh enough to trust), screening is evidence-backed and
+            # switches itself on
+            corr = last_rank_corr(cfg.cache_dir, fingerprint,
+                                  max_age_s=cfg.auto_screen_horizon_s)
             if corr is not None and corr >= cfg.auto_screen_corr:
                 top_k = max(2, cfg.population // 2)
                 if log:
@@ -92,7 +123,8 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
                         f"{corr:.2f} >= {cfg.auto_screen_corr:.2f} -> "
                         f"screen_top_k={top_k}")
         common = dict(cache_dir=cfg.cache_dir, fingerprint=fingerprint,
-                      surrogate=surrogate, screen_top_k=top_k)
+                      surrogate=surrogate, screen_top_k=top_k,
+                      phenotype_key=phenotype_key(coding))
         if cfg.pool is not None:
             pool = ProcessPool(cfg.pool, workers=cfg.workers or None)
             evaluator = Evaluator(None, **pool.evaluator_kwargs(), **common)
@@ -107,7 +139,8 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
             # (range-restricted), which would let auto-screening justify
             # itself with its own output
             record_search_meta(cfg.cache_dir, fingerprint,
-                               ga.surrogate_rank_corr)
+                               ga.surrogate_rank_corr,
+                               horizon_s=cfg.auto_screen_horizon_s)
     finally:
         if owns:
             evaluator.close()
@@ -136,7 +169,7 @@ def _map_destination_value(value: int, rec_destinations: Sequence[str],
     """
     value = int(value)
     if not rec_destinations:
-        return min(value, coding.arity - 1)
+        return min(max(value, 0), coding.arity - 1)
     if not (0 <= value < len(rec_destinations)):
         return 0
     name = rec_destinations[value]
@@ -315,6 +348,10 @@ class OffloadResult:
     artifact: Any                     # frontend deliverable (impl map,
                                       # PyOffloadArtifact, ExecPlan, ...)
     verification: dict                # {"mode": ..., "verified": bool}
+    report: Any = None                # SubstitutionReport — the uniform
+                                      # what-runs-where record every
+                                      # frontend produces (ground truth for
+                                      # fallbacks; see repro.core.variants)
     details: dict = field(default_factory=dict)  # frontend-private extras
 
     @property
@@ -348,6 +385,8 @@ class OffloadResult:
             "best": "".join(str(int(v)) for v in self.best.bits),
             "speedup": self.speedup,
             "verified": self.verification.get("verified", False),
+            "substituted": dict(self.report.substituted) if self.report
+            else {},
             **self.savings,
         }
 
@@ -448,6 +487,21 @@ class Offloader:
         best = ga.best
         pattern = decoded_pattern(coding, best.bits, bundle.base_impl)
         artifact = fe.apply_plan(graph, coding, tuple(best.bits), bundle)
+        # the uniform substitution report: frontends with a real resolution
+        # step supply one (the jaxpr engine / ast variant menus); everyone
+        # else gets the generic decode-level record — same shape either way
+        report = bundle.context.get("substitution_report") \
+            or getattr(artifact, "report", None)
+        if report is None:
+            patterns = {o.region: o.pattern
+                        for o in (bundle.block.offloads if bundle.block
+                                  else ())}
+            for r in graph.offloadable():
+                if r.meta.get("pattern"):
+                    patterns.setdefault(r.name, r.meta["pattern"])
+            report = generic_plan_report(coding, best.bits,
+                                         base_impl=bundle.base_impl,
+                                         patterns=patterns)
         tp = plan_transfers(graph, pattern, hoist=cfg.hoist_transfers)
         if bank is not None and coding.length:
             bank.record(graph, coding, best.bits)
@@ -463,7 +517,7 @@ class Offloader:
             destinations=coding.destinations_of(best.bits),
             baseline=baseline, best=best, transfer_plan=tp,
             artifact=artifact, verification=verification,
-            details=dict(bundle.context))
+            report=report, details=dict(bundle.context))
 
 
 def plan_offload(target: Any, inputs: Optional[dict] = None,

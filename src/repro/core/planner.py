@@ -72,10 +72,17 @@ def plan_python_offload(program: PyProgram, inputs: dict,
         log=log)
     res = Offloader(cfg).plan(program, inputs)
     block_time = res.details.get("block_time_s", res.baseline.time_s)
+    # legacy contract: lib_calls holds (callable, in_names, out_names)
+    # triples for CLAIMED blocks only — variant-site menus (regions still in
+    # the gene) are a PR-4 concept the old result type never had; their
+    # decoded winners are visible through `impl` / the new OffloadResult
+    legacy_lib = {r: entry["lib"]
+                  for r, entry in res.details.get("lib_calls", {}).items()
+                  if isinstance(entry, dict) and "lib" in entry}
     return PythonPlanResult(
         program=res.details["program"], block=res.block,
         loops=LoopOffloadResult(res.coding, res.ga),
-        impl=res.pattern, lib_calls=res.details["lib_calls"],
+        impl=res.pattern, lib_calls=legacy_lib,
         transfer_plan=res.transfer_plan,
         baseline_time_s=res.baseline.time_s, block_time_s=block_time,
         final_time_s=min(res.ga.best.time_s, block_time),

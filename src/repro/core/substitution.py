@@ -29,50 +29,16 @@ import jax
 from jax import core as jcore
 
 from repro.core.ir import RegionGraph
+# the resolve/check/fallback rule and the report types are frontend-neutral
+# (repro.core.variants) — re-exported here for compatibility with PR-3 users
+from repro.core.variants import (_REF_IMPLS, SubstitutionChoice,  # noqa: F401
+                                 SubstitutionReport, check_adapter,
+                                 resolve_variant)
 from repro.kernels.registry import (CallSite, KernelRegistry,
-                                    VariantUnavailable, auto_variant_order,
                                     default_registry)
 
 __all__ = ["SiteBinding", "SubstitutionChoice", "SubstitutionReport",
            "SubstitutedCallable", "SubstitutionEngine"]
-
-
-_REF_IMPLS = frozenset({"ref", "interp", "host", "cpu"})
-
-
-# ---------------------------------------------------------------------------
-# report
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class SubstitutionChoice:
-    """What happened at one substitutable region."""
-
-    region: str
-    pattern: Optional[str]
-    requested: str                    # the impl the plan asked for
-    chosen: str                       # "ref" or the bound variant name
-    why: str = ""                     # fallback / resolution reason
-
-
-@dataclass
-class SubstitutionReport:
-    choices: list[SubstitutionChoice] = field(default_factory=list)
-
-    @property
-    def substituted(self) -> dict[str, str]:
-        """region -> variant for every region not on the reference path."""
-        return {c.region: c.chosen for c in self.choices if c.chosen != "ref"}
-
-    @property
-    def fallbacks(self) -> dict[str, str]:
-        """region -> reason for every request the engine had to refuse."""
-        return {c.region: c.why for c in self.choices
-                if c.chosen == "ref" and c.requested not in _REF_IMPLS}
-
-    def summary(self) -> dict:
-        return {"substituted": self.substituted, "fallbacks": self.fallbacks}
 
 
 class SubstitutedCallable:
@@ -262,59 +228,18 @@ class SubstitutionEngine:
 
     def _resolve_variant_uncached(self, site: SiteBinding, requested: str
                                   ) -> tuple[Optional[Callable], str, str]:
-        if requested in _REF_IMPLS:
-            return None, "ref", "requested"
-        if site.pattern is None:
-            return None, "ref", "no pattern matched this region"
-        names = self.registry.variant_names(site.pattern)
-        if requested in names:
-            candidates = (requested,)
-        elif requested in ("kernel", "offload", "auto"):
-            candidates = tuple(n for n in auto_variant_order(self.backend)
-                               if n in names) or names
-        else:
-            return None, "ref", f"unknown implementation {requested!r}"
-        out_used = self._out_used(site)
-        eqns = self.closed.jaxpr.eqns[site.span[0]:site.span[1]] \
-            if site.kind == "span" else ()
-        call_site = site.call_site(out_used, self.backend, eqns=eqns)
-        why = ""
-        for name in candidates:
-            try:
-                adapter = self.registry.get(site.pattern, name).bind(call_site)
-                self._check_adapter(adapter, call_site)
-                return adapter, name, ""
-            except VariantUnavailable as e:
-                why = f"{name}: {e}"
-        return None, "ref", why
-
-    @staticmethod
-    def _check_adapter(adapter: Callable, site: CallSite) -> None:
-        """Abstract-evaluate the adapter and require aval-exact outputs for
-        every used output (None stands for an output the variant skips)."""
-        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in site.in_avals]
-        try:
-            outs = jax.eval_shape(lambda *xs: adapter(*xs), *specs)
-        except Exception as e:  # noqa: BLE001 — adapter bug == unavailable
-            raise VariantUnavailable(f"adapter failed abstract eval: "
-                                     f"{type(e).__name__}: {e}") from None
-        outs = tuple(outs) if isinstance(outs, (tuple, list)) else (outs,)
-        if len(outs) != len(site.out_avals):
-            raise VariantUnavailable(
-                f"adapter returned {len(outs)} outputs, site has "
-                f"{len(site.out_avals)}")
-        for i, (got, want, used) in enumerate(
-                zip(outs, site.out_avals, site.out_used)):
-            if got is None:
-                if used:
-                    raise VariantUnavailable(
-                        f"output {i} is used but the variant skips it")
-                continue
-            if tuple(got.shape) != tuple(want.shape) \
-                    or got.dtype != want.dtype:
-                raise VariantUnavailable(
-                    f"output {i} aval mismatch: {got.shape}/{got.dtype} vs "
-                    f"{want.shape}/{want.dtype}")
+        """Concretize the site to a CallSite and apply the shared
+        frontend-neutral resolution rule (repro.core.variants)."""
+        if requested not in _REF_IMPLS and site.pattern is not None:
+            out_used = self._out_used(site)
+            eqns = self.closed.jaxpr.eqns[site.span[0]:site.span[1]] \
+                if site.kind == "span" else ()
+            call_site = site.call_site(out_used, self.backend, eqns=eqns)
+        else:                          # resolution needs no concretization
+            call_site = site.call_site([True] * len(site.out_vars),
+                                       self.backend)
+        return resolve_variant(call_site, requested, registry=self.registry,
+                               backend=self.backend)
 
     # -- substitution -------------------------------------------------------
 

@@ -61,19 +61,30 @@ class TransferPlan:
         return total
 
 
-#: implementation ids that place a region on the accelerator side: the ast
-#: frontend's jit path, a library substitution, the jaxpr frontend's legacy
-#: auto-kernel choice, and the kernel registry's named variants.
-DEVICE_IMPLS = frozenset({"jit", "lib", "kernel", "fused_jnp", "pallas"})
+#: implementation ids that place a region's COMPUTE on the accelerator
+#: side: the ast frontend's jit path, a library substitution, the jaxpr
+#: frontend's legacy auto-kernel choice, the kernel registry's named
+#: variants, and the module frontend's accelerated *compute* plan values
+#: (repro.models.plan — impl knobs incl. the fused-QKV boolean).  Schedule
+#: knobs (remat, gather_mode) deliberately stay host-side: they move
+#: recomputation/gather placement, not data onto a device, so charging
+#: them transfers would distort the static cost.
+DEVICE_IMPLS = frozenset({
+    "jit", "lib", "kernel", "fused_jnp", "pallas",
+    "chunked", "assoc", "fused", "scatter_ep", "chunked_vocab",
+})
 
 
 def plan_transfers(graph: RegionGraph, impl: dict[str, str],
                    hoist: bool = True) -> TransferPlan:
-    """impl: region -> an id in :data:`DEVICE_IMPLS` (accelerator) or
-    anything else (host)."""
+    """impl: region -> an id in :data:`DEVICE_IMPLS` (accelerator), the
+    boolean True (a flag-valued knob like qkv_fused on its accelerated
+    setting — matched by identity so an integer impl id 1 can never alias
+    it), or anything else (host)."""
 
     def on_device(r: Region) -> bool:
-        return impl.get(r.name) in DEVICE_IMPLS
+        impl_id = impl.get(r.name)
+        return impl_id is True or impl_id in DEVICE_IMPLS
 
     plan = TransferPlan()
     device_vars: set = set()      # vars whose current value lives on device

@@ -65,6 +65,17 @@ class ExecPlan:
         ("gather_mode", "hoisted", "per_layer"),
     )
 
+    # Full implementation menu per offload site where the executors ship
+    # more than the (ref, offload) pair.  Index order is the gene contract
+    # (`Destination.impl_index`: 0 = reference, 1 = primary accelerated,
+    # 2+ = extra variants), so a multi-destination chromosome selects WHICH
+    # implementation runs, not just whether the site is offloaded.  Sites
+    # absent here keep their binary OFFLOAD_SITES pair (genes clamp).
+    SITE_VARIANTS = {
+        "rglru_impl": ("step", "assoc", "chunked"),   # models/rglru.py
+        "remat": ("none", "dots", "full"),            # models/transformer.py
+    }
+
 
 REFERENCE_PLAN = ExecPlan(
     attn_impl="naive",

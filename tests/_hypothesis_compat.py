@@ -28,10 +28,13 @@ except ImportError:  # pragma: no cover - exercised only on bare environments
         return lambda fn: fn
 
     class _StrategyStub:
+        """Chainable no-op: st.lists(...).map(tuple) etc. all yield the
+        stub, so strategy expressions at module scope still import."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
         def __getattr__(self, name):
-            def _strategy(*args, **kwargs):
-                return None
-            _strategy.__name__ = name
-            return _strategy
+            return self
 
     st = _StrategyStub()

@@ -263,3 +263,167 @@ def test_ga_reports_search_wall_clock():
                  GAConfig(population=6, generations=3, seed=0))
     assert res.wall_s > 0
     assert 0 < res.eval_wall_s <= res.wall_s
+
+
+# ---------------------------------------------------------------------------
+# phenotype dedup: decode-equivalent chromosomes share one measurement
+# ---------------------------------------------------------------------------
+
+
+def _variant_graph():
+    return RegionGraph([
+        Region("matched", "loop", uses=frozenset({"a"}),
+               defs=frozenset({"a"}), offloadable=True,
+               alternatives=("ref", "fused_jnp", "pallas"), trip_count=4),
+        Region("plain", "loop", uses=frozenset({"b"}), defs=frozenset({"b"}),
+               offloadable=True, alternatives=("ref", "kernel"),
+               trip_count=2),
+    ], "ir", "pheno")
+
+
+def test_phenotype_dedup_measures_decode_equivalent_once():
+    from repro.core.genes import VARIANT_ALPHABET
+    from repro.core.offload import phenotype_key
+
+    g = _variant_graph()
+    coding = coding_from_graph(g, destinations=VARIANT_ALPHABET)
+    calls = []
+    ev = Evaluator(_counting_fitness(calls),
+                   phenotype_key=phenotype_key(coding))
+    # gene 1 and 2 on the clamped 2-impl site decode identically ("kernel")
+    out = ev.evaluate_batch([(0, 1), (0, 2), (0, 0)])
+    assert len(calls) == 2, "decode-equivalent chromosomes measured once"
+    assert out[0].time_s == out[1].time_s
+    # results are re-labelled with the *requesting* chromosome's bits
+    assert out[0].bits == (0, 1) and out[1].bits == (0, 2)
+    assert ev.stats.measurements == 2
+    assert ev.stats.measurements_saved >= 1
+    # is_measured sees through the phenotype too (dup-avoiding offspring)
+    assert ev.is_measured((0, 2)) and ev.is_measured((0, 1))
+    ev.close()
+
+
+def test_phenotype_dedup_reaches_persistent_cache(tmp_path):
+    from repro.core.genes import VARIANT_ALPHABET
+    from repro.core.offload import phenotype_key
+
+    g = _variant_graph()
+    coding = coding_from_graph(g, destinations=VARIANT_ALPHABET)
+    key = phenotype_key(coding)
+    calls = []
+    ev1 = Evaluator(_counting_fitness(calls), cache_dir=str(tmp_path),
+                    fingerprint="pheno", phenotype_key=key)
+    ev1.evaluate((0, 1))
+    ev1.close()
+    # a NEW engine loads the persisted measurement and serves the
+    # decode-equivalent sibling from it — zero new measurements
+    ev2 = Evaluator(_counting_fitness(calls), cache_dir=str(tmp_path),
+                    fingerprint="pheno", phenotype_key=key)
+    out = ev2.evaluate((0, 2))
+    assert len(calls) == 1
+    assert out.bits == (0, 2)
+    assert ev2.stats.persistent_hits == 1
+    ev2.close()
+
+
+def test_ga_search_dedups_phenotypes_end_to_end():
+    from repro.core.genes import VARIANT_ALPHABET
+    from repro.core.offload import ga_search
+
+    g = _variant_graph()
+    coding = coding_from_graph(g, destinations=VARIANT_ALPHABET)
+    calls = []
+    _, ga = ga_search(g, _counting_fitness(calls), GAConfig(
+        population=8, generations=6, seed=3), coding=coding)
+    decoded = {tuple(sorted(coding.decode(b).items())) for b in calls}
+    assert len(decoded) == len(calls), \
+        "every verification measurement must buy a distinct program"
+
+
+# ---------------------------------------------------------------------------
+# search-meta staleness decay
+# ---------------------------------------------------------------------------
+
+
+def test_search_meta_decay_boundary(tmp_path):
+    from repro.core.evaluator import (_SEARCH_META_HORIZON_S, last_rank_corr,
+                                      record_search_meta)
+
+    d = str(tmp_path)
+    record_search_meta(d, "fp", 0.9, now=1_000.0)
+    # fresh inside the horizon, stale one tick past it
+    assert last_rank_corr(d, "fp", max_age_s=100.0, now=1_099.9) == 0.9
+    assert last_rank_corr(d, "fp", max_age_s=100.0, now=1_100.1) is None
+    # the default horizon applies when none is given
+    assert last_rank_corr(d, "fp", now=1_000.0 + _SEARCH_META_HORIZON_S - 1) \
+        == 0.9
+    assert last_rank_corr(d, "fp", now=1_000.0 + _SEARCH_META_HORIZON_S + 1) \
+        is None
+
+
+def test_search_meta_stale_records_compact_away(tmp_path):
+    import json
+    import os
+
+    from repro.core.evaluator import (_SEARCH_META_FILE, last_rank_corr,
+                                      record_search_meta)
+
+    d = str(tmp_path)
+    record_search_meta(d, "old", 0.8, now=1_000.0, horizon_s=50.0)
+    record_search_meta(d, "new", 0.7, now=2_000.0, horizon_s=50.0)
+    path = os.path.join(d, _SEARCH_META_FILE)
+    with open(path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    assert [r["fingerprint"] for r in recs] == ["new"], \
+        "expired records must be compacted away, not just ignored"
+    assert last_rank_corr(d, "old", now=2_000.0) is None
+
+
+def test_search_meta_legacy_records_without_ts_are_stale(tmp_path):
+    import json
+    import os
+
+    from repro.core.evaluator import _SEARCH_META_FILE, last_rank_corr
+
+    path = os.path.join(str(tmp_path), _SEARCH_META_FILE)
+    with open(path, "w") as f:
+        f.write(json.dumps({"fingerprint": "fp", "rank_corr": 0.9}) + "\n")
+    assert last_rank_corr(str(tmp_path), "fp") is None
+
+
+def test_auto_screen_ignores_stale_rank_corr(tmp_path):
+    import json
+    import os
+
+    from repro.core.evaluator import _SEARCH_META_FILE
+    from repro.core.offload import ga_search
+
+    g = RegionGraph([
+        Region(f"r{i}", "loop", uses=frozenset({f"v{i}"}),
+               defs=frozenset({f"v{i}"}), offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=2 + i)
+        for i in range(6)], "ir", "stale")
+
+    def fit(values):
+        return Evaluation(tuple(values),
+                          1.0 + sum(int(v) * (i + 1)
+                                    for i, v in enumerate(values)), True)
+
+    cfg = GAConfig(population=8, generations=4, seed=1,
+                   cache_dir=str(tmp_path))
+    _, ga1 = ga_search(g, fit, cfg)
+    assert ga1.surrogate_rank_corr >= cfg.auto_screen_corr
+
+    # age the recorded evidence past the horizon: auto-screen must not act
+    path = os.path.join(str(tmp_path), _SEARCH_META_FILE)
+    with open(path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    for rec in recs:
+        rec["ts"] = rec["ts"] - cfg.auto_screen_horizon_s - 10.0
+    with open(path, "w") as f:
+        for rec in recs:
+            f.write(json.dumps(rec) + "\n")
+
+    _, ga2 = ga_search(g, fit, GAConfig(population=8, generations=4, seed=2,
+                                        cache_dir=str(tmp_path)))
+    assert ga2.screened_out == 0, "stale evidence must not justify screening"

@@ -1,0 +1,182 @@
+"""Property-based gene-coding tests over *arbitrary* destination alphabets.
+
+The shipped alphabets (binary, extended, variant) are three points in the
+space the encoding must cover; these properties hold for any alphabet built
+from registered destinations: decode totality + ``impl_index`` clamping on
+sites with short implementation menus, decode/encode (``destinations_of``)
+round-trip, cross-alphabet seed-value mapping, and phenotype-key
+consistency (decode-equivalent chromosomes share a key).
+
+Property tests run under hypothesis (via ``tests/_hypothesis_compat``,
+skipping cleanly on bare environments); the example-based sections at the
+bottom always run.
+"""
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.genes import (Destination, GeneCoding, Site,
+                              coding_from_graph, get_destination,
+                              register_destination)
+from repro.core.ir import Region, RegionGraph
+from repro.core.offload import _map_destination_value, phenotype_key
+
+# a pool of synthetic executable destinations covering impl_index 0..4, so
+# alphabets are *arbitrary*, not just the three shipped ones
+for _i in range(5):
+    try:
+        register_destination(Destination(f"xdev{_i}", executable=True,
+                                         impl_index=_i))
+    except ValueError:
+        pass                       # already registered by a previous import
+try:
+    register_destination(Destination("xstub", executable=False, impl_index=0,
+                                     launch_overhead_s=1e-4))
+except ValueError:
+    pass
+
+ALPHA_POOL = ("cpu", "gpu", "fpga_stub", "gpu_fused", "gpu_pallas", "xstub",
+              "xdev0", "xdev1", "xdev2", "xdev3", "xdev4")
+
+
+def _sites(extra_counts):
+    return tuple(
+        Site(f"r{i}", "ref", "off",
+             tuple(f"e{i}_{j}" for j in range(k)))
+        for i, k in enumerate(extra_counts))
+
+
+alphabets = st.lists(st.sampled_from(ALPHA_POOL), min_size=2, max_size=6,
+                     unique=True).map(tuple)
+site_menus = st.lists(st.integers(0, 3), min_size=1, max_size=5)
+
+
+@given(alphabet=alphabets, extras=site_menus, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_decode_is_total_and_clamps(alphabet, extras, data):
+    coding = GeneCoding(_sites(extras), alphabet)
+    values = data.draw(st.lists(st.integers(0, coding.arity - 1),
+                                min_size=coding.length,
+                                max_size=coding.length))
+    decoded = coding.decode(values)
+    for s, v in zip(coding.sites, values):
+        dest = get_destination(alphabet[v])
+        impls = s.impls
+        # clamping: an impl_index beyond the menu selects the last impl,
+        # and decode never raises or invents an implementation
+        assert decoded[s.region] == impls[min(dest.impl_index,
+                                              len(impls) - 1)]
+        assert decoded[s.region] in impls
+
+
+@given(alphabet=alphabets, extras=site_menus, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_destinations_of_roundtrips_values(alphabet, extras, data):
+    coding = GeneCoding(_sites(extras), alphabet)
+    values = data.draw(st.lists(st.integers(0, coding.arity - 1),
+                                min_size=coding.length,
+                                max_size=coding.length))
+    names = coding.destinations_of(values)
+    # encode(decode) round-trip: unique alphabets map names back to values
+    assert [alphabet.index(names[s.region]) for s in coding.sites] == values
+
+
+@given(alphabet=alphabets, rec=st.lists(st.sampled_from(ALPHA_POOL),
+                                        min_size=0, max_size=6).map(tuple),
+       value=st.integers(-3, 9))
+@settings(max_examples=80, deadline=None)
+def test_cross_alphabet_seed_mapping_is_total(alphabet, rec, value):
+    coding = GeneCoding(_sites([1]), alphabet)
+    mapped = _map_destination_value(value, rec, coding)
+    assert 0 <= mapped < coding.arity, "mapped seed must be a legal gene"
+    if not rec:
+        assert mapped == min(max(value, 0), coding.arity - 1)
+    elif 0 <= value < len(rec):
+        name = rec[value]
+        if name in alphabet:
+            assert mapped == alphabet.index(name)       # name-faithful
+        elif value == 0:
+            assert mapped == 0                          # ref stays ref
+        else:
+            assert mapped == (1 if coding.arity > 1 else 0)
+    else:
+        assert mapped == 0                              # corrupt record
+
+
+@given(alphabet=alphabets, extras=site_menus, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_phenotype_key_matches_decode_equivalence(alphabet, extras, data):
+    coding = GeneCoding(_sites(extras), alphabet)
+    key = phenotype_key(coding)
+    draw = lambda: tuple(data.draw(st.lists(  # noqa: E731
+        st.integers(0, coding.arity - 1), min_size=coding.length,
+        max_size=coding.length)))
+    v1, v2 = draw(), draw()
+
+    def pheno(values):
+        return (tuple(sorted(coding.decode(values).items())),
+                tuple((s.region, alphabet[v])
+                      for s, v in zip(coding.sites, values)
+                      if not get_destination(alphabet[v]).executable))
+
+    assert (key(v1) == key(v2)) == (pheno(v1) == pheno(v2))
+
+
+# ---------------------------------------------------------------------------
+# example-based anchors (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+
+def _graph():
+    return RegionGraph([
+        Region("two", "loop", offloadable=True,
+               alternatives=("ref", "kernel")),
+        Region("three", "loop", offloadable=True,
+               alternatives=("ref", "fused_jnp", "pallas")),
+    ], "ir", "props")
+
+
+def test_clamped_impl_index_aliases_to_last_impl():
+    coding = coding_from_graph(_graph(),
+                               destinations=("cpu", "gpu_fused",
+                                             "gpu_pallas"))
+    d1, d2 = coding.decode((1, 1)), coding.decode((2, 2))
+    assert d1["two"] == d2["two"] == "kernel"       # clamped on the 2-menu
+    assert d1["three"] == "fused_jnp" and d2["three"] == "pallas"
+
+
+def test_phenotype_key_equates_clamped_chromosomes_only():
+    coding = coding_from_graph(_graph(),
+                               destinations=("cpu", "gpu_fused",
+                                             "gpu_pallas"))
+    key = phenotype_key(coding)
+    assert key((1, 0)) == key((2, 0)), "clamped genes decode identically"
+    assert key((0, 1)) != key((0, 2)), "real variants stay distinct"
+    assert key((0, 0)) != key((1, 0))
+
+
+def test_phenotype_key_separates_cost_only_parking():
+    coding = coding_from_graph(_graph(),
+                               destinations=("cpu", "gpu", "fpga_stub"))
+    key = phenotype_key(coding)
+    # both decode to the reference impl, but the stub charges modeled cost:
+    # different phenotype, different measurement
+    assert key((0, 0)) != key((2, 0))
+
+
+def test_foreign_bits_never_crash_phenotype_key():
+    coding = coding_from_graph(_graph())
+    key = phenotype_key(coding)
+    assert key((1,)) == ("raw", (1,))        # stale persisted line
+
+
+@pytest.mark.parametrize("value,rec,expect", [
+    (1, ("cpu", "gpu"), 1),                  # same alphabet
+    (1, ("cpu", "fpga_stub"), 1),            # offloaded name missing -> slot 1
+    (0, ("cpu", "gpu"), 0),                  # ref stays ref
+    (5, ("cpu", "gpu"), 0),                  # corrupt record
+    (3, (), 1),                              # legacy clamp
+    (-2, (), 0),                             # legacy clamp, lower bound
+])
+def test_map_destination_value_examples(value, rec, expect):
+    coding = coding_from_graph(_graph())     # binary cpu/gpu
+    assert _map_destination_value(value, rec, coding) == expect
