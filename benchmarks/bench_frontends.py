@@ -104,16 +104,24 @@ def main(quick: bool = False) -> list[str]:
     engine = SubstitutionEngine(_jax_app, args, g4)
     attn = next(r.name for r in g4.offloadable()
                 if r.meta.get("pattern") == "softmax_attention")
+    sub_dt: dict[str, float] = {}
     for variant in ("ref", "fused_jnp", "pallas"):
         sub = engine.substitute({attn: variant})
         jitted = jax.jit(sub.fn)
         jax.block_until_ready(jitted(*args))          # compile outside timing
         dt = timeit(lambda: jax.block_until_ready(jitted(*args)))
+        sub_dt[variant] = dt
         v = engine.verify(sub)
         rows.append(row(f"frontends.substitution.{variant}", dt * 1e6,
                         f"verified={v.ok} "
                         f"substituted={sub.report.substituted or '{}'}"))
         assert v.ok, f"substituted {variant} failed verification"
+    for variant in ("fused_jnp", "pallas"):
+        # same-run ratio (percent): the machine-portable number the CI
+        # perf-trajectory gate compares — absolute us are host-specific
+        rows.append(row(f"frontends.substitution.speedup_pct.{variant}",
+                        100.0 * sub_dt["ref"] / sub_dt[variant],
+                        "substituted vs reference, same machine/run"))
 
     # --- ast substitution: the same registry variants behind python loops --
     from repro.core.frontends import registry as fe_registry
@@ -150,18 +158,23 @@ def rms_app(x, scale, n, d):
     matched = [s.region for s in acoding.sites
                if ag.by_name(s.region).meta.get("pattern")]
     assert matched, "rmsnorm loop must match and keep its gene"
+    ast_dt: dict[str, float] = {}
     for gene, name in ((0, "interp"), (1, "fused_jnp"), (2, "pallas")):
         values = tuple(gene if s.region in matched else 0
                        for s in acoding.sites)
         art = fe.apply_plan(ag, acoding, values, abundle)
         art.run(**ast_inputs)                         # compile outside timing
         dt = timeit(lambda: art.run(**ast_inputs))
+        ast_dt[name] = dt
         ok = np.allclose(art.run(**ast_inputs)["out"], ref_out,
                          rtol=1e-2, atol=1e-2)
         rows.append(row(f"frontends.ast_substitution.{name}", dt * 1e6,
                         f"verified={ok} "
                         f"substituted={art.report.substituted or '{}'}"))
         assert ok, f"ast variant {name} failed verification"
+    rows.append(row("frontends.ast_substitution.speedup_pct.fused_jnp",
+                    100.0 * ast_dt["interp"] / ast_dt["fused_jnp"],
+                    "lib-call variant vs interpreter, same machine/run"))
 
     if not quick:
         from repro.core import GAConfig, OffloadConfig, plan_offload

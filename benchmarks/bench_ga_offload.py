@@ -92,7 +92,7 @@ register_fitness_factory("bench_module_cost", _module_fitness_factory)
 # ---------------------------------------------------------------------------
 
 
-def _bench_python_ga(rows: list) -> None:
+def _bench_python_ga(rows: list, quick: bool = False) -> None:
     program = PyProgram(DEMO_SRC, consts=DEMO_CONSTS)
     inputs = demo_inputs()
     program.check_offloadable(inputs)
@@ -114,18 +114,34 @@ def _bench_python_ga(rows: list) -> None:
     fitness = WallClockFitness(build=build, reference_output=ref, repeats=2)
     cache_dir = tempfile.mkdtemp(prefix="ga_bench_cache_")
     try:
-        cfg = GAConfig(population=10, generations=6, seed=0,
+        cfg = GAConfig(population=6 if quick else 10,
+                       generations=4 if quick else 6, seed=0,
                        cache_dir=cache_dir)
         res = loop_offload_pass(program.graph, fitness, cfg).ga
 
         all_on = fitness(coding.all_on())
         base = res.baseline.time_s
+        saved_frac = res.measurements_saved / max(
+            1, res.measurements_saved + res.evaluations)
         rows += [
             row("ga_offload.baseline_all_cpu", base * 1e6, "1.00x"),
             row("ga_offload.all_offload", all_on.time_s * 1e6,
                 f"{base / all_on.time_s:.2f}x"),
             row("ga_offload.ga_best", res.best.time_s * 1e6,
                 f"{base / res.best.time_s:.2f}x"),
+            # machine-relative ratios (in percent): the rows BENCH_PR5.json
+            # gates on — absolute microseconds are not comparable between
+            # the baseline host and a CI runner, ratios are
+            row("ga_offload.speedup_best_pct", 100.0 * base / res.best.time_s,
+                "GA best vs all-CPU baseline, same machine/run"),
+            row("ga_offload.best_vs_all_on_pct",
+                100.0 * all_on.time_s / res.best.time_s,
+                "GA best vs the all-offload pattern, same machine/run "
+                "(>= ~100: the search never loses to blind full offload)"),
+            row("ga_offload.saved_frac_pct", 100.0 * saved_frac,
+                f"saved={res.measurements_saved} of "
+                f"{res.measurements_saved + res.evaluations} requested "
+                f"(cache+dedup+screening)"),
             row("ga_offload.evaluations", res.evaluations,
                 f"of {2 ** coding.length} exhaustive; cache_hits={res.cache_hits}"),
             row("ga_offload.gene_length", coding.length,
@@ -150,8 +166,147 @@ def _bench_python_ga(rows: list) -> None:
             f"wall={res2.wall_s:.2f}s vs cold {res.wall_s:.2f}s"))
         assert res2.persistent_hits > 0
         assert res2.evaluations < res.evaluations
+
+        # journal-fitted surrogate: regression over the two searches'
+        # measurement journal vs the hand formula, then a third search that
+        # prefers whichever model the journal says ranks better
+        from repro.core.offload import search_fingerprint
+        from repro.core.surrogate import fit_surrogate
+        fp = search_fingerprint(program.graph, coding)
+        fit = fit_surrogate(program.graph, coding, cache_dir, fp,
+                            min_records=cfg.surrogate_min_records)
+        assert fit is not None, "journal too small to fit a surrogate"
+        rows.append(row(
+            "ga_offload.surrogate_fitted_rank_corr", fit.rank_corr * 1e6,
+            f"journal fit over {fit.n_records} records: spearman "
+            f"{fit.rank_corr:.3f} vs static {fit.static_rank_corr:.3f}"))
+        res3 = loop_offload_pass(program.graph, fitness,
+                                 GAConfig(population=cfg.population,
+                                          generations=cfg.generations,
+                                          seed=1, cache_dir=cache_dir)).ga
+        rows.append(row(
+            "ga_offload.surrogate_kind_fitted",
+            1.0 if res3.surrogate_kind == "fitted" else 0.0,
+            f"third search ranked offspring with the "
+            f"{res3.surrogate_kind} surrogate "
+            f"(measured corr {res3.surrogate_rank_corr:.3f})"))
     finally:
         shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# part 1a: journal-fitted surrogate on a deterministic synthetic journal
+# ---------------------------------------------------------------------------
+
+
+def _bench_surrogate_fit_synth(rows: list) -> None:
+    """Deterministic fit-vs-hand-formula comparison (the gateable number):
+    a synthetic journal whose measured times carry per-site effects the
+    static transfer-cost formula cannot see (one region's offload is slow,
+    another's is very fast).  Fitness is exact, the fit is least squares —
+    byte-identical across runs and machines, unlike the wall-clock rows."""
+    import tempfile as _tempfile
+
+    import numpy as np
+
+    from repro.core.evaluator import Evaluator, transfer_cost_surrogate
+    from repro.core.genes import coding_from_graph as _coding
+    from repro.core.ir import Region, RegionGraph
+    from repro.core.surrogate import fit_surrogate
+
+    regions = [
+        Region(f"r{i}", "loop", uses=frozenset({f"v{i}"}),
+               defs=frozenset({f"v{i}"}), offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=2 + i)
+        for i in range(5)]
+    graph = RegionGraph(regions, "ir", "bench_synth")
+    coding = _coding(graph)
+    w = (0.05, 0.9, -0.1, -0.6, -0.05)
+
+    def fit_fn(bits):
+        t = 1.0 + sum(wi * b for wi, b in zip(w, bits))
+        return Evaluation(tuple(bits), t, True)
+
+    d = _tempfile.mkdtemp(prefix="ga_bench_synth_")
+    try:
+        ev = Evaluator(fit_fn, cache_dir=d, fingerprint="synth")
+        rng = np.random.default_rng(0)
+        ev.evaluate_batch([tuple(int(x) for x in rng.integers(0, 2, 5))
+                           for _ in range(40)])
+        fit = fit_surrogate(graph, coding, d, "synth",
+                            prior=transfer_cost_surrogate(graph, coding),
+                            min_records=10)
+        assert fit is not None and fit.beats_static
+        rows.append(row(
+            "ga_offload.surrogate_fit_gain_synth",
+            (fit.rank_corr - fit.static_rank_corr) * 1e6,
+            f"deterministic journal: fitted spearman {fit.rank_corr:.3f} "
+            f"vs static {fit.static_rank_corr:.3f} over "
+            f"{fit.n_records} records"))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# part 1b: measured jaxpr search with compile-parallel/time-serial warm-ups
+# ---------------------------------------------------------------------------
+
+
+def _bench_jaxpr_overlap(rows: list) -> None:
+    """The substitution-engine path the compile-overlap phase targets: each
+    chromosome's warm-up is one ``engine.substitute()`` + ``jax.jit``
+    compile (GIL-releasing), so different chromosomes' compiles overlap
+    ahead of the strictly serial timing loop.  EvalStats reports the
+    savings; the timing loop itself never interleaves with compilation."""
+    import time as _time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import GAConfig, OffloadConfig, plan_offload
+
+    def _jax_app(q, k, v, w):
+        def attention(q, k, v):
+            s = q @ k.T / jnp.sqrt(q.shape[-1] * 1.0)
+            mask = jnp.tril(jnp.ones((q.shape[0], k.shape[0]), bool))
+            return jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1) @ v
+
+        def body(h, _):
+            return jnp.tanh(h @ w), ()
+
+        h, _ = jax.lax.scan(body, attention(q, k, v), None, length=4)
+        return h
+
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 32)) * 0.1, jnp.float32)
+
+    t0 = _time.perf_counter()
+    res = plan_offload(_jax_app, config=OffloadConfig(
+        ga=GAConfig(population=6, generations=3, seed=0),
+        options={"example_args": (q, k, v, w)}, repeats=2))
+    dt = _time.perf_counter() - t0
+    saved = res.savings["compile_overlap_saved_s"]
+    eval_wall = max(res.savings["eval_wall_s"], 1e-9)
+    rows += [
+        row("ga_offload.jaxpr_overlap_search_s", dt * 1e6,
+            f"measured jaxpr plan, compile-parallel warm-ups; "
+            f"verified={res.verification['verified']}"),
+        row("ga_offload.compile_overlap_saved_pct",
+            100.0 * saved / (eval_wall + saved),
+            f"estimated warm-up wall saved: {saved:.2f}s on top of "
+            f"{eval_wall:.2f}s eval wall (sum of prepare durations minus "
+            f"overlapped phase wall — contention waits count as savings "
+            f"ceiling, the timing loop stays serial)"),
+    ]
+    assert res.verification["verified"], "overlapped jaxpr plan must verify"
+    if (os.cpu_count() or 1) > 1:
+        # a single-core host disables the overlap phase entirely; anywhere
+        # else, overlapping real compiles must save wall-clock
+        assert saved > 0.0, "compile overlap saved nothing on a multi-core host"
 
 
 # ---------------------------------------------------------------------------
@@ -302,10 +457,16 @@ def _bench_module_parallel(rows: list) -> None:
     rows += out_rows
 
 
-def main() -> list[str]:
+def main(quick: bool = False) -> list[str]:
+    """``quick=True`` is the CI smoke: the python-frontend GA at reduced
+    budget (cache, dedup, compile overlap, fitted surrogate all still
+    exercised), skipping the multi-minute module process-pool A/B."""
     rows: list[str] = []
-    _bench_python_ga(rows)
-    _bench_module_parallel(rows)
+    _bench_python_ga(rows, quick=quick)
+    _bench_surrogate_fit_synth(rows)
+    _bench_jaxpr_overlap(rows)
+    if not quick:
+        _bench_module_parallel(rows)
     return rows
 
 

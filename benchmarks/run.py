@@ -1,16 +1,27 @@
 """Benchmark driver — one bench per paper claim/table.
 
-  PYTHONPATH=src python -m benchmarks.run [--only ga,block,transfer,...] [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--only ga,block,transfer,...]
+                                          [--quick] [--json OUT.json]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs benches
-that support it in smoke mode (no GA searches) — the CI regression gate.
+that support it in smoke mode (no full GA searches) — the CI regression
+gate.  ``--json`` additionally writes the rows as a machine-readable
+report (the perf-trajectory artifact ``BENCH_PR5.json``; see
+``benchmarks.compare`` for the gate that consumes it).
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
+
+
+def parse_row(line: str) -> dict:
+    """One CSV row -> {name, value, derived} (derived keeps any commas)."""
+    name, value, derived = line.split(",", 2)
+    return {"name": name, "value": float(value), "derived": derived}
 
 
 def main() -> None:
@@ -19,6 +30,8 @@ def main() -> None:
                     help="comma list: ga,block,transfer,frontends,kernels,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode for benches that support it")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this path as a JSON report")
     args = ap.parse_args()
 
     from benchmarks import (bench_block_offload, bench_frontends,
@@ -35,6 +48,7 @@ def main() -> None:
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")
     failed = []
+    report_rows: list[dict] = []
     for name, fn in benches.items():
         if only and name not in only:
             continue
@@ -43,10 +57,25 @@ def main() -> None:
                 "quick" in inspect.signature(fn).parameters else {}
             for line in fn(**kwargs):
                 print(line)
+                report_rows.append(parse_row(line))
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
             print(f"{name}.FAILED,0,{type(e).__name__}: {e}")
+    if args.json:
+        report = {
+            "schema": 1,
+            "quick": bool(args.quick),
+            "benches": sorted(only) if only else sorted(benches),
+            "failed": failed,
+            "rows": report_rows,
+            "metrics": {r["name"]: r["value"] for r in report_rows},
+        }
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(report_rows)} rows to {args.json}",
+              file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -24,10 +24,13 @@ from repro.core.ir import Region, RegionGraph
 from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
 from repro.core.offload import (OffloadConfig, OffloadResult, Offloader,
                                 SeedBank, ga_search, phenotype_key,
-                                plan_offload)
+                                plan_offload, search_fingerprint)
 from repro.core.pattern_db import Match, PatternDB, PatternRecord, default_db
 from repro.core.substitution import (SubstitutedCallable, SubstitutionEngine,
                                      SubstitutionReport)
+from repro.core.surrogate import (FeatureExtractor, FittedSurrogate,
+                                  fit_surrogate, load_fit,
+                                  spearman_rank_corr)
 from repro.core.variants import (SubstitutionChoice, generic_plan_report,
                                  resolve_variant)
 from repro.core.planner import (ModulePlanResult, PythonPlanResult,
@@ -51,10 +54,12 @@ __all__ = [
     "register_destination",
     "SubstitutedCallable", "SubstitutionEngine", "SubstitutionReport",
     "SubstitutionChoice", "generic_plan_report", "resolve_variant",
+    "FeatureExtractor", "FittedSurrogate", "fit_surrogate", "load_fit",
+    "spearman_rank_corr",
     "Region", "RegionGraph",
     "LoopOffloadResult", "loop_offload_pass",
     "OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
-    "ga_search", "phenotype_key", "plan_offload",
+    "ga_search", "phenotype_key", "plan_offload", "search_fingerprint",
     "Match", "PatternDB", "PatternRecord", "default_db",
     "ModulePlanResult", "PythonPlanResult",
     "plan_module_offload", "plan_python_offload",

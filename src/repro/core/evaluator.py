@@ -18,11 +18,22 @@ of verification measurements (dedup, duplicate-avoiding offspring) and their
   ``(program fingerprint, bits)`` so re-planning the same program across
   processes or benchmark runs never re-measures a known pattern;
 
-* an optional **surrogate pre-screen**: offspring are ranked by a static
-  cost estimate (e.g. transfer-byte counts from the transfer planner) and
-  only the most promising ``screen_top_k`` are measured per generation.
-  Measurement stays the final arbiter — the surrogate only prioritizes, it
-  never scores a chromosome (the paper's anti-static-prediction stance).
+* an optional **surrogate pre-screen**: offspring are ranked by a cost
+  estimate (the static transfer-cost formula below, or a journal-fitted
+  :class:`repro.core.surrogate.FittedSurrogate`) and only the most
+  promising ``screen_top_k`` are measured per generation.  Measurement
+  stays the final arbiter — the surrogate only prioritizes, it never
+  scores a chromosome (the paper's anti-static-prediction stance);
+
+* a **compile-parallel / time-serial phase** for two-phase fitness
+  functions (:class:`repro.core.fitness.WallClockFitness` and anything
+  else exposing ``prepare(bits)`` / ``measure(prepared)``): when the
+  timing loop must stay serial (``workers <= 1``), per-chromosome warm-up
+  compiles — ``engine.substitute()`` + ``jax.jit`` tracing, which release
+  the GIL inside XLA — are dispatched concurrently on ``compile_workers``
+  threads *ahead* of the strictly serial timing loop, so a generation pays
+  max(compile) instead of sum(compile).  :class:`EvalStats` reports the
+  wall-clock saved.
 
 The engine is deterministic: results are returned in population order and a
 fixed-seed GA run produces byte-identical results in serial and parallel
@@ -42,8 +53,6 @@ from concurrent.futures import Future, ProcessPoolExecutor, ThreadPoolExecutor
 from concurrent.futures import wait as _wait_futures
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
-
-import numpy as np
 
 from repro.core.ga import Evaluation
 
@@ -146,7 +155,8 @@ def _file_lock(lock_path: str):
 
 def record_search_meta(cache_dir: str, fingerprint: str,
                        rank_corr: float, now: Optional[float] = None,
-                       horizon_s: Optional[float] = None) -> None:
+                       horizon_s: Optional[float] = None,
+                       kind: Optional[str] = None) -> None:
     """Journal one search's surrogate rank correlation for its program
     fingerprint — the evidence :func:`last_rank_corr` serves back so a later
     search of the same program can justify screening automatically.
@@ -165,6 +175,8 @@ def record_search_meta(cache_dir: str, fingerprint: str,
     path = os.path.join(cache_dir, _SEARCH_META_FILE)
     rec = {"fingerprint": fingerprint, "rank_corr": float(rank_corr),
            "ts": now}
+    if kind:                     # which surrogate produced the evidence
+        rec["kind"] = str(kind)  # (static formula vs journal-fitted model)
     with _file_lock(path + ".lock"):
         with open(path, "a", encoding="utf-8") as f:
             f.write(json.dumps(rec) + "\n")
@@ -250,11 +262,19 @@ class EvalStats:
     inflight_hits: int = 0       # joined an in-flight measurement
     screened_out: int = 0        # skipped by the surrogate pre-screen
     eval_wall_s: float = 0.0     # wall-clock spent inside evaluate_batch
+    overlapped_compiles: int = 0  # warm-up compiles run in the overlap phase
+    compile_serial_s: float = 0.0  # sum of individual prepare() durations
+    compile_wall_s: float = 0.0    # wall-clock of the overlapped prepare phase
 
     @property
     def measurements_saved(self) -> int:
         return (self.cache_hits + self.persistent_hits
                 + self.inflight_hits + self.screened_out)
+
+    @property
+    def compile_overlap_saved_s(self) -> float:
+        """Wall-clock the compile-parallel phase saved over serial warm-up."""
+        return max(0.0, self.compile_serial_s - self.compile_wall_s)
 
     def as_dict(self) -> dict:
         return {
@@ -265,6 +285,10 @@ class EvalStats:
             "screened_out": self.screened_out,
             "measurements_saved": self.measurements_saved,
             "eval_wall_s": self.eval_wall_s,
+            "overlapped_compiles": self.overlapped_compiles,
+            "compile_serial_s": self.compile_serial_s,
+            "compile_wall_s": self.compile_wall_s,
+            "compile_overlap_saved_s": self.compile_overlap_saved_s,
         }
 
 
@@ -299,6 +323,17 @@ class Evaluator:
         Results are re-labelled with the requesting chromosome's bits, so
         the GA's bookkeeping is unaffected.  Default: identity (key by raw
         bits, the historical behavior).
+    compile_workers:
+        thread count for the compile-parallel/time-serial phase, used only
+        when the fitness is two-phase (``prepare``/``measure``) and the
+        timing loop is serial (``workers <= 1``).  0/1/None disables
+        overlap (the historical serial warm-up).  Opt-in because it only
+        pays when a chromosome's prepare is one big GIL-releasing compile
+        (the jaxpr substitution path: ``engine.substitute()`` +
+        ``jax.jit``); a prepare dominated by many small compiles or
+        GIL-held interpretation contends instead of overlapping.  Timing
+        fidelity is preserved either way: all warm-up compiles finish
+        before the first chromosome is timed.
     """
 
     def __init__(self, fitness_fn: Optional[Callable[[tuple], Evaluation]],
@@ -309,9 +344,11 @@ class Evaluator:
                  screen_top_k: Optional[int] = None,
                  executor: Optional[Any] = None,
                  dispatch_fn: Optional[Callable[[tuple], Evaluation]] = None,
-                 phenotype_key: Optional[Callable[[tuple], Any]] = None):
+                 phenotype_key: Optional[Callable[[tuple], Any]] = None,
+                 compile_workers: Optional[int] = None):
         self.fitness_fn = fitness_fn
         self.workers = max(0, int(workers))
+        self.compile_workers = max(0, int(compile_workers or 0))
         self._key = phenotype_key or (lambda bits: bits)
         # external executor (e.g. a spawn-based ProcessPoolExecutor whose
         # workers rebuilt the fitness in an initializer): XLA serializes LLVM
@@ -339,6 +376,7 @@ class Evaluator:
         self._lock = threading.Lock()
         self._inflight: dict[tuple, Future] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._compile_pool: Optional[ThreadPoolExecutor] = None
         self._store: Optional[MeasurementCache] = None
         if cache_dir:
             self._store = MeasurementCache(cache_dir, fingerprint or "anon")
@@ -399,30 +437,12 @@ class Evaluator:
         number that lets ``screen_top_k`` be set from data instead of faith.
         nan with fewer than 3 points or a constant ranking.
         """
+        from repro.core.surrogate import spearman_rank_corr
+
         with self._lock:
             pairs = list(self._surrogate_pairs)
-        if len(pairs) < 3:
-            return float("nan")
-        score = np.asarray([p[0] for p in pairs])
-        t = np.asarray([p[1] for p in pairs])
-        if np.ptp(score) == 0 or np.ptp(t) == 0:
-            return float("nan")
-
-        def rank(x: np.ndarray) -> np.ndarray:
-            order = np.argsort(x, kind="stable")
-            r = np.empty(len(x))
-            r[order] = np.arange(len(x), dtype=float)
-            # average ties so equal scores can't fake correlation
-            for v in np.unique(x):
-                m = x == v
-                r[m] = r[m].mean()
-            return r
-
-        rs, rt = rank(score), rank(t)
-        rs -= rs.mean()
-        rt -= rt.mean()
-        denom = float(np.sqrt((rs ** 2).sum() * (rt ** 2).sum()))
-        return float((rs * rt).sum() / denom) if denom else float("nan")
+        return spearman_rank_corr([p[0] for p in pairs],
+                                  [p[1] for p in pairs])
 
     def _measure(self, bits: tuple) -> Evaluation:
         return self._record(bits, self.fitness_fn(bits))
@@ -546,6 +566,13 @@ class Evaluator:
                 pool = self._ensure_pool()
                 for key, bits in fut_bits.items():
                     pool.submit(self._run_measure, bits, futures[key])
+            elif (self.compile_workers > 1 and len(fut_bits) > 1
+                  and hasattr(self.fitness_fn, "prepare")
+                  and hasattr(self.fitness_fn, "measure")):
+                # compile-parallel / time-serial: warm-up compiles overlap
+                # on threads (they release the GIL into XLA), then the
+                # timing loop runs strictly serially in batch order
+                self._run_overlapped(fut_bits, futures)
             else:
                 for key, bits in fut_bits.items():
                     self._run_measure(bits, futures[key])
@@ -592,6 +619,44 @@ class Evaluator:
                        else dataclasses.replace(ev, bits=bits))
         return out
 
+    def _run_overlapped(self, fut_bits: dict, futures: dict) -> None:
+        """Two-phase dispatch: every chromosome's ``prepare`` (build +
+        warm-up compile + verification) runs concurrently; once all have
+        finished, ``measure`` (the timing loop) runs serially in batch
+        order.  Results — including prepare-time failures — are identical
+        to the serial path; only the wall-clock spent compiling shrinks."""
+        pool = self._ensure_compile_pool()
+        items = list(fut_bits.items())
+
+        def timed_prepare(bits: tuple):
+            t0 = time.perf_counter()
+            prep = self.fitness_fn.prepare(bits)
+            return prep, time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        prep_futs = [pool.submit(timed_prepare, bits) for _, bits in items]
+        _wait_futures(prep_futs)
+        compile_wall = time.perf_counter() - t0
+        with self._lock:
+            self.stats.overlapped_compiles += len(items)
+            self.stats.compile_wall_s += compile_wall
+        for (key, bits), pf in zip(items, prep_futs):
+            try:
+                prep, dt = pf.result()
+                with self._lock:
+                    self.stats.compile_serial_s += dt
+                ev = self._record(bits, self.fitness_fn.measure(prep))
+            except BaseException as e:  # fitness fns normally catch their own
+                try:
+                    futures[key].set_exception(e)
+                except Exception:  # future resolved by an aborted batch
+                    pass
+                continue
+            try:
+                futures[key].set_result(ev)
+            except Exception:  # future resolved by an aborted batch;
+                pass           # the measurement itself is cached either way
+
     def _ensure_pool(self) -> ThreadPoolExecutor:
         with self._lock:
             if self._pool is None:
@@ -600,10 +665,21 @@ class Evaluator:
                     thread_name_prefix="ga-eval")
             return self._pool
 
+    def _ensure_compile_pool(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._compile_pool is None:
+                self._compile_pool = ThreadPoolExecutor(
+                    max_workers=self.compile_workers,
+                    thread_name_prefix="ga-compile")
+            return self._compile_pool
+
     def close(self) -> None:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        if self._compile_pool is not None:
+            self._compile_pool.shutdown(wait=True)
+            self._compile_pool = None
 
     def __enter__(self) -> "Evaluator":
         return self

@@ -37,8 +37,30 @@ from repro import roofline as rl
 
 
 @dataclass
+class PreparedRun:
+    """Output of :meth:`WallClockFitness.prepare`: a compiled, verified
+    runner awaiting its (strictly serial) timing loop — or the failure
+    Evaluation that takes its place."""
+
+    bits: tuple
+    runner: Optional[Callable[[], Any]] = None
+    failure: Optional[Evaluation] = None   # build/compile/verify outcome
+
+
+@dataclass
 class WallClockFitness:
-    """bits -> build(bits) -> callable; timed and verified vs reference."""
+    """bits -> build(bits) -> callable; timed and verified vs reference.
+
+    Two-phase: :meth:`prepare` does everything that need not be serial —
+    build the artifact, run the warm-up (compilation; releases the GIL
+    inside XLA), verify against the reference — and :meth:`measure` runs
+    the timing loop, which only means something measured one at a time.
+    ``__call__`` chains them (the historical serial behavior); the
+    evaluation engine overlaps different chromosomes' ``prepare`` calls
+    ahead of a serial ``measure`` pass (``Evaluator.compile_workers``).
+    ``build`` must therefore be safe to invoke from concurrent threads
+    (every shipped builder constructs a fresh runner per call).
+    """
 
     build: Callable[[tuple], Callable[[], Any]]   # returns a nullary runner
     reference_output: Any = None                  # captured from all-off if None
@@ -47,30 +69,41 @@ class WallClockFitness:
     atol: float = 1e-2
     verify_outputs: bool = True
 
-    def __call__(self, bits: tuple) -> Evaluation:
+    def prepare(self, bits: tuple) -> PreparedRun:
+        bits = tuple(bits)
         try:
             runner = self.build(bits)
             out = runner()                        # warm-up (compilation)
             out = jax.tree_util.tree_map(
                 lambda x: np.asarray(x) if hasattr(x, "dtype") else x, out)
         except Exception as e:  # noqa: BLE001 — paper: errors leave the GA
-            return Evaluation(bits, float("inf"), False,
-                              {"error": f"{type(e).__name__}: {e}"[:300]})
+            return PreparedRun(bits, failure=Evaluation(
+                bits, float("inf"), False,
+                {"error": f"{type(e).__name__}: {e}"[:300]}))
         if self.verify_outputs and self.reference_output is not None:
             v = verify(self.reference_output, out, self.rtol, self.atol)
             if not v.ok:
-                return Evaluation(bits, float("inf"), False,
-                                  {"verify": f"max_abs={v.max_abs:.3g} "
-                                             f"max_rel={v.max_rel:.3g} {v.detail}"})
+                return PreparedRun(bits, failure=Evaluation(
+                    bits, float("inf"), False,
+                    {"verify": f"max_abs={v.max_abs:.3g} "
+                               f"max_rel={v.max_rel:.3g} {v.detail}"}))
+        return PreparedRun(bits, runner=runner)
+
+    def measure(self, prepared: PreparedRun) -> Evaluation:
+        if prepared.failure is not None:
+            return prepared.failure
         best = float("inf")
         for _ in range(self.repeats):
             t0 = time.perf_counter()
-            out2 = runner()
+            out2 = prepared.runner()
             jax.tree_util.tree_map(
                 lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
                 out2)
             best = min(best, time.perf_counter() - t0)
-        return Evaluation(bits, best, True, {})
+        return Evaluation(prepared.bits, best, True, {})
+
+    def __call__(self, bits: tuple) -> Evaluation:
+        return self.measure(self.prepare(bits))
 
 
 # ---------------------------------------------------------------------------

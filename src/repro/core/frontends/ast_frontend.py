@@ -1042,13 +1042,22 @@ class AstFrontend:
         lib_all.update(variant_sites)
 
         def fitness_factory(coding):
-            def fitness(values: tuple):
+            # a WallClockFitness whose build decodes per call (no shared
+            # staging state), so the evaluation engine may overlap different
+            # chromosomes' warm-up/verify phases ahead of the serial timing
+            # loop (two-phase prepare/measure; Executors are per-run)
+            def build(values):
                 impl = dict(block_impl)
-                impl.update(coding.decode(values))
-                _spec["impl"], _spec["lib"] = impl, lib_all
-                return wall_fit(tuple(values))
-            return fitness
+                impl.update(coding.decode(tuple(values)))
+                return runner(impl, lib_all)
 
+            return WallClockFitness(build, reference_output=reference,
+                                    repeats=config.repeats)
+
+        # no impl_resolver: ast bind results are already folded in at the
+        # *menu* level — region.alternatives holds only BOUND variants, so
+        # the gene decode itself clamps every chromosome into implementations
+        # that run (phenotype dedup needs no extra resolution step here)
         from repro.core.genes import VARIANT_ALPHABET
         return FitnessBundle(
             fitness_factory=fitness_factory,

@@ -285,8 +285,13 @@ class JaxprFrontend:
             block=block, claimed=(), base_impl={},
             cache_extra=(f"jaxpr={graph.source_name}|measured"
                          f"|args={args_sig}|backend={engine.backend}"),
-            serial_only=True, measured=True,
+            serial_only=True, measured=True, overlap_compiles=True,
             destinations=VARIANT_ALPHABET,
+            # bind results join the phenotype key: two chromosomes whose
+            # variants fall back to ref at a site are one program and
+            # share one measurement (eager resolution is static per
+            # (region, impl) — the avals never change)
+            impl_resolver=engine.resolved_impl,
             context={"engine": engine, "example_args": example_args})
 
     def apply_plan(self, graph: RegionGraph, coding, values, bundle):

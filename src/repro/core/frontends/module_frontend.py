@@ -45,6 +45,12 @@ def build_graph(cfg: ArchConfig) -> RegionGraph:
         # WHICH implementation runs; binary sites clamp at their pair
         alternatives = ExecPlan.SITE_VARIANTS.get(field) \
             or _REF_OFFLOAD[field]
+        meta = {"plan_field": field}
+        if field in ("remat", "gather_mode"):
+            # schedule knobs move recomputation/gather placement, not data
+            # onto a device: the transfer planner must not read their
+            # non-reference menu positions as accelerator placements
+            meta["schedule_knob"] = True
         regions.append(Region(
             name=field,
             kind="loop" if field in ("attn_impl", "rglru_impl", "wkv_impl",
@@ -55,7 +61,7 @@ def build_graph(cfg: ArchConfig) -> RegionGraph:
             feature_vector={},
             offloadable=True,
             alternatives=tuple(alternatives),
-            meta={"plan_field": field},
+            meta=meta,
         ))
     return RegionGraph(regions, "module", cfg.arch_id)
 
@@ -104,11 +110,13 @@ class ModuleFrontend:
 
     The static fallback carries only structural signal for module graphs:
     accelerated ExecPlan *compute* values count as device placements in the
-    IR transfer planner (``DEVICE_IMPLS``), so the static cost charges each
-    offloaded compute site its parameter/input uploads and those genes stay
+    IR transfer planner (their position >= 1 in the region's own
+    ``alternatives`` menu), so the static cost charges each offloaded
+    compute site its parameter/input uploads and those genes stay
     conservative.  Schedule knobs (remat / gather_mode) are deliberately
-    transfer-free there, so they decay to the surrogate's more-offload
-    tiebreak and converge to their non-reference values.  Either way this
+    transfer-free there (``meta["schedule_knob"]``), so they decay to the
+    surrogate's more-offload tiebreak and converge to their non-reference
+    values.  Either way this
     makes the fallback a fast
     structural smoke path (graph/coding/pipeline round-trips without a
     mesh); for decisions that matter, pass ``lower_fn`` so chromosomes are

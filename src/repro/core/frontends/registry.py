@@ -96,12 +96,34 @@ class FitnessBundle:
     cache_extra: str = ""                     # measurement-context cache key
     serial_only: bool = False                 # wall-clock: timings don't
                                               # interleave; force workers=0
+    overlap_compiles: bool = False            # a chromosome's warm-up is one
+                                              # big GIL-releasing compile
+                                              # (substitute + jax.jit):
+                                              # Offloader.plan enables the
+                                              # compile-parallel/time-serial
+                                              # phase when GAConfig.
+                                              # compile_workers is unset.
+                                              # Leave False where prepare is
+                                              # many small compiles or GIL-
+                                              # held interpretation — those
+                                              # contend instead of overlapping
     measured: bool = True                     # False = static-cost stub (no
                                               # real execution behind fitness)
     destinations: Optional[tuple] = None      # frontend-proposed gene
                                               # alphabet (e.g. the jaxpr
                                               # variant alphabet); used when
                                               # the config left the default
+    impl_resolver: Optional[Callable[[str, Any], Any]] = None
+                                              # (region, decoded impl) -> the
+                                              # impl that actually runs after
+                                              # the frontend's bind/fallback
+                                              # rule — folded into the
+                                              # phenotype key so chromosomes
+                                              # whose variants fall back to
+                                              # the same implementation share
+                                              # one measurement.  Must be
+                                              # static per (region, impl)
+                                              # for the search's lifetime
 
     context: dict = field(default_factory=dict)    # frontend-private state,
                                               # consumed by apply_plan / shims

@@ -43,6 +43,23 @@ class GAConfig:
     workers: int = 0                  # 0/1 serial; N>1 thread pool (compile-
                                       # bound fitness only — keep wall-clock
                                       # fitness serial for timing fidelity)
+    compile_workers: Optional[int] = None
+                                      # compile-parallel/time-serial phase for
+                                      # two-phase fitness (WallClockFitness
+                                      # prepare/measure): warm-up compiles of
+                                      # different chromosomes overlap on this
+                                      # many threads ahead of the strictly
+                                      # serial timing loop.  None = the
+                                      # frontend decides — Offloader.plan
+                                      # auto-enables it where the bundle says
+                                      # a chromosome's prepare is one big
+                                      # GIL-releasing compile
+                                      # (FitnessBundle.overlap_compiles: the
+                                      # jaxpr substitution path); bare
+                                      # run_ga/ga_search keep warm-ups serial.
+                                      # 0/1 = explicitly serial.  Safe with
+                                      # serial_only fitness: timing never
+                                      # interleaves with compilation
     pool: Optional[str] = None        # registered fitness-factory name: run
                                       # measurements in an evaluator.
                                       # ProcessPool of `workers` spawn
@@ -80,6 +97,15 @@ class GAConfig:
                                       # ignored (and compacted away), so
                                       # auto-screening never acts on a stale
                                       # fingerprint
+    fit_surrogate: bool = True        # fit a regression surrogate against the
+                                      # fingerprint's measurement journal
+                                      # (repro.core.surrogate) and prefer it
+                                      # over the static transfer-cost formula
+                                      # when its journal rank correlation is
+                                      # strictly better.  Takes effect via
+                                      # ga_search with a cache_dir
+    surrogate_min_records: int = 10   # journal rows below which the fit
+                                      # abstains and the hand formula stays
     dup_retries: int = 3              # re-mutation attempts per duplicate child
 
 
@@ -113,6 +139,15 @@ class GAResult:
                                       # fitness (nan when no surrogate or
                                       # too few finite measurements) — the
                                       # number that justifies screen_top_k
+    surrogate_kind: str = "static"    # which surrogate ranked offspring:
+                                      # the hand transfer-cost formula or a
+                                      # journal-fitted regression ("fitted",
+                                      # repro.core.surrogate) — set by
+                                      # ga_search when the fitted model's
+                                      # journal rank corr beats the static
+    compile_overlap_saved_s: float = 0.0  # wall-clock saved by overlapping
+                                      # warm-up compiles ahead of the serial
+                                      # timing loop (EvalStats)
 
     @property
     def speedup_vs_baseline(self) -> float:
@@ -170,7 +205,8 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
                 "loop_offload_pass / Offloader.plan (which own the pool "
                 "lifecycle) or pass a pre-built Evaluator")
         evaluator = Evaluator(fitness_fn, workers=cfg.workers,
-                              screen_top_k=cfg.screen_top_k)
+                              screen_top_k=cfg.screen_top_k,
+                              compile_workers=cfg.compile_workers)
 
     def finish(best, history, baseline) -> GAResult:
         st = evaluator.stats
@@ -186,7 +222,9 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
             duplicates_avoided=dup_avoided,
             wall_s=time.perf_counter() - t_start,
             eval_wall_s=st.eval_wall_s,
-            surrogate_rank_corr=corr)
+            surrogate_rank_corr=corr,
+            compile_overlap_saved_s=getattr(st, "compile_overlap_saved_s",
+                                            0.0))
 
     dup_avoided = 0
     if length == 0:

@@ -41,7 +41,20 @@ from repro.core.transfer_planner import TransferPlan, plan_transfers
 from repro.core.variants import generic_plan_report
 
 __all__ = ["OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
-           "ga_search", "phenotype_key", "plan_offload"]
+           "ga_search", "phenotype_key", "plan_offload",
+           "search_fingerprint"]
+
+
+def search_fingerprint(graph: RegionGraph, coding: Optional[GeneCoding] = None,
+                       exclude: Sequence[str] = (),
+                       cache_extra: str = "") -> str:
+    """The persistent-cache fingerprint ``ga_search`` keys a search by —
+    exposed so benches/tools can open the same measurement journal and
+    fitted-surrogate records a search wrote."""
+    if coding is None:
+        coding = coding_from_graph(graph, exclude=exclude)
+    return graph.fingerprint(f"{cache_extra}|exclude={sorted(exclude)}"
+                             f"|dest={coding.destinations}")
 
 
 # ---------------------------------------------------------------------------
@@ -49,7 +62,9 @@ __all__ = ["OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
 # ---------------------------------------------------------------------------
 
 
-def phenotype_key(coding: GeneCoding) -> Callable[[tuple], Any]:
+def phenotype_key(coding: GeneCoding,
+                  resolver: Optional[Callable[[str, Any], Any]] = None
+                  ) -> Callable[[tuple], Any]:
     """Canonicalize a chromosome to its *phenotype*: the decoded
     region -> implementation map plus any cost-only destination assignment.
 
@@ -60,8 +75,26 @@ def phenotype_key(coding: GeneCoding) -> Callable[[tuple], Any]:
     reference impl but charge a modeled cost, so their assignment is part
     of the key: parking a gene on a stub is a different phenotype than
     leaving it on the reference path.
+
+    ``resolver`` folds the frontend's *bind results* into the key
+    (ROADMAP's resolution-fallback slice): ``resolver(region, impl_id)``
+    returns the implementation that would actually run — e.g. the jaxpr
+    engine's eager variant resolution, where two variants that both fall
+    back to ref at a site are the same program and share one measurement.
+    Resolution must be static per (region, impl) for the search's lifetime
+    (true of eager binds over fixed avals); a resolver error keeps the
+    decoded id, never loses a measurement.
     """
     dests = [get_destination(d) for d in coding.destinations]
+
+    def resolve(region: str, impl_id: Any) -> Any:
+        if resolver is None:
+            return impl_id
+        try:
+            out = resolver(region, impl_id)
+        except Exception:  # noqa: BLE001 — a broken resolver only weakens
+            return impl_id  # dedup, it must never lose a measurement
+        return impl_id if out is None else out
 
     def key(bits: tuple) -> Any:
         bits = tuple(bits)
@@ -71,7 +104,8 @@ def phenotype_key(coding: GeneCoding) -> Callable[[tuple], Any]:
         stubs = tuple((s.region, dests[int(v)].name)
                       for s, v in zip(coding.sites, bits)
                       if not dests[int(v)].executable)
-        return (tuple((s.region, str(impl[s.region])) for s in coding.sites),
+        return (tuple((s.region, str(resolve(s.region, impl[s.region])))
+                      for s in coding.sites),
                 stubs)
 
     return key
@@ -84,17 +118,30 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
               log: Optional[Callable[[str], None]] = None,
               cache_extra: str = "",
               evaluator: Optional[Evaluator] = None,
-              seeds: Sequence[Sequence[int]] = ()
+              seeds: Sequence[Sequence[int]] = (),
+              impl_resolver: Optional[Callable[[str, Any], Any]] = None
               ) -> tuple[GeneCoding, GAResult]:
     """Run the GA over a graph's unclaimed offloadable regions.
 
     Owns the evaluation engine unless one is passed in: persistent cache
     keyed by the graph's content fingerprint (plus ``cache_extra`` for
-    measurement context the graph can't see), the static transfer-cost
-    surrogate (always attached, so every search reports its surrogate rank
+    measurement context the graph can't see), a screening surrogate
+    (always attached, so every search reports its surrogate rank
     correlation; screening additionally requires ``screen_top_k``), and —
     when ``ga_cfg.pool`` names a registered fitness factory — a spawn
     :class:`ProcessPool` for cross-process measurement.
+
+    The surrogate is *learned where the evidence allows*: with a
+    ``cache_dir``, the fingerprint's measurement journal is fitted
+    (:func:`repro.core.surrogate.fit_surrogate`, hand formula as prior)
+    and the fitted model replaces the static transfer-cost formula
+    whenever its journal rank correlation is strictly better — so
+    screening improves with every search instead of merely being measured.
+    ``GAResult.surrogate_kind`` records which model ranked the offspring.
+
+    ``impl_resolver`` (usually ``FitnessBundle.impl_resolver``) folds the
+    frontend's bind results into the phenotype key, so chromosomes whose
+    variants fall back to the same implementation share one measurement.
     """
     cfg = ga_cfg or GAConfig()
     if coding is None:
@@ -102,11 +149,27 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
     owns = evaluator is None
     pool: Optional[ProcessPool] = None
     fingerprint = ""
+    surrogate_kind = "static"
     if evaluator is None:
         surrogate = transfer_cost_surrogate(graph, coding)
-        fingerprint = graph.fingerprint(
-            f"{cache_extra}|exclude={sorted(exclude)}"
-            f"|dest={coding.destinations}")
+        fingerprint = search_fingerprint(graph, coding, exclude, cache_extra)
+        if cfg.cache_dir and cfg.fit_surrogate:
+            # journal-fitted surrogate (ROADMAP: *fit* the surrogate
+            # against measurement journals): prefer the regression over
+            # the hand formula only when the journal proves it ranks this
+            # program's patterns strictly better
+            from repro.core.surrogate import fit_surrogate
+            fitted = fit_surrogate(graph, coding, cfg.cache_dir,
+                                   fingerprint, prior=surrogate,
+                                   min_records=cfg.surrogate_min_records)
+            if fitted is not None and fitted.beats_static:
+                surrogate = fitted
+                surrogate_kind = "fitted"
+                if log:
+                    log(f"surrogate: journal fit over {fitted.n_records} "
+                        f"records (rank corr {fitted.rank_corr:.2f} > "
+                        f"static {fitted.static_rank_corr:.2f}) replaces "
+                        f"the hand formula")
         top_k = cfg.screen_top_k
         if top_k is None and cfg.auto_screen and cfg.cache_dir:
             # surrogate auto-screening (ROADMAP): a prior search of this
@@ -124,7 +187,9 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
                         f"screen_top_k={top_k}")
         common = dict(cache_dir=cfg.cache_dir, fingerprint=fingerprint,
                       surrogate=surrogate, screen_top_k=top_k,
-                      phenotype_key=phenotype_key(coding))
+                      phenotype_key=phenotype_key(coding,
+                                                  resolver=impl_resolver),
+                      compile_workers=cfg.compile_workers)
         if cfg.pool is not None:
             pool = ProcessPool(cfg.pool, workers=cfg.workers or None)
             evaluator = Evaluator(None, **pool.evaluator_kwargs(), **common)
@@ -133,6 +198,7 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
     try:
         ga = run_ga(coding.length, fitness_fn, cfg, log=log,
                     evaluator=evaluator, arity=coding.arity, seeds=seeds)
+        ga = dataclasses.replace(ga, surrogate_kind=surrogate_kind)
         if owns and cfg.cache_dir and ga.screened_out == 0:
             # only unscreened searches are evidence: a screened search
             # measures the correlation on surrogate-selected survivors
@@ -140,7 +206,8 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
             # itself with its own output
             record_search_meta(cfg.cache_dir, fingerprint,
                                ga.surrogate_rank_corr,
-                               horizon_s=cfg.auto_screen_horizon_s)
+                               horizon_s=cfg.auto_screen_horizon_s,
+                               kind=surrogate_kind)
     finally:
         if owns:
             evaluator.close()
@@ -373,8 +440,10 @@ class OffloadResult:
             "duplicates_avoided": g.duplicates_avoided,
             "measurements_saved": g.measurements_saved,
             "surrogate_rank_corr": g.surrogate_rank_corr,
+            "surrogate_kind": g.surrogate_kind,
             "wall_s": g.wall_s,
             "eval_wall_s": g.eval_wall_s,
+            "compile_overlap_saved_s": g.compile_overlap_saved_s,
         }
 
     def summary(self) -> dict:
@@ -396,22 +465,43 @@ class OffloadResult:
 # ---------------------------------------------------------------------------
 
 
-def _with_destination_costs(graph: RegionGraph, coding: GeneCoding,
-                            fitness_fn: Callable) -> Callable:
-    """Charge cost-only destinations' modeled time on top of measurements."""
-    if all(get_destination(d).executable for d in coding.destinations):
-        return fitness_fn
+class _DestinationCostFitness:
+    """Charge cost-only destinations' modeled time on top of measurements,
+    preserving the inner fitness's two-phase (prepare/measure) protocol so
+    the compile-overlap path still applies."""
 
-    def wrapped(values: tuple) -> Evaluation:
-        values = tuple(values)
-        ev = fitness_fn(values)
-        pen = modeled_cost_s(graph, coding, values)
+    def __init__(self, graph: RegionGraph, coding: GeneCoding,
+                 inner: Callable):
+        self._graph, self._coding, self._inner = graph, coding, inner
+
+    def _charge(self, ev: Evaluation) -> Evaluation:
+        pen = modeled_cost_s(self._graph, self._coding, ev.bits)
         if pen > 0 and math.isfinite(ev.time_s):
             ev = Evaluation(ev.bits, ev.time_s + pen, ev.valid,
                             {**ev.detail, "modeled_cost_s": pen})
         return ev
 
-    return wrapped
+    def __call__(self, values: tuple) -> Evaluation:
+        return self._charge(self._inner(tuple(values)))
+
+
+class _TwoPhaseDestinationCostFitness(_DestinationCostFitness):
+    def prepare(self, values: tuple):
+        return self._inner.prepare(tuple(values))
+
+    def measure(self, prepared) -> Evaluation:
+        return self._charge(self._inner.measure(prepared))
+
+
+def _with_destination_costs(graph: RegionGraph, coding: GeneCoding,
+                            fitness_fn: Callable) -> Callable:
+    """Charge cost-only destinations' modeled time on top of measurements."""
+    if all(get_destination(d).executable for d in coding.destinations):
+        return fitness_fn
+    cls = _TwoPhaseDestinationCostFitness \
+        if hasattr(fitness_fn, "prepare") and hasattr(fitness_fn, "measure") \
+        else _DestinationCostFitness
+    return cls(graph, coding, fitness_fn)
 
 
 @dataclass
@@ -454,6 +544,15 @@ class Offloader:
             # parallel timing is meaningless
             log("wall-clock fitness: forcing serial evaluation (workers=0)")
             ga_cfg = dataclasses.replace(ga_cfg, workers=0, pool=None)
+        if ga_cfg.compile_workers is None and bundle.overlap_compiles:
+            # the frontend vouches that a chromosome's warm-up is one big
+            # GIL-releasing compile: overlap different chromosomes' compiles
+            # ahead of the (still strictly serial) timing loop
+            cw = min(4, os.cpu_count() or 1)
+            if cw > 1:
+                log(f"compile-parallel/time-serial warm-ups: "
+                    f"compile_workers={cw}")
+                ga_cfg = dataclasses.replace(ga_cfg, compile_workers=cw)
         if ga_cfg.pool is not None:
             # pool workers rebuild their fitness from the registered factory
             # and cannot see the fitness this pipeline just composed (block
@@ -482,7 +581,8 @@ class Offloader:
 
         coding, ga = ga_search(
             graph, fitness, ga_cfg, coding=coding, exclude=bundle.claimed,
-            log=log, cache_extra=bundle.cache_extra, seeds=seeds)
+            log=log, cache_extra=bundle.cache_extra, seeds=seeds,
+            impl_resolver=bundle.impl_resolver)
 
         best = ga.best
         pattern = decoded_pattern(coding, best.bits, bundle.base_impl)

@@ -311,6 +311,23 @@ class SubstitutionEngine:
 
     # -- convenience --------------------------------------------------------
 
+    def resolved_impl(self, region: str, impl_id) -> str:
+        """The implementation that would actually run at ``region`` under
+        ``impl_id``, after the eager bind/fallback rule — ``"ref"`` when
+        the variant cannot bind (or the region has no site).  This is the
+        frontend's contribution to the phenotype key: two plans whose
+        variants both fall back at a site are the same program and share
+        one measurement.  Resolution is memoized per (region, impl) and
+        static for the engine's lifetime (avals are fixed)."""
+        requested = str(impl_id)
+        site = next((s for s in self._sites if s.region == region), None)
+        if site is None:
+            # substitute() leaves regions without a site untouched — any
+            # requested impl there runs the reference path
+            return "ref"
+        _adapter, chosen, _why = self._resolve_variant(site, requested)
+        return chosen
+
     def reference(self) -> Any:
         """The unsubstituted program's outputs on the example arguments
         (computed once, then cached)."""

@@ -1,0 +1,385 @@
+"""Journal-fitted surrogate cost model: screening that *learns* from the
+measurement journals instead of merely being measured.
+
+The paper spends nearly all of its search budget on verification-environment
+measurements; Yamato's mixed-destination follow-up (arXiv:2011.12431) shows
+the search only scales to many destinations when cheap predicted costs can
+stand in for most measurements, and the function-block work (arXiv:2004.09883)
+argues offload decisions should be driven by *recorded performance evidence*,
+not static heuristics.  This module is that evidence loop closed:
+
+* :class:`FeatureExtractor` — per-chromosome features from the same pure-IR
+  machinery the hand formula uses (the transfer planner), but kept separate
+  per signal instead of collapsed into one number: per-destination gene
+  counts, H2D/D2H transfer counts, byte volume, round-trip products of
+  per-iteration transfers, offloaded-region trip products, modeled stub
+  cost — plus the hand formula's own score as the *prior feature*.
+* :func:`fit_surrogate` — ridge / least-squares regression of those features
+  against the persisted measurement journal
+  (``measurements_{fingerprint}.jsonl``, written by
+  :class:`repro.core.evaluator.MeasurementCache`).  With fewer than
+  ``min_records`` journal rows the fit abstains and the caller keeps the
+  hand formula (the prior *is* the fallback); with enough rows the fitted
+  model can only lean away from the prior where the data supports it.
+* :class:`FittedSurrogate` — the resulting ``bits -> score`` ranking
+  callable, carrying its *leave-one-out* journal rank correlation next to
+  the static formula's on the same rows, so ``ga_search`` can prefer
+  whichever model demonstrably ranks this program's offspring better
+  (LOO, so an overfit of journal noise cannot win the comparison).
+* coefficient persistence — fits journal to ``surrogate_fit.jsonl`` beside
+  ``search_meta.jsonl`` (newest-per-fingerprint compaction under the same
+  flock idiom), so fitted models are inspectable and survive the process.
+
+Like the static formula, a fitted surrogate only ever *ranks* offspring for
+the pre-screen — measurement stays the final arbiter (the paper's
+anti-static-prediction stance).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.genes import (GeneCoding, _trip_product, get_destination,
+                              modeled_cost_s)
+from repro.core.ir import RegionGraph
+from repro.core.transfer_planner import plan_transfers
+
+__all__ = ["FeatureExtractor", "FittedSurrogate", "fit_surrogate",
+           "load_fit", "spearman_rank_corr", "SURROGATE_FIT_FILE"]
+
+SURROGATE_FIT_FILE = "surrogate_fit.jsonl"
+_FIT_MAX_LINES = 256
+
+
+# ---------------------------------------------------------------------------
+# rank correlation (shared with the evaluator's calibration report)
+# ---------------------------------------------------------------------------
+
+
+def _rank(x: np.ndarray) -> np.ndarray:
+    order = np.argsort(x, kind="stable")
+    r = np.empty(len(x))
+    r[order] = np.arange(len(x), dtype=float)
+    # average ties so equal scores can't fake correlation
+    for v in np.unique(x):
+        m = x == v
+        r[m] = r[m].mean()
+    return r
+
+
+def spearman_rank_corr(score: Sequence[float], t: Sequence[float]) -> float:
+    """Spearman rank correlation between a surrogate's scores and measured
+    times.  +1 = the surrogate orders exactly as measurement would; ~0 =
+    screening is a coin flip.  nan with fewer than 3 points or a constant
+    ranking."""
+    score = np.asarray(score, dtype=float)
+    t = np.asarray(t, dtype=float)
+    if len(score) < 3 or np.ptp(score) == 0 or np.ptp(t) == 0:
+        return float("nan")
+    rs, rt = _rank(score), _rank(t)
+    rs -= rs.mean()
+    rt -= rt.mean()
+    denom = float(np.sqrt((rs ** 2).sum() * (rt ** 2).sum()))
+    return float((rs * rt).sum() / denom) if denom else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# feature extraction
+# ---------------------------------------------------------------------------
+
+
+class FeatureExtractor:
+    """chromosome -> feature vector, from the same pure-IR signals the hand
+    formula collapses into one score.
+
+    Features (``feature_names`` gives the fitted-coefficient labels):
+
+    * ``prior``          — the static transfer-cost surrogate's score (the
+      hand formula as a regression prior: a fit on few records shrinks to
+      it, a fit on many can overrule it where the journal disagrees)
+    * ``h2d`` / ``d2h``  — static transfer counts from the planner
+    * ``bytes``          — transfer volume, per-variable bytes × trip products
+    * ``round_trips``    — dynamic trip product summed over per-iteration
+      transfers (the paper's CPU↔accelerator round-trip penalty)
+    * ``hoisted``        — transfers the planner pulled out of loops
+    * ``offload_trips``  — trip products of regions placed on an executable
+      accelerator destination (how much work the pattern offloads)
+    * ``stub_cost``      — modeled seconds charged by cost-only destinations
+    * ``dest{k}``        — genes per non-reference alphabet value (variant
+      impl-index counts: how many sites run alphabet entry k)
+    * ``site{i}@{k}``    — per-site one-hot: site i on alphabet value k
+      (what lets the fit learn that one region's variant is slow even when
+      the aggregates look identical)
+    """
+
+    def __init__(self, graph: RegionGraph, coding: GeneCoding,
+                 prior: Callable[[tuple], float],
+                 var_bytes: Optional[dict] = None,
+                 base_impl: Optional[dict] = None):
+        self.graph = graph
+        self.coding = coding
+        self.prior = prior       # bound here: the memo below caches whole
+        self.var_bytes = dict(var_bytes or {})  # vectors, prior score incl.
+        self.base_impl = dict(base_impl or {})
+        self._dests = [get_destination(d) for d in coding.destinations]
+        self._trip = {s.region: _trip_product(graph, graph.by_name(s.region))
+                      for s in coding.sites}
+        self.feature_names: tuple[str, ...] = tuple(
+            ["prior", "h2d", "d2h", "bytes", "round_trips", "hoisted",
+             "offload_trips", "stub_cost"]
+            + [f"dest{k}" for k in range(1, coding.arity)]
+            + [f"site{i}@{k}" for i in range(coding.length)
+               for k in range(1, coding.arity)])
+        self._memo: dict[tuple, np.ndarray] = {}
+
+    def __call__(self, bits: Sequence[int]) -> np.ndarray:
+        bits = tuple(int(b) for b in bits)
+        hit = self._memo.get(bits)
+        if hit is not None:
+            return hit
+        coding, graph = self.coding, self.graph
+        impl = dict(self.base_impl)
+        impl.update(coding.decode(bits))
+        plan = plan_transfers(graph, impl, hoist=True)
+        n_h2d = n_d2h = n_hoist = 0
+        total_bytes = 0.0
+        round_trips = 0.0
+        for t in plan.transfers:
+            if t.direction == "h2d":
+                n_h2d += 1
+            else:
+                n_d2h += 1
+            if t.hoisted_from:
+                n_hoist += 1
+            trips = 1
+            if t.per_iteration:
+                trips = _trip_product(graph, graph.by_name(t.at_region))
+                round_trips += trips
+            total_bytes += trips * float(self.var_bytes.get(t.var, 1.0))
+        offload_trips = sum(
+            self._trip[s.region] for s, v in zip(coding.sites, bits)
+            if int(v) != 0 and self._dests[int(v)].executable)
+        stub = modeled_cost_s(graph, coding, bits) \
+            if any(not d.executable for d in self._dests) else 0.0
+        dest_counts = [sum(1 for v in bits if int(v) == k)
+                       for k in range(1, coding.arity)]
+        onehot = [1.0 if int(v) == k else 0.0
+                  for v in bits for k in range(1, coding.arity)]
+        vec = np.asarray(
+            [float(self.prior(bits)), float(n_h2d), float(n_d2h),
+             total_bytes,
+             round_trips, float(n_hoist), float(offload_trips), stub]
+            + [float(c) for c in dest_counts] + onehot)
+        self._memo[bits] = vec
+        return vec
+
+
+# ---------------------------------------------------------------------------
+# the fitted model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FittedSurrogate:
+    """A ``bits -> score`` ranking callable fitted to this fingerprint's
+    measurement journal, carrying the evidence for preferring it."""
+
+    extractor: FeatureExtractor           # holds the bound prior
+    coef: np.ndarray                      # feature weights
+    intercept: float
+    mean: np.ndarray                      # feature standardization
+    scale: np.ndarray
+    n_records: int
+    rank_corr: float                      # journal Spearman of *leave-one-
+                                          # out* predictions — an honest
+                                          # generalization estimate, not the
+                                          # training fit
+    static_rank_corr: float               # journal Spearman, hand formula
+    fingerprint: str = ""
+    kind: str = "fitted"
+
+    def __call__(self, bits: tuple) -> float:
+        x = (self.extractor(bits) - self.mean) / self.scale
+        return float(self.intercept + x @ self.coef)
+
+    @property
+    def beats_static(self) -> bool:
+        """True when the journal says this fit ranks strictly better than
+        the hand formula — the activation rule ``ga_search`` applies.
+        ``rank_corr`` is leave-one-out, so a fit that merely interpolates
+        journal noise cannot clear the bar; and it must be positively
+        correlated at all — an inverted ranker never activates, even
+        against a static formula with no measurable correlation."""
+        return (math.isfinite(self.rank_corr) and self.rank_corr > 0
+                and (not math.isfinite(self.static_rank_corr)
+                     or self.rank_corr > self.static_rank_corr))
+
+    def coefficients(self) -> dict[str, float]:
+        """feature name -> fitted weight (standardized space) — the
+        inspection surface ``docs/api.md`` documents."""
+        return {n: float(c)
+                for n, c in zip(self.extractor.feature_names, self.coef)}
+
+
+def _journal_rows(cache_dir: str, fingerprint: str,
+                  coding: GeneCoding) -> list[tuple[tuple, float]]:
+    """(bits, measured seconds) for every finite valid measurement of this
+    fingerprint whose chromosome fits the current coding."""
+    from repro.core.evaluator import MeasurementCache
+
+    rows: list[tuple[tuple, float]] = []
+    for bits, ev in MeasurementCache(cache_dir, fingerprint).load().items():
+        if (ev.valid and math.isfinite(ev.time_s)
+                and len(bits) == coding.length
+                and all(0 <= int(v) < coding.arity for v in bits)):
+            rows.append((bits, float(ev.time_s)))
+    return rows
+
+
+def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
+                  fingerprint: str,
+                  prior: Optional[Callable[[tuple], float]] = None,
+                  min_records: int = 10, ridge: float = 1e-2,
+                  var_bytes: Optional[dict] = None,
+                  base_impl: Optional[dict] = None,
+                  persist: bool = True) -> Optional[FittedSurrogate]:
+    """Fit a ridge regression of chromosome features against the persisted
+    measurement journal for ``fingerprint``.
+
+    Returns ``None`` (caller keeps the hand formula) when the journal has
+    fewer than ``min_records`` usable rows or the measured times carry no
+    ranking signal.  Otherwise the fit is journaled to
+    ``{cache_dir}/surrogate_fit.jsonl`` (beside ``search_meta.jsonl``) and
+    returned with both models' journal rank correlations attached.
+    """
+    from repro.core.evaluator import transfer_cost_surrogate
+
+    if prior is None:
+        prior = transfer_cost_surrogate(graph, coding,
+                                        var_bytes=var_bytes,
+                                        base_impl=base_impl)
+    rows = _journal_rows(cache_dir, fingerprint, coding)
+    if len(rows) < max(3, int(min_records)):
+        return None
+    extractor = FeatureExtractor(graph, coding, prior,
+                                 var_bytes=var_bytes,
+                                 base_impl=base_impl)
+    X = np.stack([extractor(bits) for bits, _ in rows])
+    y = np.asarray([t for _, t in rows])
+    if np.ptp(y) == 0:
+        return None                     # constant journal: nothing to rank
+    mean = X.mean(axis=0)
+    scale = X.std(axis=0)
+    scale[scale == 0] = 1.0             # constant features drop out cleanly
+    Xs = (X - mean) / scale
+    y_mean = float(y.mean())
+    # ridge on the standardized features; the intercept is the journal mean
+    # and stays unpenalized.  lam scales with n so more data loosens the
+    # shrinkage toward the prior-feature direction.
+    lam = float(ridge) * len(rows)
+    p = Xs.shape[1]
+    A = Xs.T @ Xs + lam * np.eye(p)
+    b = Xs.T @ (y - y_mean)
+    try:
+        inv_A = np.linalg.inv(A)
+    except np.linalg.LinAlgError:       # pragma: no cover — lam>0 makes A PD
+        inv_A = np.linalg.pinv(A)
+    coef = inv_A @ b
+    pred = y_mean + Xs @ coef
+    # leave-one-out predictions, closed form for ridge: the honest fit
+    # quality.  With per-site one-hot features p can approach (or exceed)
+    # the journal size, where the training fit near-interpolates noise and
+    # its in-sample Spearman would "beat" the static formula every time —
+    # LOO residuals e_i / (1 - h_i) are what the activation rule may trust.
+    leverage = np.einsum("ij,jk,ik->i", Xs, inv_A, Xs) + 1.0 / len(rows)
+    leverage = np.clip(leverage, 0.0, 1.0 - 1e-6)
+    loo_pred = y - (y - pred) / (1.0 - leverage)
+    fitted = FittedSurrogate(
+        extractor=extractor, coef=coef, intercept=y_mean,
+        mean=mean, scale=scale, n_records=len(rows),
+        rank_corr=spearman_rank_corr(loo_pred, y),
+        static_rank_corr=spearman_rank_corr(
+            [prior(bits) for bits, _ in rows], y),
+        fingerprint=fingerprint)
+    if persist:
+        _save_fit(cache_dir, fitted)
+    return fitted
+
+
+# ---------------------------------------------------------------------------
+# coefficient persistence (same journal idiom as search_meta.jsonl)
+# ---------------------------------------------------------------------------
+
+
+def _save_fit(cache_dir: str, fit: FittedSurrogate) -> None:
+    from repro.core.evaluator import _file_lock
+
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, SURROGATE_FIT_FILE)
+    rec = {
+        "fingerprint": fit.fingerprint,
+        "n_records": fit.n_records,
+        "rank_corr": fit.rank_corr if math.isfinite(fit.rank_corr) else None,
+        "static_rank_corr": fit.static_rank_corr
+        if math.isfinite(fit.static_rank_corr) else None,
+        "intercept": fit.intercept,
+        "feature_names": list(fit.extractor.feature_names),
+        "coef": [float(c) for c in fit.coef],
+        "mean": [float(m) for m in fit.mean],
+        "scale": [float(s) for s in fit.scale],
+    }
+    with _file_lock(path + ".lock"):
+        with open(path, "a", encoding="utf-8") as f:
+            f.write(json.dumps(rec) + "\n")
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                lines = f.readlines()
+        except FileNotFoundError:       # pragma: no cover
+            return
+        if len(lines) <= _FIT_MAX_LINES:
+            return
+        newest: dict[str, str] = {}
+        for line in lines:
+            try:
+                fp = json.loads(line).get("fingerprint")
+            except json.JSONDecodeError:
+                continue
+            if fp:
+                newest.pop(fp, None)
+                newest[fp] = line       # reinsert: keeps recency order
+        tmp = path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.writelines(list(newest.values())[-_FIT_MAX_LINES:])
+        os.replace(tmp, path)
+
+
+def load_fit(cache_dir: str, fingerprint: str) -> Optional[dict]:
+    """Most recent persisted fit record for a fingerprint (coefficients by
+    feature name, journal size, both rank correlations) — the inspection
+    entry point; returns None when nothing was ever fitted."""
+    out: Optional[dict] = None
+    try:
+        with open(os.path.join(cache_dir, SURROGATE_FIT_FILE), "r",
+                  encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue            # torn concurrent write
+                if rec.get("fingerprint") == fingerprint:
+                    out = rec
+    except FileNotFoundError:
+        pass
+    if out is not None:
+        out = dict(out)
+        out["coefficients"] = dict(zip(out.get("feature_names", ()),
+                                       out.get("coef", ())))
+    return out

@@ -61,29 +61,58 @@ class TransferPlan:
         return total
 
 
-#: implementation ids that place a region's COMPUTE on the accelerator
-#: side: the ast frontend's jit path, a library substitution, the jaxpr
-#: frontend's legacy auto-kernel choice, the kernel registry's named
-#: variants, and the module frontend's accelerated *compute* plan values
-#: (repro.models.plan — impl knobs incl. the fused-QKV boolean).  Schedule
-#: knobs (remat, gather_mode) deliberately stay host-side: they move
-#: recomputation/gather placement, not data onto a device, so charging
-#: them transfers would distort the static cost.
+#: fallback implementation ids that place a region's COMPUTE on the
+#: accelerator side *when the impl does not appear in the region's own
+#: implementation menu* (``region.alternatives``): the ast frontend's jit
+#: path, a library substitution, the jaxpr frontend's legacy auto-kernel
+#: choice, the kernel registry's named variants, and the module frontend's
+#: accelerated *compute* plan values (repro.models.plan — impl knobs incl.
+#: the fused-QKV boolean).  Device-ness is decided **per site** first: an
+#: impl's position in ``region.alternatives`` (index 0 = the reference =
+#: host, 1+ = accelerated) — generic names like "chunked"/"fused" are
+#: shared across frontend namespaces, so a global name set cannot tell one
+#: region's accelerated variant from another region's reference value.
+#: Schedule knobs (remat, gather_mode; ``region.meta["schedule_knob"]``)
+#: deliberately stay host-side: they move recomputation/gather placement,
+#: not data onto a device, so charging them transfers would distort the
+#: static cost.
 DEVICE_IMPLS = frozenset({
     "jit", "lib", "kernel", "fused_jnp", "pallas",
     "chunked", "assoc", "fused", "scatter_ep", "chunked_vocab",
 })
 
 
+def _alt_index(alternatives: tuple, impl_id) -> Optional[int]:
+    """Position of ``impl_id`` in a region's implementation menu, matched
+    by identity or same-type equality — so the integer 1 can never alias
+    the boolean True of a flag-valued knob like qkv_fused."""
+    for i, alt in enumerate(alternatives):
+        if alt is impl_id:
+            return i
+        if type(alt) is type(impl_id) and alt == impl_id:
+            return i
+    return None
+
+
 def plan_transfers(graph: RegionGraph, impl: dict[str, str],
                    hoist: bool = True) -> TransferPlan:
-    """impl: region -> an id in :data:`DEVICE_IMPLS` (accelerator), the
-    boolean True (a flag-valued knob like qkv_fused on its accelerated
-    setting — matched by identity so an integer impl id 1 can never alias
-    it), or anything else (host)."""
+    """impl: region -> an implementation id.  A region computes on the
+    accelerator when its id sits at position >= 1 of the region's own
+    ``alternatives`` menu (position 0 is the reference path); ids outside
+    the menu fall back to the global :data:`DEVICE_IMPLS` name set, or the
+    boolean True (a flag-valued knob on its accelerated setting — matched
+    by identity so an integer impl id 1 can never alias it).  Regions
+    marked ``meta["schedule_knob"]`` never count as device placements."""
 
     def on_device(r: Region) -> bool:
         impl_id = impl.get(r.name)
+        if impl_id is None:
+            return False
+        if r.meta.get("schedule_knob"):
+            return False
+        idx = _alt_index(r.alternatives, impl_id)
+        if idx is not None:
+            return idx >= 1
         return impl_id is True or impl_id in DEVICE_IMPLS
 
     plan = TransferPlan()
