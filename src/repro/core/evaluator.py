@@ -265,6 +265,12 @@ class EvalStats:
     overlapped_compiles: int = 0  # warm-up compiles run in the overlap phase
     compile_serial_s: float = 0.0  # sum of individual prepare() durations
     compile_wall_s: float = 0.0    # wall-clock of the overlapped prepare phase
+    overlap_est_saved_s: float = 0.0  # probe-calibrated estimate of the true
+                                      # saving: n * (uncontended solo prepare)
+                                      # minus the phase's actual wall-clock
+    overlap_disabled: bool = False    # adaptive backoff tripped: contention
+                                      # ate the savings, overlap is off for
+                                      # the rest of this evaluator's life
 
     @property
     def measurements_saved(self) -> int:
@@ -289,6 +295,8 @@ class EvalStats:
             "compile_serial_s": self.compile_serial_s,
             "compile_wall_s": self.compile_wall_s,
             "compile_overlap_saved_s": self.compile_overlap_saved_s,
+            "overlap_est_saved_s": self.overlap_est_saved_s,
+            "overlap_disabled": self.overlap_disabled,
         }
 
 
@@ -377,6 +385,9 @@ class Evaluator:
         self._inflight: dict[tuple, Future] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
         self._compile_pool: Optional[ThreadPoolExecutor] = None
+        self._overlap_batches = 0     # batches charged against the probe
+        self._overlap_probe_s: Optional[float] = None   # mean cost of one
+        self._overlap_solo_n = 0                        # solo prepare
         self._store: Optional[MeasurementCache] = None
         if cache_dir:
             self._store = MeasurementCache(cache_dir, fingerprint or "anon")
@@ -445,6 +456,21 @@ class Evaluator:
                                   [p[1] for p in pairs])
 
     def _measure(self, bits: tuple) -> Evaluation:
+        fn = self.fitness_fn
+        if (self.workers <= 1 and hasattr(fn, "prepare")
+                and hasattr(fn, "measure")):
+            # serial two-phase measurement (baseline chromosome, single-item
+            # batches, post-backoff batches): an uncontended prepare — time
+            # it to calibrate the overlap phase's saving estimate for free
+            t0 = time.perf_counter()
+            prep = fn.prepare(bits)
+            dt = time.perf_counter() - t0
+            with self._lock:
+                n = self._overlap_solo_n
+                prev = self._overlap_probe_s or 0.0
+                self._overlap_probe_s = (prev * n + dt) / (n + 1)
+                self._overlap_solo_n = n + 1
+            return self._record(bits, fn.measure(prep))
         return self._record(bits, self.fitness_fn(bits))
 
     def _run_measure(self, bits: tuple, fut: Future) -> None:
@@ -567,6 +593,7 @@ class Evaluator:
                 for key, bits in fut_bits.items():
                     pool.submit(self._run_measure, bits, futures[key])
             elif (self.compile_workers > 1 and len(fut_bits) > 1
+                  and not self.stats.overlap_disabled
                   and hasattr(self.fitness_fn, "prepare")
                   and hasattr(self.fitness_fn, "measure")):
                 # compile-parallel / time-serial: warm-up compiles overlap
@@ -624,7 +651,19 @@ class Evaluator:
         warm-up compile + verification) runs concurrently; once all have
         finished, ``measure`` (the timing loop) runs serially in batch
         order.  Results — including prepare-time failures — are identical
-        to the serial path; only the wall-clock spent compiling shrinks."""
+        to the serial path; only the wall-clock spent compiling shrinks.
+
+        The phase watches its own worth: serial two-phase measurements
+        (the baseline chromosome, single-item batches) time their prepare
+        as free *uncontended* probes, calibrating what one solo warm-up
+        truly costs — the naive ``compile_serial_s`` sum is inflated by
+        contention waits.  An overlapped batch charges
+        ``n * t_probe - wall`` against that calibration (when no solo
+        sample exists yet, the batch's first prepare runs alone to
+        bootstrap one).  When the cumulative estimate goes negative after
+        at least two charged batches — contention is eating more than the
+        overlap saves — overlap disables itself for the evaluator's
+        lifetime and later batches warm up serially."""
         pool = self._ensure_compile_pool()
         items = list(fut_bits.items())
 
@@ -634,12 +673,34 @@ class Evaluator:
             return prep, time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        prep_futs = [pool.submit(timed_prepare, bits) for _, bits in items]
-        _wait_futures(prep_futs)
+        if self._overlap_probe_s is None:
+            # no solo sample yet: serialize one prepare to bootstrap the
+            # calibration, overlap the rest
+            first = pool.submit(timed_prepare, items[0][1])
+            _wait_futures([first])
+            t_probe = time.perf_counter() - t0
+            rest = [pool.submit(timed_prepare, bits) for _, bits in items[1:]]
+            _wait_futures(rest)
+            prep_futs = [first] + rest
+            if first.exception() is None:
+                with self._lock:
+                    self._overlap_probe_s = t_probe
+                    self._overlap_solo_n = 1
+        else:
+            prep_futs = [pool.submit(timed_prepare, bits)
+                         for _, bits in items]
+            _wait_futures(prep_futs)
         compile_wall = time.perf_counter() - t0
         with self._lock:
             self.stats.overlapped_compiles += len(items)
             self.stats.compile_wall_s += compile_wall
+            if self._overlap_probe_s is not None:
+                self.stats.overlap_est_saved_s += \
+                    self._overlap_probe_s * len(items) - compile_wall
+                self._overlap_batches += 1
+                if (self._overlap_batches >= 2
+                        and self.stats.overlap_est_saved_s < 0):
+                    self.stats.overlap_disabled = True
         for (key, bits), pf in zip(items, prep_futs):
             try:
                 prep, dt = pf.result()

@@ -428,7 +428,8 @@ class Executor:
     def __init__(self, program: PyProgram, impl: dict[str, str],
                  hoist_transfers: bool = True,
                  globals_env: Optional[dict] = None,
-                 lib_calls: Optional[dict] = None):
+                 lib_calls: Optional[dict] = None,
+                 block_sites: Optional[dict] = None):
         self.p = program
         self.impl = impl
         # region -> {impl id: (callable, in_names, out_names)}: the variant
@@ -439,6 +440,14 @@ class Executor:
         for region, entry in (lib_calls or {}).items():
             self.lib_calls[region] = dict(entry) if isinstance(entry, dict) \
                 else {"lib": entry}
+        # function-block sites: synthetic region -> its member node regions
+        # (adjacent sibling loops).  When the block's gene selects a bound
+        # menu variant, the lib call runs once at the first member and the
+        # remaining member nodes are skipped — the whole run is replaced.
+        self.block_sites: dict[str, tuple] = dict(block_sites or {})
+        self._block_first: dict[str, str] = {
+            members[0]: bname for bname, members in self.block_sites.items()
+            if members}
         self.hoist = hoist_transfers
         self.stats = ExecStats()
         self.globals = {"np": np, "math": __import__("math"),
@@ -498,7 +507,20 @@ class Executor:
         return env
 
     def _exec_nodes(self, nodes: list, env: dict) -> None:
+        skip: set = set()
         for node in nodes:
+            if node.region in skip:
+                continue
+            blk = self._block_first.get(node.region)
+            if blk is not None:
+                menu = self.lib_calls.get(blk)
+                chosen = self.impl.get(blk)
+                if menu and chosen in menu:
+                    # active function-block gene: the library implementation
+                    # computes the whole run; member nodes are claimed
+                    self._exec_lib(node, env, menu[chosen])
+                    skip.update(self.block_sites[blk])
+                    continue
             if node.kind == "stmt":
                 self._exec_stmts(node, env)
             else:
@@ -834,6 +856,200 @@ def resolve_lib_variants(region, pattern: str, env: dict,
 
 
 # ---------------------------------------------------------------------------
+# function-block sites (whole-run substitution, arXiv 2004.09883)
+# ---------------------------------------------------------------------------
+#
+# The ast twin of the jaxpr frontend's ``annotate_block_sites``: maximal
+# runs of *adjacent sibling loops* are matched — merged feature vectors,
+# merged callees — against the pattern DB's ``block`` records.  An accepted
+# run appends one synthetic ``fnblock_*`` region to the graph: an extra
+# gene whose accelerated alternatives are the registry's block-level
+# variants, and whose activation claims the member loops (decode-level,
+# :class:`repro.core.genes.Site`), shrinking the loop-level search to the
+# unclaimed remainder.  Role inference here orders the operands
+# positionally for the shared binders (a block CallSite without equations).
+
+
+def _block_site_attention_stack(members, nodes, program, env, live_after):
+    """Order a merged run's arrays as (x, scale, wq, wk, wv) -> (out,)."""
+    from repro.kernels.registry import VariantUnavailable
+
+    all_defs = set().union(*(set(r.defs) for r in members))
+    free = set().union(*(set(r.uses) for r in members)) - all_defs
+    module = ast.Module(body=[n.loop for n in nodes], type_ignores=[])
+
+    def arrays(names, ndim):
+        picked = [v for v in names
+                  if isinstance(env.get(v), (np.ndarray, jax.Array))
+                  and env[v].ndim == ndim]
+        return _loop_order(module, picked)
+
+    scales = arrays(free, 1)
+    mats = arrays(free, 2)
+    if len(scales) != 1 or len(mats) != 4:
+        raise VariantUnavailable(
+            f"attention-stack block needs (x, scale, wq, wk, wv) free "
+            f"inputs, found rank1={len(scales)} rank2={len(mats)}")
+    xs = [v for v in mats if v in members[0].uses]
+    if len(xs) != 1:
+        raise VariantUnavailable(
+            "cannot identify the residual-stream input of the block")
+    outs = arrays(all_defs & live_after, 2)
+    if len(outs) != 1:
+        raise VariantUnavailable(
+            f"attention-stack block must produce one surviving array, "
+            f"found {outs}")
+    return [xs[0], scales[0]] + [v for v in mats if v != xs[0]], outs
+
+
+#: block pattern -> (members, nodes, program, env, live_after)
+#:              -> (ordered in_names, out_names)
+_BLOCK_SITE_BUILDERS: dict[str, Callable] = {
+    "attention_stack": _block_site_attention_stack,
+}
+
+
+def _live_after(program: "PyProgram", members) -> set:
+    """Names that survive the block: program outputs plus anything read by
+    a region outside the run (regions before it cannot read its writes, so
+    the over-approximation is harmless)."""
+    g = program.graph
+    mem = {r.name for r in members}
+
+    def inside(r) -> bool:
+        if r.name in mem:
+            return True
+        p = r.parent
+        while p is not None:
+            if p in mem:
+                return True
+            p = g.by_name(p).parent
+        return False
+
+    live = set(program.output_names)
+    for r in g.regions:
+        if not inside(r):
+            live |= r.uses
+    return live
+
+
+def resolve_block_sites(program: "PyProgram", db, snaps: dict,
+                        registry=None, backend: Optional[str] = None,
+                        log: Optional[Callable] = None) -> dict:
+    """Detect function-block sites and wire them for the executor.
+
+    Returns ``{fnblock name: {"menu": variant menu, "fallbacks": reasons,
+    "members": top-level member regions, "claims": members + descendants}}``
+    and appends the synthetic regions to ``program.graph``.  Windows are
+    tried widest-first, accepted greedily non-overlapping, and kept only
+    when at least one registry variant binds the concrete avals.
+    """
+    from repro.core.variants import resolve_variant
+    from repro.kernels.registry import (CallSite, VariantUnavailable,
+                                        default_registry)
+
+    registry = registry or default_registry()
+    backend = backend or jax.default_backend()
+    log = log or (lambda s: None)
+    graph = program.graph
+
+    runs: list[list] = []
+    cur: list = []
+    for node in program.tree_nodes:
+        if node.kind == "loop":
+            cur.append(node)
+        else:
+            if len(cur) >= 2:
+                runs.append(cur)
+            cur = []
+    if len(cur) >= 2:
+        runs.append(cur)
+
+    sites: dict[str, dict] = {}
+    taken: set = set()
+    for run in runs:
+        for width in range(len(run), 1, -1):
+            for lo in range(len(run) - width + 1):
+                nodes = run[lo:lo + width]
+                if any(id(n) in taken for n in nodes):
+                    continue
+                members = [graph.by_name(n.region) for n in nodes]
+                m = db.match_block(members, graph.frontend)
+                if m is None:
+                    continue
+                names = registry.variant_names(m.record.name)
+                builder = _BLOCK_SITE_BUILDERS.get(m.record.name)
+                if not names or builder is None:
+                    continue
+                env = snaps.get(nodes[0].region)
+                if env is None:
+                    continue
+                try:
+                    in_names, out_names = builder(
+                        members, nodes, program, env,
+                        _live_after(program, members))
+                except VariantUnavailable as e:
+                    log(f"block run {[r.name for r in members]}: {e}")
+                    continue
+                site = CallSite(
+                    pattern=m.record.name, kind="block",
+                    in_avals=tuple(_aval_of(env[v]) for v in in_names),
+                    out_avals=tuple(_aval_of(env[v]) for v in out_names),
+                    out_used=(True,) * len(out_names), params={},
+                    backend=backend)
+                menu: dict[str, tuple] = {}
+                fails: dict[str, str] = {}
+                for nm in names:
+                    adapter, chosen, why = resolve_variant(
+                        site, nm, registry=registry, backend=backend)
+                    if adapter is not None:
+                        menu[chosen] = (adapter, list(in_names),
+                                        list(out_names))
+                    else:
+                        fails[nm] = why
+                if not menu:
+                    log(f"block run {[r.name for r in members]} "
+                        f"({m.record.name}): no variant bound: {fails}")
+                    continue
+                claims = tuple(r.name for r in graph.regions
+                               if r in members
+                               or _parent_chain_hits(graph, r,
+                                                     {x.name for x
+                                                      in members}))
+                vec: dict = {}
+                for r in members:
+                    for k, c in r.feature_vector.items():
+                        vec[k] = vec.get(k, 0) + c
+                bname = f"fnblock_{len(sites)}"
+                graph.regions.append(Region(
+                    name=bname, kind="block", depth=0, parent=None,
+                    defs=frozenset(), uses=frozenset(),
+                    callees=tuple(dict.fromkeys(
+                        c for r in members for c in r.callees)),
+                    feature_vector=vec, offloadable=True,
+                    alternatives=("interp",) + tuple(
+                        n for n in names if n in menu),
+                    meta={"pattern": m.record.name,
+                          "pattern_match": {"how": m.how,
+                                            "score": round(m.score, 4)},
+                          "block_members": claims}))
+                sites[bname] = {"menu": menu, "fallbacks": fails,
+                                "members": tuple(r.name for r in members),
+                                "claims": claims}
+                taken.update(id(n) for n in nodes)
+    return sites
+
+
+def _parent_chain_hits(graph, region, names: set) -> bool:
+    p = region.parent
+    while p is not None:
+        if p in names:
+            return True
+        p = graph.by_name(p).parent
+    return False
+
+
+# ---------------------------------------------------------------------------
 # the Frontend adapter (repro.core.frontends.registry protocol)
 # ---------------------------------------------------------------------------
 
@@ -849,11 +1065,13 @@ class PyOffloadArtifact:
     hoist_transfers: bool = True
     report: Optional[Any] = None     # SubstitutionReport: what runs where
                                      # and why the rest fell back
+    block_sites: dict = field(default_factory=dict)  # fnblock -> member nodes
 
     def executor(self) -> Executor:
         return Executor(self.program, self.impl,
                         hoist_transfers=self.hoist_transfers,
-                        lib_calls=self.lib_calls)
+                        lib_calls=self.lib_calls,
+                        block_sites=self.block_sites)
 
     def run(self, **inputs) -> dict:
         """Execute under the planned pattern; returns the output arrays."""
@@ -910,11 +1128,16 @@ class AstFrontend:
             v for v in env0 if isinstance(env0[v], (np.ndarray,)))
         reference = {n: np.asarray(env0[n]) for n in out_names}
 
+        # fnblock -> member node regions, filled by block detection below
+        # (runner closes over it; the dict is updated in place)
+        block_members: dict[str, tuple] = {}
+
         def runner(impl: dict, lib_calls: dict) -> Callable[[], dict]:
             def run():
                 ex = Executor(program, impl,
                               hoist_transfers=config.hoist_transfers,
-                              lib_calls=lib_calls)
+                              lib_calls=lib_calls,
+                              block_sites=block_members)
                 env = ex.run(**inputs)
                 return {n: np.asarray(env[n]) for n in out_names}
             return run
@@ -987,6 +1210,22 @@ class AstFrontend:
             except ValueError as e:
                 log(f"block {bo.region} ({bo.pattern}): adapter failed: {e}")
 
+        # function-block sites: runs of adjacent sibling loops whose merged
+        # shape matches a block record join the gene as one synthetic
+        # region each; an active block gene claims its members at decode
+        # time (repro.core.genes) and at execution time (the Executor runs
+        # the lib call once and skips the member nodes)
+        block_sites: dict[str, dict] = {}
+        if config.options.get("block_sites", True):
+            block_sites = resolve_block_sites(
+                program, db, snaps, registry=registry, log=log)
+            for bname, entry in block_sites.items():
+                block_members[bname] = entry["members"]
+                log(f"function block {bname} "
+                    f"({program.graph.by_name(bname).meta['pattern']}): "
+                    f"members={list(entry['members'])} variants "
+                    f"{sorted(entry['menu'])} join the gene")
+
         # measure each block and combinations (paper §4.2.1)
         import itertools
         best_lib: dict = {}
@@ -1026,6 +1265,8 @@ class AstFrontend:
                                 if bo.region in best_lib)
         variants_sig = sorted((r, tuple(sorted(m)))
                               for r, m in variant_sites.items())
+        variants_sig += sorted((b, tuple(sorted(e["menu"])))
+                               for b, e in block_sites.items())
         cache_extra = (
             f"src={hashlib.sha256(program.source.encode()).hexdigest()[:12]}"
             f"|consts={sorted(program.consts.items())}"
@@ -1040,6 +1281,7 @@ class AstFrontend:
         # the per-region variant menus the genes select from
         lib_all: dict[str, dict] = {k: {"lib": v} for k, v in best_lib.items()}
         lib_all.update(variant_sites)
+        lib_all.update({b: e["menu"] for b, e in block_sites.items()})
 
         def fitness_factory(coding):
             # a WallClockFitness whose build decodes per call (no shared
@@ -1063,13 +1305,19 @@ class AstFrontend:
             fitness_factory=fitness_factory,
             block=block, claimed=claimed, base_impl=block_impl,
             cache_extra=cache_extra, serial_only=True, measured=True,
+            # the executor's warm-up/verify pass releases the GIL inside its
+            # jitted segments; the adaptive evaluator backs the overlap off
+            # on its own when contention eats the estimated saving
+            overlap_compiles=True,
             # variant sites make the gene an implementation choice, so the
             # frontend proposes the variant alphabet; plain programs keep
             # the paper's binary interp/jit gene
-            destinations=VARIANT_ALPHABET if variant_sites else None,
+            destinations=(VARIANT_ALPHABET
+                          if variant_sites or block_sites else None),
             context={"program": program, "lib_calls": lib_all,
                      "variant_sites": variant_sites,
                      "variant_fallbacks": variant_fallbacks,
+                     "block_sites": block_sites,
                      "baseline": baseline, "block_time_s": best_time,
                      "out_names": out_names,
                      "hoist": config.hoist_transfers})
@@ -1080,8 +1328,11 @@ class AstFrontend:
                                          SubstitutionReport)
 
         impl = decoded_pattern(coding, values, bundle.base_impl)
-        menus = bundle.context.get("variant_sites", {})
-        fails = bundle.context.get("variant_fallbacks", {})
+        blocks = bundle.context.get("block_sites", {})
+        menus = dict(bundle.context.get("variant_sites", {}))
+        menus.update({b: e["menu"] for b, e in blocks.items()})
+        fails = dict(bundle.context.get("variant_fallbacks", {}))
+        fails.update({b: e["fallbacks"] for b, e in blocks.items()})
         report = SubstitutionReport()
         for s in coding.sites:
             region = s.region
@@ -1110,4 +1361,5 @@ class AstFrontend:
             program=bundle.context["program"], impl=impl,
             lib_calls=bundle.context["lib_calls"],
             hoist_transfers=bundle.context.get("hoist", True),
-            report=report)
+            report=report,
+            block_sites={b: e["members"] for b, e in blocks.items()})

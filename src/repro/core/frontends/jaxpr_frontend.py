@@ -203,6 +203,110 @@ def annotate_variants(graph: RegionGraph, db, registry=None) -> RegionGraph:
     return graph
 
 
+def annotate_block_sites(graph: RegionGraph, db, registry=None) -> RegionGraph:
+    """Detect *function-block* offload sites: maximal windows of adjacent
+    offloadable regions whose merged shape matches a ``block`` pattern-DB
+    record (arXiv 2004.09883's function-block genes alongside loop genes).
+
+    Each accepted window becomes a synthetic ``fnblock_*`` region appended
+    to the graph: one extra gene whose accelerated alternatives are the
+    registry's *block-level* variants.  While that gene is active it claims
+    its ``meta["block_members"]`` (see :class:`repro.core.genes.Site`), so
+    the member regions' own genes go inert and the whole span runs through
+    the block adapter.  The region carries empty def/use sets — the block
+    substitutes *in place of* its members, so the transfer planner must not
+    charge it extra traffic.
+
+    Windows are tried widest-first and accepted greedily non-overlapping; a
+    window is kept only if at least one registry variant actually binds the
+    merged span's concrete avals (no dead genes in the chromosome).
+    """
+    from jax import core as jcore
+
+    from repro.core.substitution import _span_io
+    from repro.core.variants import resolve_variant
+    from repro.kernels.registry import CallSite, default_registry
+
+    registry = registry or default_registry()
+    closed = graph.meta.get("closed_jaxpr")
+    if closed is None:
+        return graph
+    eqns = closed.jaxpr.eqns
+    last_use: dict = {}
+    for i, eqn in enumerate(eqns):
+        for v in eqn.invars:
+            if not isinstance(v, jcore.Literal):
+                last_use[v] = i
+    program_outs = {v for v in closed.jaxpr.outvars
+                    if not isinstance(v, jcore.Literal)}
+    backend = jax.default_backend()
+
+    # maximal runs of span-adjacent offloadable candidates, program order
+    cands = [r for r in graph.regions
+             if r.offloadable and r.meta.get("eqn_span") is not None
+             and not r.meta.get("block_members")]
+    runs: list[list[Region]] = []
+    for r in cands:
+        if runs and runs[-1][-1].meta["eqn_span"][1] == r.meta["eqn_span"][0]:
+            runs[-1].append(r)
+        else:
+            runs.append([r])
+
+    accepted: list[tuple[int, int]] = []
+    blocks: list[Region] = []
+    for run in runs:
+        for width in range(len(run), 1, -1):
+            for lo in range(len(run) - width + 1):
+                members = run[lo:lo + width]
+                s = members[0].meta["eqn_span"][0]
+                e = members[-1].meta["eqn_span"][1]
+                if any(s < e0 and s0 < e for s0, e0 in accepted):
+                    continue
+                m = db.match_block(members, graph.frontend)
+                if m is None:
+                    continue
+                names = registry.variant_names(m.record.name)
+                if not names:
+                    continue
+
+                def used_later(v, _e=e):
+                    return v in program_outs or last_use.get(v, -1) >= _e
+
+                ins, outs = _span_io(eqns[s:e], used_later)
+                site = CallSite(
+                    pattern=m.record.name, kind="block",
+                    in_avals=tuple(v.aval for v in ins),
+                    out_avals=tuple(v.aval for v in outs),
+                    out_used=(True,) * len(outs), params={},
+                    backend=backend, eqns=tuple(eqns[s:e]),
+                    in_vars=tuple(ins))
+                if not any(resolve_variant(site, n, registry=registry,
+                                           backend=backend)[0] is not None
+                           for n in names):
+                    continue
+                vec: dict = {}
+                for r in members:
+                    for k, c in r.feature_vector.items():
+                        vec[k] = vec.get(k, 0) + c
+                blocks.append(Region(
+                    name=f"fnblock_{len(blocks)}",
+                    kind="block",
+                    defs=frozenset(), uses=frozenset(),
+                    callees=tuple(dict.fromkeys(
+                        c for r in members for c in r.callees)),
+                    feature_vector=vec,
+                    offloadable=True,
+                    alternatives=("ref",) + names,
+                    meta={"pattern": m.record.name,
+                          "pattern_match": {"how": m.how,
+                                            "score": round(m.score, 4)},
+                          "eqn_span": (s, e),
+                          "block_members": tuple(r.name for r in members)}))
+                accepted.append((s, e))
+    graph.regions.extend(blocks)
+    return graph
+
+
 # ---------------------------------------------------------------------------
 # the Frontend adapter (repro.core.frontends.registry protocol)
 # ---------------------------------------------------------------------------
@@ -230,8 +334,16 @@ class JaxprFrontend:
         example_args = config.options.get("example_args", ())
         graph = build_graph(fn, *example_args,
                             name=config.options.get("name", ""))
-        return annotate_variants(graph, config.db or default_db(),
-                                 registry=config.options.get("registry"))
+        db = config.db or default_db()
+        graph = annotate_variants(graph, db,
+                                  registry=config.options.get("registry"))
+        # function-block genes (whole-window substitution) ride alongside
+        # the loop/span genes unless explicitly disabled — benchmarks use
+        # options={"block_sites": False} for the loop-only comparison arm
+        if config.options.get("block_sites", True):
+            graph = annotate_block_sites(
+                graph, db, registry=config.options.get("registry"))
+        return graph
 
     def make_fitness(self, graph: RegionGraph, fn: Callable, inputs, config):
         from repro.core.block_offload import block_offload_pass

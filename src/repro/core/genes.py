@@ -109,12 +109,20 @@ class Site:
     with more than one accelerated alternative (kernel-substitution
     variants) extend the menu via ``extra_impls``, indexed by
     ``Destination.impl_index`` (2 = the first extra, and so on).
+
+    ``members`` marks a *function-block* site (arXiv 2004.09883): the named
+    regions are the block's constituents.  While the block gene sits on an
+    accelerated implementation it **claims** them — their own genes are
+    inert and they decode to their reference path (the block adapter
+    computes the whole span), so the loop-level search space shrinks to the
+    unclaimed remainder.
     """
 
     region: str
     ref_impl: Any
     offload_impl: Any
     extra_impls: tuple = ()
+    members: tuple = ()
 
     @property
     def impls(self) -> tuple:
@@ -150,7 +158,26 @@ class GeneCoding:
             dest = get_destination(self.destinations[int(v)])
             impls = s.impls
             out[s.region] = impls[min(dest.impl_index, len(impls) - 1)]
+        claimed = self.claimed_members(values)
+        if claimed:
+            for s in self.sites:
+                if s.region in claimed:
+                    out[s.region] = s.ref_impl
         return out
+
+    def claimed_members(self, values: Sequence[int]) -> frozenset:
+        """Regions claimed by active block genes: every member of a block
+        site whose gene decodes to a non-reference implementation.  Claimed
+        regions' own genes are inert for this chromosome."""
+        claimed: set[str] = set()
+        for s, v in zip(self.sites, values):
+            if not s.members:
+                continue
+            dest = get_destination(self.destinations[int(v)])
+            impls = s.impls
+            if impls[min(dest.impl_index, len(impls) - 1)] != s.ref_impl:
+                claimed.update(s.members)
+        return frozenset(claimed)
 
     def destinations_of(self, values: Sequence[int]) -> dict[str, str]:
         """values -> {region name: destination name}."""
@@ -181,7 +208,8 @@ def coding_from_graph(graph: RegionGraph,
             continue
         ref = r.alternatives[0] if r.alternatives else "ref"
         off = r.alternatives[1] if len(r.alternatives) > 1 else "offload"
-        sites.append(Site(r.name, ref, off, tuple(r.alternatives[2:])))
+        sites.append(Site(r.name, ref, off, tuple(r.alternatives[2:]),
+                          members=tuple(r.meta.get("block_members", ()))))
     return GeneCoding(tuple(sites), tuple(destinations))
 
 
@@ -210,7 +238,10 @@ def modeled_cost_s(graph: RegionGraph, coding: GeneCoding,
     stub device pay that device's modeled latency in the fitness.
     """
     total = 0.0
+    claimed = coding.claimed_members(values)
     for site, v in zip(coding.sites, values):
+        if site.region in claimed:
+            continue                 # the block adapter computes this region
         dest = get_destination(coding.destinations[int(v)])
         if dest.executable:
             continue

@@ -101,9 +101,15 @@ def phenotype_key(coding: GeneCoding,
         if len(bits) != coding.length:     # foreign bits (stale cache line)
             return ("raw", bits)
         impl = coding.decode(bits)
+        # regions claimed by an active block gene are inert: their decoded
+        # impl is already forced to ref by decode(), and a stub destination
+        # parked on them charges nothing (modeled_cost_s skips them), so
+        # they must not split phenotypes either
+        claimed = coding.claimed_members(bits)
         stubs = tuple((s.region, dests[int(v)].name)
                       for s, v in zip(coding.sites, bits)
-                      if not dests[int(v)].executable)
+                      if not dests[int(v)].executable
+                      and s.region not in claimed)
         return (tuple((s.region, str(resolve(s.region, impl[s.region])))
                       for s in coding.sites),
                 stubs)

@@ -46,6 +46,10 @@ class PatternRecord:
     threshold: float = 0.85
     interface_note: str = ""
     interface_changes: bool = False
+    #: block records describe a whole function block (several adjacent
+    #: regions merged); they are matched by :meth:`PatternDB.match_block`
+    #: over merged windows and never by per-region ``match_region``.
+    block: bool = False
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -87,6 +91,8 @@ class PatternDB:
         scores: list[tuple[float, PatternRecord]] = []
         callee_set = {c.lower().split(".")[-1] for c in region.callees}
         for rec in self.records:
+            if rec.block:
+                continue          # block records match windows, not regions
             names = {n.lower() for n in rec.callee_names}
             if callee_set & names:
                 out.append(Match(rec, "name", 1.0, region.name,
@@ -107,6 +113,51 @@ class PatternDB:
             break  # only the best similarity match is a candidate
         out.sort(key=lambda m: -m.score)
         return out
+
+    # --- block matching: merged windows of adjacent regions -----------------
+    #: a merged window may only match a block record when its total feature
+    #: mass is within this factor of the record's — a lone matmul summed
+    #: with glue must not pass for a whole attention stack.
+    BLOCK_SIZE_GUARD = 2.0
+
+    def match_block(self, regions: list, frontend: str,
+                    min_similarity: Optional[float] = None) -> Optional[Match]:
+        """Match a window of >= 2 adjacent regions, merged, against the
+        ``block`` records: name-first over the union of callees, then
+        cosine similarity of the summed feature vectors with a size guard.
+        Returns the best match or None."""
+        if len(regions) < 2:
+            return None
+        callee_set = {c.lower().split(".")[-1]
+                      for r in regions for c in r.callees}
+        merged: dict = {}
+        for r in regions:
+            for k, v in (r.feature_vector or {}).items():
+                merged[k] = merged.get(k, 0) + v
+        total = sum(merged.values())
+        best: Optional[Match] = None
+        for rec in self.records:
+            if not rec.block:
+                continue
+            names = {n.lower() for n in rec.callee_names}
+            if callee_set & names:
+                return Match(rec, "name", 1.0, regions[0].name,
+                             needs_confirmation=rec.interface_changes)
+            vec = rec.vectors.get(frontend)
+            if not vec or not merged:
+                continue
+            rtotal = sum(vec.values())
+            if rtotal and total and not (
+                    1.0 / self.BLOCK_SIZE_GUARD
+                    <= total / rtotal <= self.BLOCK_SIZE_GUARD):
+                continue
+            score = sim.similarity(merged, vec)
+            thr = (min_similarity if min_similarity is not None
+                   else rec.threshold)
+            if score >= thr and (best is None or score > best.score):
+                best = Match(rec, "similarity", score, regions[0].name,
+                             needs_confirmation=rec.interface_changes)
+        return best
 
     # --- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
@@ -181,6 +232,44 @@ def recurrence(a, b, h, out, n, d):
             h[c] = a[t][c] * h[c] + b[t][c]
             out[t][c] = h[c]
 """,
+    "attention_stack": """
+def attention_stack(x, scale, wq, wk, wv, out, n, d, hd):
+    for i in range(n):
+        ss = 0.0
+        for t in range(d):
+            ss = ss + x[i][t] * x[i][t]
+        inv = 1.0 / sqrt(ss / d + 1e-6)
+        for t in range(d):
+            xn[i][t] = x[i][t] * inv * (1.0 + scale[t])
+    for i in range(n):
+        for h in range(hd):
+            aq = 0.0
+            ak = 0.0
+            av = 0.0
+            for t in range(d):
+                aq = aq + xn[i][t] * wq[t][h]
+                ak = ak + xn[i][t] * wk[t][h]
+                av = av + xn[i][t] * wv[t][h]
+            q[i][h] = aq
+            k[i][h] = ak
+            v[i][h] = av
+    for i in range(n):
+        m = -1e30
+        for j in range(n):
+            s = 0.0
+            for t in range(hd):
+                s = s + q[i][t] * k[j][t]
+            if s > m:
+                m = s
+        z = 0.0
+        for j in range(n):
+            z = z + exp(dot(q[i], k[j]) - m)
+        for t in range(hd):
+            acc = 0.0
+            for j in range(n):
+                acc = acc + exp(dot(q[i], k[j]) - m) / z * v[j][t]
+            out[i][t] = acc
+""",
 }
 
 
@@ -241,6 +330,29 @@ def _jx_matmul(a, b):
     return a @ b
 
 
+# --- canonical *block* traces: several regions' worth of work each ----------
+
+
+def _jx_attention_stack(x, scale, wq, wk, wv):
+    xn = _jx_rmsnorm(x, scale)
+    q, k, v = xn @ wq, xn @ wk, xn @ wv
+    return _jx_attention(q, k, v)
+
+
+def _jx_moe_dispatch(x, wr, wg, wu, wd):
+    logits = x @ wr
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, 2)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, wr.shape[1])
+    combine = jnp.einsum("tk,tke->te", gates, onehot)
+    g = jnp.einsum("td,edf->tef", x, wg)
+    u = jnp.einsum("td,edf->tef", x, wu)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,efd->ted", h, wd)
+    return jnp.einsum("ted,te->td", y, combine)
+
+
 def _jx_fft(x):
     return jnp.fft.fft(x)
 
@@ -297,6 +409,36 @@ def default_db() -> PatternDB:
             replacement="jnp.matmul",
             plan_field=None,
             threshold=0.88,
+        ),
+        PatternRecord(
+            name="attention_stack",
+            callee_names=("attention_stack", "attention_block", "attn_block",
+                          "attention", "self_attention", "sdpa"),
+            vectors={"python_ast": _py_vector(
+                         _PY_COMPARISON_CODE["attention_stack"]),
+                     "jaxpr": sim.vector_of_callable(
+                         _jx_attention_stack, q, jnp.zeros((4,), f32),
+                         q.T @ q, q.T @ q, q.T @ q)},
+            replacement="repro.models.attention.attend_chunked",
+            plan_field=("attn_impl", "chunked"),
+            threshold=0.85,
+            interface_note="whole rmsnorm+QKV+causal-attention block over an "
+                           "(S, d) residual stream",
+            block=True,
+        ),
+        PatternRecord(
+            name="moe_dispatch",
+            callee_names=("moe", "moe_dispatch", "moe_block", "router",
+                          "mixture_of_experts", "expert_dispatch"),
+            vectors={"jaxpr": sim.vector_of_callable(
+                         _jx_moe_dispatch, q, q.T @ q,
+                         jnp.zeros((4, 4, 8), f32), jnp.zeros((4, 4, 8), f32),
+                         jnp.zeros((4, 8, 4), f32))},
+            replacement="repro.models.moe.moe_scatter",
+            plan_field=("moe_impl", "scatter_ep"),
+            threshold=0.85,
+            interface_note="router + top-k dispatch + batched expert FFN",
+            block=True,
         ),
         PatternRecord(
             name="fft",

@@ -78,7 +78,7 @@ class SiteBinding:
 
     region: str
     pattern: Optional[str]
-    kind: str                          # "span" | "call" | "scan"
+    kind: str                          # "span" | "call" | "scan" | "block"
     span: tuple                       # (start, end) eqn indices
     in_vars: tuple                     # free inputs (first-use order for spans)
     out_vars: tuple                    # outputs (DropVar-preserving for eqns)
@@ -190,8 +190,11 @@ class SubstitutionEngine:
                 def used_later(v, _e=e):
                     return v in program_outs or last_use.get(v, -1) >= _e
                 ins, outs = _span_io(eqns[s:e], used_later)
+                # fnblock regions (merged multi-region spans from the block
+                # pass) bind block-level variants; plain spans stay spans
+                kind = "block" if region.meta.get("block_members") else "span"
                 sites.append(SiteBinding(
-                    region.name, pattern, "span", (s, e), ins, outs))
+                    region.name, pattern, kind, (s, e), ins, outs))
         return sites
 
     @property
@@ -201,7 +204,7 @@ class SubstitutionEngine:
     # -- variant resolution -------------------------------------------------
 
     def _out_used(self, site: SiteBinding) -> list[bool]:
-        if site.kind == "span":
+        if site.kind in ("span", "block"):
             return [True] * len(site.out_vars)   # spans keep live outs only
         jaxpr = self.closed.jaxpr
         last_use: set = set()
@@ -233,7 +236,7 @@ class SubstitutionEngine:
         if requested not in _REF_IMPLS and site.pattern is not None:
             out_used = self._out_used(site)
             eqns = self.closed.jaxpr.eqns[site.span[0]:site.span[1]] \
-                if site.kind == "span" else ()
+                if site.kind in ("span", "block") else ()
             call_site = site.call_site(out_used, self.backend, eqns=eqns)
         else:                          # resolution needs no concretization
             call_site = site.call_site([True] * len(site.out_vars),
@@ -249,14 +252,27 @@ class SubstitutionEngine:
         report = SubstitutionReport()
         actions: dict[int, tuple[SiteBinding, Callable]] = {}
         skip_until: dict[int, int] = {}
-        for site in self._sites:
+        # widest-first: when a block site substitutes, its adapter computes
+        # the whole merged span — member sites inside it are claimed and any
+        # variant requested on them falls back to ref (reported as such)
+        accepted: list[tuple[int, int, str]] = []
+        for site in sorted(self._sites,
+                           key=lambda s: s.span[0] - s.span[1]):
             requested = str(impl.get(site.region, "ref"))
+            owner = next((r for s0, e0, r in accepted
+                          if site.span[0] < e0 and s0 < site.span[1]), None)
+            if owner is not None:
+                report.choices.append(SubstitutionChoice(
+                    site.region, site.pattern, requested, "ref",
+                    f"claimed by block {owner}"))
+                continue
             adapter, chosen, why = self._resolve_variant(site, requested)
             report.choices.append(SubstitutionChoice(
                 site.region, site.pattern, requested, chosen, why))
             if adapter is not None:
                 actions[site.span[0]] = (site, adapter)
                 skip_until[site.span[0]] = site.span[1]
+                accepted.append((site.span[0], site.span[1], site.region))
 
         closed, out_tree = self.closed, self._out_tree
         n_in = len(closed.jaxpr.invars)
@@ -327,6 +343,51 @@ class SubstitutionEngine:
             return "ref"
         _adapter, chosen, _why = self._resolve_variant(site, requested)
         return chosen
+
+    def _site_values(self, site: SiteBinding) -> tuple[list, list]:
+        """One reference interpretation up to the site's span end, capturing
+        the concrete values of its free inputs and live outputs."""
+        closed = self.closed
+        jaxpr = closed.jaxpr
+        flat = jax.tree_util.tree_leaves(self.example_args)
+        env: dict = dict(zip(jaxpr.constvars, closed.consts))
+        env.update(zip(jaxpr.invars, flat))
+
+        def read(v):
+            return v.val if isinstance(v, jcore.Literal) else env[v]
+
+        for eqn in jaxpr.eqns[:site.span[1]]:
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            ans = eqn.primitive.bind(
+                *subfuns, *[read(v) for v in eqn.invars], **bind_params)
+            outs = ans if eqn.primitive.multiple_results else [ans]
+            for v, a in zip(eqn.outvars, outs):
+                if not isinstance(v, jcore.DropVar):
+                    env[v] = a
+        return ([read(v) for v in site.in_vars],
+                [env.get(v) for v in site.out_vars])
+
+    def verify_block(self, region: str, impl_id,
+                     rtol: float = 1e-2, atol: float = 1e-2):
+        """Block-granularity verification: allclose of the bound adapter's
+        outputs against the reference interpretation *over the whole span*
+        (not just the program outputs), on the example arguments.  Returns
+        ``(VerifyResult, chosen_impl)``; a predicate rejection verifies
+        trivially as the reference path with ``chosen == "ref"``."""
+        from repro.core.verifier import VerifyResult, verify as _verify
+
+        site = next((s for s in self._sites if s.region == region), None)
+        if site is None:
+            raise KeyError(f"no substitutable site for region {region!r}")
+        adapter, chosen, why = self._resolve_variant(site, str(impl_id))
+        if adapter is None:
+            return VerifyResult(True, 0.0, 0.0, why), chosen
+        ins, ref_outs = self._site_values(site)
+        got = adapter(*ins)
+        used = self._out_used(site)
+        ref_used = [o for o, u in zip(ref_outs, used) if u]
+        got_used = [o for o, u in zip(got, used) if u]
+        return _verify(ref_used, got_used, rtol=rtol, atol=atol), chosen
 
     def reference(self) -> Any:
         """The unsubstituted program's outputs on the example arguments

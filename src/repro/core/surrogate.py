@@ -110,6 +110,11 @@ class FeatureExtractor:
     * ``offload_trips``  — trip products of regions placed on an executable
       accelerator destination (how much work the pattern offloads)
     * ``stub_cost``      — modeled seconds charged by cost-only destinations
+    * ``block_active``   — function-block genes on an accelerated variant
+      (each replaces its whole member span with one library call)
+    * ``block_claimed``  — regions claimed by active block genes: their own
+      genes are inert, so the effective search space is smaller than the
+      chromosome length suggests
     * ``dest{k}``        — genes per non-reference alphabet value (variant
       impl-index counts: how many sites run alphabet entry k)
     * ``site{i}@{k}``    — per-site one-hot: site i on alphabet value k
@@ -131,7 +136,7 @@ class FeatureExtractor:
                       for s in coding.sites}
         self.feature_names: tuple[str, ...] = tuple(
             ["prior", "h2d", "d2h", "bytes", "round_trips", "hoisted",
-             "offload_trips", "stub_cost"]
+             "offload_trips", "stub_cost", "block_active", "block_claimed"]
             + [f"dest{k}" for k in range(1, coding.arity)]
             + [f"site{i}@{k}" for i in range(coding.length)
                for k in range(1, coding.arity)])
@@ -161,9 +166,13 @@ class FeatureExtractor:
                 trips = _trip_product(graph, graph.by_name(t.at_region))
                 round_trips += trips
             total_bytes += trips * float(self.var_bytes.get(t.var, 1.0))
+        claimed = coding.claimed_members(bits)
         offload_trips = sum(
             self._trip[s.region] for s, v in zip(coding.sites, bits)
-            if int(v) != 0 and self._dests[int(v)].executable)
+            if int(v) != 0 and self._dests[int(v)].executable
+            and s.region not in claimed)
+        n_block = sum(1 for s in coding.sites
+                      if s.members and impl.get(s.region) != s.ref_impl)
         stub = modeled_cost_s(graph, coding, bits) \
             if any(not d.executable for d in self._dests) else 0.0
         dest_counts = [sum(1 for v in bits if int(v) == k)
@@ -173,7 +182,8 @@ class FeatureExtractor:
         vec = np.asarray(
             [float(self.prior(bits)), float(n_h2d), float(n_d2h),
              total_bytes,
-             round_trips, float(n_hoist), float(offload_trips), stub]
+             round_trips, float(n_hoist), float(offload_trips), stub,
+             float(n_block), float(len(claimed))]
             + [float(c) for c in dest_counts] + onehot)
         self._memo[bits] = vec
         return vec
@@ -195,11 +205,14 @@ class FittedSurrogate:
     mean: np.ndarray                      # feature standardization
     scale: np.ndarray
     n_records: int
-    rank_corr: float                      # journal Spearman of *leave-one-
-                                          # out* predictions — an honest
-                                          # generalization estimate, not the
-                                          # training fit
-    static_rank_corr: float               # journal Spearman, hand formula
+    rank_corr: float                      # out-of-sample journal Spearman:
+                                          # held-out validation rows when
+                                          # the journal is big enough,
+                                          # leave-one-out otherwise — an
+                                          # honest generalization estimate,
+                                          # never the training fit
+    static_rank_corr: float               # same rows, hand formula
+    n_val: int = 0                        # held-out rows (0 = LOO was used)
     fingerprint: str = ""
     kind: str = "fitted"
 
@@ -273,39 +286,59 @@ def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
     y = np.asarray([t for _, t in rows])
     if np.ptp(y) == 0:
         return None                     # constant journal: nothing to rank
-    mean = X.mean(axis=0)
-    scale = X.std(axis=0)
+    # out-of-sample guard: with enough journal, hold out every 4th row as a
+    # validation set the fit never sees — rank_corr is then a true held-out
+    # comparison against the hand formula.  Smaller journals keep the
+    # closed-form leave-one-out estimate instead of wasting rows.
+    val = np.zeros(len(rows), dtype=bool)
+    if len(rows) >= 12:
+        val[3::4] = True
+    tr = ~val
+    n_tr = int(tr.sum())
+    mean = X[tr].mean(axis=0)
+    scale = X[tr].std(axis=0)
     scale[scale == 0] = 1.0             # constant features drop out cleanly
     Xs = (X - mean) / scale
-    y_mean = float(y.mean())
+    y_mean = float(y[tr].mean())
     # ridge on the standardized features; the intercept is the journal mean
     # and stays unpenalized.  lam scales with n so more data loosens the
     # shrinkage toward the prior-feature direction.
-    lam = float(ridge) * len(rows)
+    lam = float(ridge) * n_tr
     p = Xs.shape[1]
-    A = Xs.T @ Xs + lam * np.eye(p)
-    b = Xs.T @ (y - y_mean)
+    A = Xs[tr].T @ Xs[tr] + lam * np.eye(p)
+    b = Xs[tr].T @ (y[tr] - y_mean)
     try:
         inv_A = np.linalg.inv(A)
     except np.linalg.LinAlgError:       # pragma: no cover — lam>0 makes A PD
         inv_A = np.linalg.pinv(A)
     coef = inv_A @ b
     pred = y_mean + Xs @ coef
-    # leave-one-out predictions, closed form for ridge: the honest fit
-    # quality.  With per-site one-hot features p can approach (or exceed)
-    # the journal size, where the training fit near-interpolates noise and
-    # its in-sample Spearman would "beat" the static formula every time —
-    # LOO residuals e_i / (1 - h_i) are what the activation rule may trust.
-    leverage = np.einsum("ij,jk,ik->i", Xs, inv_A, Xs) + 1.0 / len(rows)
-    leverage = np.clip(leverage, 0.0, 1.0 - 1e-6)
-    loo_pred = y - (y - pred) / (1.0 - leverage)
+    n_val = int(val.sum())
+    if n_val >= 3 and np.ptp(y[val]) > 0:
+        idx = np.where(val)[0]
+        rank_corr = spearman_rank_corr(pred[val], y[val])
+        static_rank_corr = spearman_rank_corr(
+            [prior(rows[i][0]) for i in idx], y[val])
+    else:
+        # leave-one-out predictions, closed form for ridge: the honest fit
+        # quality.  With per-site one-hot features p can approach (or
+        # exceed) the journal size, where the training fit near-
+        # interpolates noise and its in-sample Spearman would "beat" the
+        # static formula every time — LOO residuals e_i / (1 - h_i) are
+        # what the activation rule may trust.
+        n_val = 0
+        Xt = Xs[tr]
+        leverage = np.einsum("ij,jk,ik->i", Xt, inv_A, Xt) + 1.0 / n_tr
+        leverage = np.clip(leverage, 0.0, 1.0 - 1e-6)
+        loo_pred = y[tr] - (y[tr] - pred[tr]) / (1.0 - leverage)
+        rank_corr = spearman_rank_corr(loo_pred, y[tr])
+        static_rank_corr = spearman_rank_corr(
+            [prior(bits) for bits, _ in rows], y)
     fitted = FittedSurrogate(
         extractor=extractor, coef=coef, intercept=y_mean,
         mean=mean, scale=scale, n_records=len(rows),
-        rank_corr=spearman_rank_corr(loo_pred, y),
-        static_rank_corr=spearman_rank_corr(
-            [prior(bits) for bits, _ in rows], y),
-        fingerprint=fingerprint)
+        rank_corr=rank_corr, static_rank_corr=static_rank_corr,
+        n_val=n_val, fingerprint=fingerprint)
     if persist:
         _save_fit(cache_dir, fitted)
     return fitted
@@ -324,6 +357,7 @@ def _save_fit(cache_dir: str, fit: FittedSurrogate) -> None:
     rec = {
         "fingerprint": fit.fingerprint,
         "n_records": fit.n_records,
+        "n_val": fit.n_val,
         "rank_corr": fit.rank_corr if math.isfinite(fit.rank_corr) else None,
         "static_rank_corr": fit.static_rank_corr
         if math.isfinite(fit.static_rank_corr) else None,

@@ -401,6 +401,213 @@ def _bind_wkv_pallas(site: CallSite):
 
 
 # ---------------------------------------------------------------------------
+# block-level variants (function-block offload, arXiv 2004.09883): one
+# variant replaces a *merged multi-region span* — the whole algorithm, not a
+# single loop.  Block sites arrive with ``kind == "block"`` and carry the
+# concatenated top-level equations of every member region, so the binders
+# infer operand roles by dataflow exactly like the span binders do.
+# ---------------------------------------------------------------------------
+
+
+def _input_roots(site: CallSite):
+    """Dataflow helper: map any site-internal var to the set of site inputs
+    it derives from (non-raising twin of ``_attention_roles``'s sole_root)."""
+    producer = {o: e for e in site.eqns for o in e.outvars}
+    inputs = set(site.in_vars)
+
+    def roots(v) -> frozenset:
+        out, stack, seen = set(), [v], set()
+        while stack:
+            x = stack.pop()
+            if not hasattr(x, "count") or x in seen:
+                continue
+            seen.add(x)
+            if x in inputs:
+                out.add(x)
+            elif x in producer:
+                stack.extend(producer[x].invars)
+        return frozenset(out)
+    return roots
+
+
+def _sole_rhs_dots(site: CallSite) -> list:
+    """Top-level dot_generals whose rhs traces back to exactly ONE site
+    input: the weight matmuls of a block (score/combine matmuls mix several
+    inputs on the rhs and drop out).  Returns [(eqn, rhs_input_var), ...]
+    in equation order — which is the program's weight-application order."""
+    roots = _input_roots(site)
+    out = []
+    for e in site.eqns:
+        if e.primitive.name != "dot_general":
+            continue
+        rr = roots(e.invars[1])
+        if len(rr) == 1:
+            out.append((e, next(iter(rr))))
+    return out
+
+
+def _scan_params(eqns, name: str, key: str):
+    """Find a primitive param anywhere in a block, including inside the
+    closed sub-jaxprs of member pjit calls."""
+    for e in eqns:
+        if e.primitive.name == name:
+            return e.params.get(key)
+        for v in e.params.values():
+            sub = getattr(v, "jaxpr", None)
+            if sub is not None:
+                found = _scan_params(sub.eqns, name, key)
+                if found is not None:
+                    return found
+    return None
+
+
+# --- attention_stack: rmsnorm + q/k/v projections + causal attention -------
+
+
+def _attention_stack_site(site: CallSite):
+    _require(site.kind == "block",
+             f"attention_stack binds merged block sites, not {site.kind}")
+    _require(len(site.in_avals) == 5, "expected (x, scale, wq, wk, wv)")
+    _require(sum(site.out_used) == 1,
+             "attention stack produces one used output")
+    _require(_floats(site.in_avals), "needs floating inputs")
+    if site.eqns:
+        projs = _sole_rhs_dots(site)
+        _require(len(projs) == 3,
+                 "expected exactly the q/k/v projection matmuls")
+        index = {v: i for i, v in enumerate(site.in_vars)}
+        w_idx = tuple(index[r] for _, r in projs)  # (wq, wk, wv)
+        one_d = [i for i, a in enumerate(site.in_avals) if a.ndim == 1]
+        _require(len(one_d) == 1, "expected one rank-1 rmsnorm scale")
+        rest = set(range(5)) - set(w_idx) - {one_d[0]}
+        _require(len(rest) == 1, "cannot identify the residual-stream input")
+        x_i = rest.pop()
+        roles = (x_i, one_d[0]) + w_idx            # (x, scale, wq, wk, wv)
+    else:
+        # no equations (the python_ast frontend): the site builder already
+        # ordered the operands positionally; the shape checks below reject
+        # a wrong assignment
+        roles = (0, 1, 2, 3, 4)
+    x_av, s_av, wq_av, wk_av, wv_av = (site.in_avals[i] for i in roles)
+    _require(x_av.ndim == 2, "(S, d) residual stream expected")
+    _require(s_av.ndim == 1, "expected one rank-1 rmsnorm scale")
+    _require(wq_av.shape == wk_av.shape == wv_av.shape and wq_av.ndim == 2,
+             "q/k/v projection weight shapes disagree")
+    _require(wq_av.shape[0] == x_av.shape[1], "projection d_model mismatch")
+    _require(s_av.shape[0] == x_av.shape[1], "scale must match d_model")
+    dh = wq_av.shape[1]
+    _require(2 <= dh <= 512, "head dim outside kernel range")
+    out_av = site.out_avals[list(site.out_used).index(True)]
+    _require(out_av.shape == (x_av.shape[0], dh),
+             "output is not attention-shaped")
+    return x_av, out_av, roles
+
+
+def _bind_attention_stack_chunked(site: CallSite):
+    from repro.kernels import ref
+    from repro.models.attention import attend_chunked
+    from repro.models.plan import ExecPlan
+
+    x_av, out_av, roles = _attention_stack_site(site)
+    s = x_av.shape[0]
+    plan = ExecPlan(attn_impl="chunked", attn_kv_chunk=128,
+                    compute_dtype=str(x_av.dtype))
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def fn(*xs):
+        x, sc, wq, wk, wv = (xs[i] for i in roles)
+        xn = ref.rmsnorm_ref(x, sc)
+        q, k, v = xn @ wq, xn @ wk, xn @ wv
+        o = attend_chunked(q[None, :, None, :], k[None, :, None, :],
+                           v[None, :, None, :], pos, pos, True, 0, plan)
+        return (_cast(o[0, :, 0, :], out_av),)
+    return fn
+
+
+def _bind_attention_stack_fused(site: CallSite):
+    from repro.kernels import ref
+
+    x_av, out_av, roles = _attention_stack_site(site)
+    scale = 1.0 / math.sqrt(out_av.shape[-1])
+
+    def fn(*xs):
+        x, sc, wq, wk, wv = (xs[i] for i in roles)
+        xn = ref.rmsnorm_ref(x, sc)
+        q, k, v = xn @ wq, xn @ wk, xn @ wv
+        o = ref.flash_attention_ref(q[None], k[None], v[None],
+                                    causal=True, scale=scale)[0]
+        return (_cast(o, out_av),)
+    return fn
+
+
+# --- moe_dispatch: router + top-k dispatch + batched expert FFN ------------
+
+
+def _moe_site(site: CallSite):
+    _require(site.kind == "block",
+             f"moe_dispatch binds merged block sites, not {site.kind}")
+    _require(bool(site.eqns), "block site carries no equations")
+    _require(len(site.in_avals) == 5,
+             "expected (x, w_router, w_gate, w_up, w_down)")
+    _require(sum(site.out_used) == 1, "moe dispatch produces one used output")
+    _require(_floats(site.in_avals), "needs floating inputs")
+    rank3 = [i for i, a in enumerate(site.in_avals) if a.ndim == 3]
+    _require(len(rank3) == 3, "expected three (E,·,·) expert weight stacks")
+    index = {v: i for i, v in enumerate(site.in_vars)}
+    # expert weights in application order: gate, up, down
+    w_order = [index[r] for _, r in _sole_rhs_dots(site)
+               if index[r] in rank3]
+    _require(len(w_order) == 3, "cannot order the expert weight matmuls")
+    wg_i, wu_i, wd_i = w_order
+    rank2 = [i for i, a in enumerate(site.in_avals) if a.ndim == 2]
+    _require(len(rank2) == 2, "expected tokens (T,d) and router (d,E)")
+    top_k = _scan_params(site.eqns, "top_k", "k")
+    _require(top_k is not None, "no top-k routing found in the block")
+    # the router weight has E columns; tokens have d columns
+    wg_av = site.in_avals[wg_i]
+    n_experts, d = wg_av.shape[0], wg_av.shape[1]
+    a2, b2 = (site.in_avals[i] for i in rank2)
+    if a2.shape[1] == n_experts and b2.shape[1] == d:
+        wr_i, x_i = rank2
+    else:
+        _require(b2.shape[1] == n_experts and a2.shape[1] == d,
+                 "cannot tell router weight from token matrix")
+        x_i, wr_i = rank2
+    roles = (x_i, wr_i, wg_i, wu_i, wd_i)
+    x_av = site.in_avals[x_i]
+    _require(site.in_avals[wu_i].shape == wg_av.shape,
+             "gate/up expert shapes disagree")
+    _require(site.in_avals[wd_i].shape == (n_experts, wg_av.shape[2], d),
+             "down projection shape mismatch")
+    out_av = site.out_avals[list(site.out_used).index(True)]
+    _require(out_av.shape == x_av.shape, "moe output must be token-shaped")
+    return x_av, out_av, roles, n_experts, int(top_k)
+
+
+def _bind_moe_scatter(site: CallSite):
+    from repro.configs.base import ArchConfig, MoEConfig
+    from repro.models.moe import moe_scatter
+    from repro.models.plan import ExecPlan
+
+    x_av, out_av, roles, n_experts, top_k = _moe_site(site)
+    ff = site.in_avals[roles[2]].shape[2]
+    # capacity_factor = E makes the dispatch dropless (cap = T*k), so the
+    # scatter route is numerically the dense one-hot reference
+    cfg = ArchConfig("block_moe", "moe", d_model=x_av.shape[1],
+                     moe=MoEConfig(n_experts=n_experts, top_k=top_k,
+                                   d_ff_expert=ff,
+                                   capacity_factor=float(n_experts)))
+    plan = ExecPlan(moe_impl="scatter_ep", compute_dtype=str(x_av.dtype))
+
+    def fn(*xs):
+        x, wr, wg, wu, wd = (xs[i] for i in roles)
+        params = {"w_router": wr, "w_gate": wg, "w_up": wu, "w_down": wd}
+        out, _aux = moe_scatter(x, params, cfg, plan)
+        return (_cast(out, out_av),)
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # the default registry
 # ---------------------------------------------------------------------------
 
@@ -424,6 +631,20 @@ def default_registry() -> KernelRegistry:
                              "fused jax.numpy rewrite"))
         reg.register(Variant(pattern, "pallas", pallas,
                              "Pallas kernel (repro.kernels.ops)"))
+    # block-level patterns: whole-algorithm replacements over merged spans.
+    # Registration order is the gene implementation order, so the flash-style
+    # chunked route sits at impl_index 1 (the primary accelerated slot).
+    reg.register(Variant("attention_stack", "block_chunked",
+                         _bind_attention_stack_chunked,
+                         "rmsnorm + QKV + flash attention via "
+                         "models/attention.attend_chunked"))
+    reg.register(Variant("attention_stack", "block_fused",
+                         _bind_attention_stack_fused,
+                         "rmsnorm + QKV + naive causal attention"))
+    reg.register(Variant("moe_dispatch", "block_scatter",
+                         _bind_moe_scatter,
+                         "capacity-limited scatter dispatch via "
+                         "models/moe.moe_scatter"))
     _DEFAULT = reg
     return reg
 

@@ -427,3 +427,66 @@ def test_auto_screen_ignores_stale_rank_corr(tmp_path):
     _, ga2 = ga_search(g, fit, GAConfig(population=8, generations=4, seed=2,
                                         cache_dir=str(tmp_path)))
     assert ga2.screened_out == 0, "stale evidence must not justify screening"
+
+
+# ---------------------------------------------------------------------------
+# compile-overlap adaptive backoff
+# ---------------------------------------------------------------------------
+
+
+class _TwoPhaseFitness:
+    """prepare/measure fitness whose prepare either parallelizes (sleep
+    releases the GIL, like one big XLA compile) or is lock-serialized with
+    extra contention overhead (like many small GIL-held compiles)."""
+
+    def __init__(self, prep_s=0.02, contended=False):
+        self.prep_s = prep_s
+        self.contended = contended
+        self._lock = threading.Lock()
+
+    def prepare(self, bits):
+        if not self.contended:
+            time.sleep(self.prep_s)
+        elif self._lock.acquire(blocking=False):
+            time.sleep(self.prep_s)          # ran alone: the solo cost
+            self._lock.release()
+        else:
+            with self._lock:                 # queued behind another prepare:
+                time.sleep(self.prep_s * 1.5)  # serialized + thrash overhead
+        return tuple(bits)
+
+    def measure(self, prep):
+        return Evaluation(tuple(prep), 1.0 + 0.1 * sum(prep), True)
+
+    def __call__(self, bits):
+        return self.measure(self.prepare(bits))
+
+
+def _distinct_pop(n, length=8):
+    return [tuple(1 if j == i else 0 for j in range(length))
+            for i in range(n)]
+
+
+def test_overlap_estimates_savings_when_compiles_parallelize():
+    eng = Evaluator(_TwoPhaseFitness(contended=False), compile_workers=4)
+    for lo in range(0, 8, 4):
+        eng.evaluate_batch(_distinct_pop(8)[lo:lo + 4])
+    assert eng.stats.overlapped_compiles == 8
+    assert not eng.stats.overlap_disabled
+    assert eng.stats.overlap_est_saved_s > 0.0
+    assert eng.stats.compile_overlap_saved_s > 0.0
+
+
+def test_overlap_disables_itself_under_contention():
+    eng = Evaluator(_TwoPhaseFitness(contended=True), compile_workers=4)
+    pop = _distinct_pop(12)
+    for lo in range(0, 8, 4):
+        eng.evaluate_batch(pop[lo:lo + 4])
+    # two probed batches with a negative cumulative estimate trip the
+    # backoff for the evaluator's lifetime
+    assert eng.stats.overlap_disabled
+    assert eng.stats.overlap_est_saved_s < 0.0
+    overlapped_before = eng.stats.overlapped_compiles
+    eng.evaluate_batch(pop[8:12])
+    assert eng.stats.overlapped_compiles == overlapped_before, \
+        "post-backoff batches must warm up serially"

@@ -453,7 +453,185 @@ def test_every_frontend_serial_parallel_report_identical(name):
 
 
 # ---------------------------------------------------------------------------
-# contract 4: measured GA on the python_ast frontend picks a real variant
+# contract 4: function-block genes — one attention-stack workload, every
+# frontend (auto-extends: a new frontend must add a fixture or declare
+# itself block-free below)
+# ---------------------------------------------------------------------------
+
+BS, BD = 16, 8               # block workload extent (interp-friendly)
+
+BLOCK_SRC = """
+def attn_stack(x, scale, wq, wk, wv):
+    S = x.shape[0]
+    D = x.shape[1]
+    xn = np.zeros_like(x)
+    q = np.zeros_like(x)
+    k = np.zeros_like(x)
+    v = np.zeros_like(x)
+    out = np.zeros_like(x)
+    for i in range(S):
+        ss = 0.0
+        for j in range(D):
+            ss += x[i, j] * x[i, j]
+        r = 1.0 / math.sqrt(ss / D + 1e-06)
+        for j in range(D):
+            xn[i, j] = x[i, j] * r * (1.0 + scale[j])
+    for i in range(S):
+        for j in range(D):
+            sq = 0.0
+            sk = 0.0
+            sv = 0.0
+            for t in range(D):
+                sq += xn[i, t] * wq[t, j]
+                sk += xn[i, t] * wk[t, j]
+                sv += xn[i, t] * wv[t, j]
+            q[i, j] = sq
+            k[i, j] = sk
+            v[i, j] = sv
+    for i in range(S):
+        m = -1e30
+        for j in range(i + 1):
+            s = 0.0
+            for t in range(D):
+                s += q[i, t] * k[j, t]
+            s = s / math.sqrt(D)
+            if s > m:
+                m = s
+        z = 0.0
+        for j in range(i + 1):
+            s = 0.0
+            for t in range(D):
+                s += q[i, t] * k[j, t]
+            w = math.exp(s / math.sqrt(D) - m)
+            z += w
+            for t in range(D):
+                out[i, t] += w * v[j, t]
+        for t in range(D):
+            out[i, t] = out[i, t] / z
+    return out
+"""
+
+
+def _block_inputs():
+    r = _rng()
+    return dict(x=r.standard_normal((BS, BD)),
+                scale=r.standard_normal(BD) * 0.1,
+                wq=r.standard_normal((BD, BD)) / math.sqrt(BD),
+                wk=r.standard_normal((BD, BD)) / math.sqrt(BD),
+                wv=r.standard_normal((BD, BD)) / math.sqrt(BD))
+
+
+def _jx_block_case():
+    @jax.jit
+    def attention(q, k, v):
+        s = q @ k.T / jnp.sqrt(q.shape[-1] * 1.0)
+        mask = jnp.tril(jnp.ones((q.shape[0], q.shape[0]), bool))
+        return jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1) @ v
+
+    def model(x, scale, wq, wk, wv):
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        xn = x * jax.lax.rsqrt(var + 1e-6) * (1.0 + scale)
+        return attention(xn @ wq, xn @ wk, xn @ wv)
+
+    i = _block_inputs()
+    return model, tuple(jnp.asarray(i[n], jnp.float32)
+                        for n in ("x", "scale", "wq", "wk", "wv"))
+
+
+_BLOCK_BUNDLES: dict = {}
+
+#: frontends whose planning pipeline has no function-block pass — they must
+#: still plan the absence uniformly (no member-carrying gene sites)
+_BLOCK_FREE = {"module", "ir"}
+
+
+def _block_bundle(name):
+    if name in _BLOCK_BUNDLES:
+        return _BLOCK_BUNDLES[name]
+    if name == "python_ast":
+        inputs = _block_inputs()
+        fe = get_frontend("python_ast")
+        cfg = OffloadConfig(repeats=1)
+        program = fe.normalize_target(BLOCK_SRC, inputs, cfg)
+        graph = fe.build_graph(program, inputs, cfg)
+        bundle = fe.make_fitness(graph, program, inputs, cfg)
+        from repro.core.frontends.ast_frontend import Executor
+        ref = np.asarray(Executor(program, {}, hoist_transfers=False)
+                         .run(**inputs)["out"])
+        runner = lambda art: np.asarray(art.run(**inputs)["out"])  # noqa: E731
+        target = program
+    elif name == "jaxpr":
+        fn, args = _jx_block_case()
+        fe = get_frontend("jaxpr")
+        cfg = OffloadConfig(repeats=1, options={"example_args": args})
+        graph = fe.build_graph(fn, None, cfg)
+        bundle = fe.make_fitness(graph, fn, None, cfg)
+        ref = np.asarray(fn(*args))
+        runner = lambda sub: np.asarray(sub(*args))  # noqa: E731
+        target = fn
+    else:
+        raise AssertionError(
+            f"frontend {name!r} is registered but has no function-block "
+            f"fixture: add one (or list it in _BLOCK_FREE) in "
+            f"tests/test_frontend_differential.py")
+    coding = coding_from_graph(graph, exclude=bundle.claimed,
+                               destinations=bundle.destinations)
+    _BLOCK_BUNDLES[name] = (fe, graph, bundle, coding, ref, runner, target)
+    return _BLOCK_BUNDLES[name]
+
+
+def _block_values(coding, graph, gene):
+    blocks = [r for r in graph.regions if r.meta.get("block_members")]
+    assert blocks, "attention stack must yield a function-block region"
+    fb = blocks[0]
+    values = tuple(gene if s.region == fb.name else 0 for s in coding.sites)
+    return values, fb
+
+
+@pytest.mark.parametrize("name", sorted(frontend_names()))
+def test_block_genes_uniform_across_frontends(name):
+    if name in _BLOCK_FREE:
+        res = _plan(name)
+        assert all(not s.members for s in res.coding.sites)
+        return
+    fe, graph, bundle, coding, ref, runner, target = _block_bundle(name)
+    values, fb = _block_values(coding, graph, 1)
+    site = next(s for s in coding.sites if s.region == fb.name)
+    assert site.members == tuple(fb.meta["block_members"])
+    assert len(site.members) >= 2, "a block spans several regions"
+    # an active block gene claims its members on every frontend
+    claimed = coding.claimed_members(values)
+    assert claimed == frozenset(site.members)
+    decoded = coding.decode(values)
+    assert decoded[fb.name] != site.ref_impl
+    for m in site.members:
+        if m in decoded:
+            assert decoded[m] == \
+                next(s for s in coding.sites if s.region == m).ref_impl
+
+
+@pytest.mark.parametrize("gene", [1, 2])
+def test_block_variant_outputs_match_python_vs_jaxpr(gene):
+    outs = {}
+    for name in ("python_ast", "jaxpr"):
+        fe, graph, bundle, coding, ref, runner, target = _block_bundle(name)
+        values, fb = _block_values(coding, graph, gene)
+        impl = coding.decode(values)[fb.name]
+        artifact = fe.apply_plan(graph, coding, values, bundle)
+        assert artifact.report.substituted.get(fb.name) == impl, \
+            artifact.report.fallbacks
+        out = runner(artifact)
+        np.testing.assert_allclose(out, ref, rtol=RTOL, atol=ATOL)
+        outs[name] = (impl, out)
+    # the differential claim, now at block granularity: both frontends
+    # bound the same block implementation and computed the same numbers
+    assert outs["python_ast"][0] == outs["jaxpr"][0]
+    np.testing.assert_allclose(outs["python_ast"][1], outs["jaxpr"][1],
+                               rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# contract 5: measured GA on the python_ast frontend picks a real variant
 # ---------------------------------------------------------------------------
 
 

@@ -169,6 +169,115 @@ def test_foreign_bits_never_crash_phenotype_key():
     assert key((1,)) == ("raw", (1,))        # stale persisted line
 
 
+# ---------------------------------------------------------------------------
+# function-block genes: claiming semantics
+# ---------------------------------------------------------------------------
+
+
+def _block_graph():
+    return RegionGraph([
+        Region("a", "loop", offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=8),
+        Region("b", "loop", offloadable=True,
+               alternatives=("ref", "fused_jnp", "pallas"), trip_count=8),
+        Region("c", "loop", offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=8),
+        Region("blk", "block", offloadable=True,
+               alternatives=("ref", "block_chunked", "block_fused"),
+               meta={"block_members": ("a", "b")}),
+    ], "ir", "block-props")
+
+
+def test_coding_from_graph_carries_block_members():
+    coding = coding_from_graph(_block_graph())
+    by_region = {s.region: s for s in coding.sites}
+    assert by_region["blk"].members == ("a", "b")
+    assert all(not s.members for r, s in by_region.items() if r != "blk")
+
+
+def test_active_block_gene_claims_members_to_ref():
+    coding = coding_from_graph(_block_graph(),
+                               destinations=("cpu", "gpu_fused",
+                                             "gpu_pallas"))
+    order = [s.region for s in coding.sites]
+    values = tuple(1 for _ in order)            # everything on, block too
+    assert coding.claimed_members(values) == frozenset({"a", "b"})
+    decoded = coding.decode(values)
+    # claimed members are inert — forced to their reference path even
+    # though their own genes are on
+    assert decoded["a"] == "ref" and decoded["b"] == "ref"
+    assert decoded["c"] == "kernel"             # unclaimed keeps its gene
+    assert decoded["blk"] == "block_chunked"
+
+
+def test_inactive_block_gene_claims_nothing():
+    coding = coding_from_graph(_block_graph(),
+                               destinations=("cpu", "gpu_fused",
+                                             "gpu_pallas"))
+    order = [s.region for s in coding.sites]
+    values = tuple(0 if r == "blk" else 1 for r in order)
+    assert coding.claimed_members(values) == frozenset()
+    decoded = coding.decode(values)
+    assert decoded == {"a": "kernel", "b": "fused_jnp", "c": "kernel",
+                       "blk": "ref"}
+
+
+def test_phenotype_key_ignores_claimed_member_genes():
+    coding = coding_from_graph(_block_graph(),
+                               destinations=("cpu", "gpu_fused",
+                                             "gpu_pallas"))
+    key = phenotype_key(coding)
+    order = [s.region for s in coding.sites]
+
+    def chrom(**genes):
+        return tuple(genes.get(r, 0) for r in order)
+
+    # with the block gene active, the members' own genes cannot change the
+    # program — one phenotype, one measurement
+    assert key(chrom(blk=1)) == key(chrom(blk=1, a=1, b=2))
+    # with the block gene off they are live again
+    assert key(chrom()) != key(chrom(a=1))
+    # and block on vs off is of course a different program
+    assert key(chrom(blk=1)) != key(chrom())
+
+
+def test_modeled_cost_skips_claimed_members():
+    from repro.core.genes import modeled_cost_s
+    graph = _block_graph()
+    coding = coding_from_graph(graph,
+                               destinations=("cpu", "gpu_fused",
+                                             "fpga_stub"))
+    order = [s.region for s in coding.sites]
+    stub_a = tuple({"a": 2}.get(r, 0) for r in order)
+    cost_alone = modeled_cost_s(graph, coding, stub_a)
+    assert cost_alone > 0.0
+    # parking a *claimed* member on the stub charges nothing: the block
+    # adapter computes it, the stub never runs
+    stub_a_claimed = tuple({"a": 2, "blk": 1}.get(r, 0) for r in order)
+    assert modeled_cost_s(graph, coding, stub_a_claimed) == 0.0
+
+
+@given(data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_block_claiming_property_members_always_ref(data):
+    coding = coding_from_graph(_block_graph(),
+                               destinations=("cpu", "gpu_fused",
+                                             "gpu_pallas"))
+    values = tuple(data.draw(st.lists(st.integers(0, coding.arity - 1),
+                                      min_size=coding.length,
+                                      max_size=coding.length)))
+    decoded = coding.decode(values)
+    claimed = coding.claimed_members(values)
+    for region in claimed:
+        site = next(s for s in coding.sites if s.region == region)
+        assert decoded[region] == site.ref_impl
+    blk = next(s for s in coding.sites if s.region == "blk")
+    if decoded["blk"] != blk.ref_impl:
+        assert claimed == frozenset(blk.members)
+    else:
+        assert claimed == frozenset()
+
+
 @pytest.mark.parametrize("value,rec,expect", [
     (1, ("cpu", "gpu"), 1),                  # same alphabet
     (1, ("cpu", "fpga_stub"), 1),            # offloaded name missing -> slot 1

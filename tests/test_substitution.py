@@ -300,6 +300,128 @@ def test_jaxpr_static_cost_path_is_opt_in(rng):
     assert isinstance(res.artifact, dict)    # impl map, not a callable
 
 
+# ---------------------------------------------------------------------------
+# function-block substitution: whole-span equivalence, claiming, fallbacks
+# ---------------------------------------------------------------------------
+
+BLOCK_VARIANTS = ("block_chunked", "block_fused")
+
+
+def _attention_stack_case(rng, s=64, d=16):
+    @jax.jit
+    def attention(q, k, v):
+        sc = q @ k.T / jnp.sqrt(q.shape[-1] * 1.0)
+        mask = jnp.tril(jnp.ones((q.shape[0], q.shape[0]), bool))
+        return jax.nn.softmax(jnp.where(mask, sc, -1e30), axis=-1) @ v
+
+    def model(x, scale, wq, wk, wv, wo):
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        xn = x * jax.lax.rsqrt(var + 1e-6) * (1.0 + scale)
+        q = xn @ wq
+        k = xn @ wk
+        v = xn @ wv
+        o = attention(q, k, v)
+        return x + o @ wo
+
+    x = _arr(rng, s, d)
+    scale = _arr(rng, d, scale=0.1)
+    wq, wk, wv, wo = (_arr(rng, d, d, scale=1.0 / math.sqrt(d))
+                      for _ in range(4))
+    return model, (x, scale, wq, wk, wv, wo)
+
+
+def _block_engine(rng):
+    model, args = _attention_stack_case(rng)
+    graph = jf.build_graph(model, *args)
+    jf.annotate_variants(graph, default_db())
+    jf.annotate_block_sites(graph, default_db())
+    engine = SubstitutionEngine(model, args, graph)
+    blocks = [r for r in graph.regions if r.meta.get("block_members")]
+    assert blocks, "attention stack must produce a function-block region"
+    return engine, blocks[0], model, args
+
+
+@pytest.mark.parametrize("variant", BLOCK_VARIANTS)
+def test_block_substitution_equivalence(rng, variant):
+    engine, fb, model, args = _block_engine(rng)
+    assert set(fb.alternatives) >= {"ref"} | set(BLOCK_VARIANTS)
+
+    # block-granularity verification: adapter vs reference over the span
+    res, chosen = engine.verify_block(fb.name, variant)
+    assert chosen == variant
+    assert res.ok, (variant, res)
+
+    # whole-program substitution: the block adapter re-emits the span and
+    # the claimed members drop to their reference path, reported as such
+    sub = engine.substitute({fb.name: variant})
+    assert sub.report.substituted[fb.name] == variant
+    by_region = {c.region: c for c in sub.report.choices}
+    for member in fb.meta["block_members"]:
+        assert by_region[member].chosen == "ref"
+        assert f"claimed by block {fb.name}" in by_region[member].why
+    v = verify(model(*args), sub(*args))
+    assert v.ok, (variant, v)
+
+
+def test_block_gene_overrides_member_requests(rng):
+    # a chromosome that turns on the block AND a claimed member: the block
+    # wins, the member's request is overridden to ref (one owner per span)
+    engine, fb, model, args = _block_engine(rng)
+    member = fb.meta["block_members"][-1]
+    sub = engine.substitute({fb.name: "block_fused", member: "fused_jnp"})
+    assert sub.report.substituted == {fb.name: "block_fused"}
+    choice = next(c for c in sub.report.choices if c.region == member)
+    assert choice.chosen == "ref"
+    assert f"claimed by block {fb.name}" in choice.why
+    v = verify(model(*args), sub(*args))
+    assert v.ok, v
+
+
+def test_block_unknown_impl_releases_members(rng):
+    # the block falls back to ref -> the members stay their own regions
+    # (loop-level substitution still possible on them)
+    engine, fb, model, args = _block_engine(rng)
+    sub = engine.substitute({fb.name: "no-such-variant"})
+    assert fb.name not in sub.report.substituted
+    assert "unknown implementation" in sub.report.fallbacks[fb.name]
+    for c in sub.report.choices:
+        assert "claimed by block" not in c.why
+    np.testing.assert_allclose(np.asarray(sub(*args)),
+                               np.asarray(model(*args)),
+                               rtol=1e-5, atol=1e-5)
+    # verify_block on the same request is trivially the reference path
+    res, chosen = engine.verify_block(fb.name, "no-such-variant")
+    assert chosen == "ref" and res.ok
+
+
+def test_block_predicate_rejection_falls_back_to_ref():
+    # head dim beyond the kernel range: every attention_stack variant must
+    # refuse via its predicate, and the shared fallback rule yields ref
+    from repro.core.variants import resolve_variant
+
+    d = 600                              # > the binder's 512 head-dim cap
+    f32 = jnp.float32
+    av = lambda *shape: jax.ShapeDtypeStruct(shape, f32)   # noqa: E731
+    site = CallSite(pattern="attention_stack", kind="block",
+                    in_avals=(av(32, d), av(d), av(d, d), av(d, d),
+                              av(d, d)),
+                    out_avals=(av(32, d),), out_used=(True,))
+    for variant in BLOCK_VARIANTS:
+        adapter, chosen, why = resolve_variant(site, variant)
+        assert adapter is None and chosen == "ref"
+        assert "head dim outside kernel range" in why
+
+
+def test_block_sites_opt_out_leaves_graph_loop_only(rng):
+    model, args = _attention_stack_case(rng)
+    cfg = OffloadConfig(ga=GAConfig(population=6, generations=2, seed=0),
+                        options={"example_args": args,
+                                 "block_sites": False}, repeats=1)
+    fe_res = Offloader(cfg).plan(model)
+    assert not any(r.meta.get("block_members")
+                   for r in fe_res.graph.regions)
+
+
 def test_invalid_variant_result_is_rejected_by_verifier(rng):
     # non-causal attention *name*-matched to the causal kernels: the
     # substitution binds, but the output diverges -> the verifier rejects it
