@@ -32,7 +32,7 @@ from repro.core.frontends.ast_frontend import Executor, PyProgram
 from repro.core.ga import Evaluation, GAConfig, run_ga
 from repro.core.genes import coding_from_graph
 from repro.core.fitness import WallClockFitness
-from repro.core.loop_offload import loop_offload_pass
+from repro.core.offload import ga_search
 
 from benchmarks.common import DEMO_CONSTS, DEMO_SRC, demo_inputs, row, timeit
 
@@ -117,7 +117,7 @@ def _bench_python_ga(rows: list, quick: bool = False) -> None:
         cfg = GAConfig(population=6 if quick else 10,
                        generations=4 if quick else 6, seed=0,
                        cache_dir=cache_dir)
-        res = loop_offload_pass(program.graph, fitness, cfg).ga
+        res = ga_search(program.graph, fitness, cfg)[1]
 
         all_on = fitness(coding.all_on())
         base = res.baseline.time_s
@@ -159,7 +159,7 @@ def _bench_python_ga(rows: list, quick: bool = False) -> None:
         assert res.best.time_s <= all_on.time_s * 1.05  # GA >= all-offload
 
         # warm re-run: the persistent cache should do (nearly) all the work
-        res2 = loop_offload_pass(program.graph, fitness, cfg).ga
+        res2 = ga_search(program.graph, fitness, cfg)[1]
         rows.append(row(
             "ga_offload.warm_rerun_new_measurements", res2.evaluations,
             f"persistent_hits={res2.persistent_hits} "
@@ -180,10 +180,10 @@ def _bench_python_ga(rows: list, quick: bool = False) -> None:
             "ga_offload.surrogate_fitted_rank_corr", fit.rank_corr * 1e6,
             f"journal fit over {fit.n_records} records: spearman "
             f"{fit.rank_corr:.3f} vs static {fit.static_rank_corr:.3f}"))
-        res3 = loop_offload_pass(program.graph, fitness,
-                                 GAConfig(population=cfg.population,
-                                          generations=cfg.generations,
-                                          seed=1, cache_dir=cache_dir)).ga
+        res3 = ga_search(program.graph, fitness,
+                          GAConfig(population=cfg.population,
+                                   generations=cfg.generations,
+                                   seed=1, cache_dir=cache_dir))[1]
         rows.append(row(
             "ga_offload.surrogate_kind_fitted",
             1.0 if res3.surrogate_kind == "fitted" else 0.0,

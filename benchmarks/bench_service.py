@@ -1,0 +1,143 @@
+"""Bench 7 — the persistent planning service (plan store + coalescing +
+refinement).
+
+What the daemon buys over one-shot ``Offloader.plan``:
+
+* **cold vs warm**: the first request for a fingerprint pays for a GA
+  search; a service restart answers the same request by loading the stored
+  plan artifact — ``service.warm_load_speedup`` is the same-run ratio the
+  CI perf gate tracks (a silent regression to re-searching on the warm
+  path collapses it to ~100).
+* **coalescing**: N concurrent requests for one fingerprint share a single
+  in-flight search — ``service.coalescing.avoided_searches`` counts the
+  searches the admission layer deduplicated (deterministic: requests
+  minus searches).
+* **refinement + hot-swap**: a background round resumes the GA from the
+  deployed chromosome and atomically swaps in a strictly better-measured
+  plan (the lifecycle row reports whether the swap happened).
+
+Deterministic stand-in fitness throughout: the rows measure the service
+machinery, not the host's wall-clock noise.  ``main(quick=True)`` shrinks
+the GA budgets; every row survives.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core import (Evaluation, GAConfig, OffloadConfig, Region,
+                        RegionGraph)
+from repro.service import PlanService, ServiceConfig
+
+from benchmarks.common import row
+
+
+def _toy_graph(tag: str = "svc", sites: int = 6) -> RegionGraph:
+    regions = [Region("outer", "loop", trip_count=50)]
+    for i in range(sites):
+        regions.append(Region(
+            f"loop_{i}", "loop", uses=frozenset({f"v{i}"}),
+            defs=frozenset({f"v{i}"}), offloadable=True,
+            alternatives=("ref", "kernel"), trip_count=2 + 3 * i))
+    return RegionGraph(regions, "ir", f"bench_{tag}{sites}")
+
+
+def _valley_for(target: tuple, measure_s: float = 0.0):
+    # minimized at a non-corner pattern: the seeded all-off/all-on corners
+    # miss it, so a cold search has work to do and a refinement round has a
+    # strictly better plan to find.  ``measure_s`` simulates the cost of one
+    # real measurement — what the warm path's store hit avoids entirely.
+    def fitness(values) -> Evaluation:
+        if measure_s:
+            time.sleep(measure_s)
+        t = 0.5 + 0.2 * sum(int(a != b) for a, b in zip(values, target))
+        return Evaluation(tuple(values), t, True)
+    return fitness
+
+
+def main(quick: bool = False) -> list[str]:
+    import tempfile
+
+    rows = []
+    pop, gens = (8, 4) if quick else (12, 8)
+    valley6 = _valley_for((1, 0, 1, 1, 0, 1), measure_s=0.002)
+
+    # --- cold plan vs warm load across a service restart --------------------
+    with tempfile.TemporaryDirectory() as d:
+        cfg = OffloadConfig(frontend="ir", fitness_fn=valley6,
+                            ga=GAConfig(population=pop, generations=gens,
+                                        seed=0))
+        t0 = time.perf_counter()
+        with PlanService(d, config=cfg) as svc:
+            cold = svc.plan(_toy_graph())
+        dt_cold = time.perf_counter() - t0
+        assert not cold.warm and svc.stats.searches == 1
+
+        t0 = time.perf_counter()
+        with PlanService(d, config=cfg) as svc2:
+            warm = svc2.plan(_toy_graph())
+        dt_warm = time.perf_counter() - t0
+        assert warm.warm and svc2.stats.searches == 0
+        assert warm.record.bits == cold.record.bits
+
+        rows.append(row("service.cold_plan", dt_cold * 1e6,
+                        f"search+persist bits={cold.record.bits} "
+                        f"evals={cold.record.meta.get('evaluations')}"))
+        rows.append(row("service.warm_load", dt_warm * 1e6,
+                        "store hit: artifact load, no GA"))
+        rows.append(row("service.warm_load_speedup",
+                        100.0 * dt_cold / dt_warm,
+                        "cold search vs warm store load, same machine/run"))
+
+    # --- coalescing: concurrent same-fingerprint requests, one search -------
+    with tempfile.TemporaryDirectory() as d:
+        started, release = threading.Event(), threading.Event()
+
+        def blocking(values) -> Evaluation:
+            started.set()
+            release.wait(timeout=60)
+            return valley6(values)
+
+        cfg = OffloadConfig(frontend="ir", fitness_fn=blocking,
+                            ga=GAConfig(population=pop, generations=gens,
+                                        seed=0))
+        t0 = time.perf_counter()
+        with PlanService(d, config=cfg) as svc:
+            futs = [svc.submit(_toy_graph("co"))]
+            started.wait(timeout=60)
+            futs += [svc.submit(_toy_graph("co")) for _ in range(3)]
+            release.set()
+            for f in futs:
+                f.result(timeout=120)
+        dt = time.perf_counter() - t0
+        avoided = svc.stats.requests - svc.stats.searches
+        assert svc.stats.searches == 1 and avoided == 3
+        rows.append(row("service.coalescing.avoided_searches",
+                        float(avoided),
+                        f"requests={svc.stats.requests} "
+                        f"searches={svc.stats.searches} "
+                        f"wall_us={dt * 1e6:.0f}"))
+
+    # --- refinement lifecycle: strictly-better plan hot-swapped -------------
+    with tempfile.TemporaryDirectory() as d:
+        target3 = (1, 0, 1)
+        cfg = OffloadConfig(frontend="ir", fitness_fn=_valley_for(target3),
+                            ga=GAConfig(population=2, generations=1, seed=0))
+        with PlanService(d, config=cfg,
+                         service=ServiceConfig(
+                             refine_generations=6,
+                             refine_population=8)) as svc:
+            plan = svc.plan(_toy_graph("ref", sites=3))
+            t0 = time.perf_counter()
+            swapped = svc.refine_once(plan.fingerprint)
+            dt = time.perf_counter() - t0
+            cur = svc.current(plan.fingerprint)
+            assert swapped and cur.record.bits == target3
+            rows.append(row("service.refinement.hot_swap", dt * 1e6,
+                            f"swapped={swapped} v{plan.version}->"
+                            f"v{cur.version} best={cur.record.best_time_s:g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -6,7 +6,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs benches
 that support it in smoke mode (no full GA searches) — the CI regression
 gate.  ``--json`` additionally writes the rows as a machine-readable
-report (the perf-trajectory artifact ``BENCH_PR5.json``; see
+report (the perf-trajectory artifact ``BENCH_PR7.json``; see
 ``benchmarks.compare`` for the gate that consumes it).
 """
 from __future__ import annotations
@@ -27,7 +27,8 @@ def parse_row(line: str) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: ga,block,transfer,frontends,kernels,roofline")
+                    help="comma list: ga,block,transfer,frontends,kernels,"
+                         "roofline,service")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode for benches that support it")
     ap.add_argument("--json", default="",
@@ -36,7 +37,7 @@ def main() -> None:
 
     from benchmarks import (bench_block_offload, bench_frontends,
                             bench_ga_offload, bench_kernels, bench_roofline,
-                            bench_transfer)
+                            bench_service, bench_transfer)
     benches = {
         "ga": bench_ga_offload.main,
         "block": bench_block_offload.main,
@@ -44,6 +45,7 @@ def main() -> None:
         "frontends": bench_frontends.main,
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
+        "service": bench_service.main,
     }
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")

@@ -4,7 +4,7 @@ with COMPILED-ARTIFACT fitness on the 256-chip production mesh.
 Every chromosome decodes to an ExecPlan, lowers + compiles the train step
 (512 placeholder devices), and is scored by the roofline step time; plans
 that exceed 16 GB/chip get fitness 0 (the compile-error analogue).  This is
-`repro.core.planner.plan_module_offload` — function-block pass first, GA
+`Offloader.plan` with the module frontend — function-block pass first, GA
 over the remaining sites.
 
 Runs a scaled-down architecture so each compile takes ~15 s on this CPU
@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.frontends.registry import OffloadConfig
 from repro.core.ga import GAConfig
-from repro.core.planner import plan_module_offload
+from repro.core.offload import Offloader
 from repro import roofline as rl
 from repro.launch.mesh import make_production_mesh
 from repro.launch.dryrun import lower_cell
@@ -41,16 +42,18 @@ def main():
         lowered, _, _ = lower_cell(cfg, shape, mesh, plan)
         return lowered
 
-    res = plan_module_offload(
-        cfg, lower_fn, n_devices=mesh.size, model_flops=model_flops,
-        ga_cfg=GAConfig(population=6, generations=2, seed=0),
-        log=print)
+    ocfg = OffloadConfig(
+        frontend="module", ga=GAConfig(population=6, generations=2, seed=0),
+        log=print,
+        options={"lower_fn": lower_fn, "n_devices": mesh.size,
+                 "model_flops": model_flops})
+    res = Offloader(ocfg).plan(cfg)
 
     print("\n--- block pass (pattern DB) ---")
     for b in res.block.offloads:
         print(f"  {b.region}: {b.pattern} -> {b.plan_field}")
     print("\n--- GA over remaining sites ---")
-    print("  sites:", [s.region for s in res.loops.coding.sites])
+    print("  sites:", [s.region for s in res.coding.sites])
     print("  best bits:", res.best.bits)
     base_t = res.baseline.time_s
     best_t = res.best.time_s
@@ -58,7 +61,7 @@ def main():
     print(f"planned:              {best_t*1e3:9.1f} ms/step "
           f"-> {base_t/best_t:.2f}x")
     print("final plan:", {
-        k: getattr(res.final_plan, k)
+        k: getattr(res.artifact, k)
         for k in ("attn_impl", "norm_impl", "mlp_impl", "qkv_fused",
                   "loss_impl", "remat", "gather_mode")})
     r = res.best.detail.get("roofline", {})

@@ -13,8 +13,9 @@ program written for CPU, automatically offload it.
 import numpy as np
 
 from repro.core.frontends.ast_frontend import PyProgram
+from repro.core.frontends.registry import OffloadConfig
 from repro.core.ga import GAConfig
-from repro.core.planner import plan_python_offload
+from repro.core.offload import Offloader
 
 SRC = """
 def app(a, b, x, sig_re, sig_im, n, m, k, iters, fftn):
@@ -56,27 +57,34 @@ def main():
     print(f"parsed: {len(program.graph.regions)} regions, "
           f"{len(program.graph.loops())} loops")
 
-    res = plan_python_offload(
-        program, inputs, ga_cfg=GAConfig(population=10, generations=5, seed=0),
+    cfg = OffloadConfig(
+        frontend="python_ast",
+        ga=GAConfig(population=10, generations=5, seed=0),
         log=lambda s: print("  " + s))
+    res = Offloader(cfg).plan(program, inputs)
+    # claimed function blocks carry a bound library call; variant-site menus
+    # (regions still in the gene) show up in res.pattern instead
+    lib_calls = {r for r, e in res.details.get("lib_calls", {}).items()
+                 if isinstance(e, dict) and "lib" in e}
+    block_time_s = res.details.get("block_time_s", res.baseline.time_s)
 
     print("\n--- function-block offload (pattern DB) ---")
     for b in res.block.offloads:
-        kept = "KEPT" if b.region in res.lib_calls else "rejected-by-measurement"
+        kept = "KEPT" if b.region in lib_calls else "rejected-by-measurement"
         print(f"  {b.region}: {b.pattern} via {b.how} (sim={b.score:.3f}) "
               f"-> {b.replacement} [{kept}]")
 
     print("\n--- GA loop offload ---")
-    for h in res.ga_history:
+    for h in res.ga.history:
         print(f"  gen {h['generation']}: best={h['best_time_s']*1e3:.2f}ms "
               f"mean={h['mean_time_s']*1e3:.2f}ms invalid={h['n_invalid']}")
 
     print("\n--- final pattern ---")
-    for region, impl in sorted(res.impl.items()):
+    for region, impl in sorted(res.pattern.items()):
         print(f"  {region}: {impl}")
-    print(f"\nbaseline (all interpreted): {res.baseline_time_s*1e3:8.2f} ms")
-    print(f"blocks only:                {res.block_time_s*1e3:8.2f} ms")
-    print(f"final plan:                 {res.final_time_s*1e3:8.2f} ms")
+    print(f"\nbaseline (all interpreted): {res.baseline.time_s*1e3:8.2f} ms")
+    print(f"blocks only:                {block_time_s*1e3:8.2f} ms")
+    print(f"final plan:                 {res.best.time_s*1e3:8.2f} ms")
     print(f"SPEEDUP: {res.speedup:.1f}x   "
           f"(transfers hoisted: {res.transfer_plan.n_hoisted})")
 

@@ -42,9 +42,7 @@ which is true of the cost-model path).
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
-import json
 import math
 import os
 import threading
@@ -55,10 +53,16 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core.ga import Evaluation
+from repro.core.journal import Journal, file_lock, newest_per_key
 
 __all__ = ["EvalStats", "Evaluator", "ProcessPool", "transfer_cost_surrogate",
            "register_fitness_factory", "fitness_factory",
            "fitness_factory_names", "record_search_meta", "last_rank_corr"]
+
+#: backcompat alias — the sidecar-flock helper now lives in
+#: :mod:`repro.core.journal` so every record stream (seed bank, search meta,
+#: surrogate fits, measurements, plan store) shares one code path.
+_file_lock = file_lock
 
 
 # ---------------------------------------------------------------------------
@@ -70,44 +74,51 @@ def _bits_key(bits: Sequence[int]) -> str:
     return "".join(str(int(b)) for b in bits) or "-"
 
 
+#: default per-fingerprint measurement-journal bound.  A long-lived planning
+#: service replays GA refinement against the same fingerprint indefinitely;
+#: newest-per-bits compaction past 2x this bound (the seed bank's policy)
+#: keeps journals finite without ever discarding the latest measurement of a
+#: pattern.
+_MEASUREMENTS_MAX_RECORDS = 2048
+
+
 class MeasurementCache:
     """On-disk (fingerprint, bits) -> Evaluation store, one JSONL per program.
 
-    Append-only journal so concurrent writers from different processes can
-    share one file; duplicate lines are harmless (last write wins on load).
-    Only *finite, valid-or-invalid measured* results are persisted — screened
-    or skipped chromosomes never enter the store.
+    Built on the shared :class:`repro.core.journal.Journal` (the same
+    flock/fsync code path as the seed bank, search meta, surrogate fits and
+    the plan store): appends serialize on the sidecar lock so concurrent
+    writers from different processes can share one file; duplicate lines are
+    harmless (last write wins on load).  Only *finite, valid-or-invalid
+    measured* results are persisted — screened or skipped chromosomes never
+    enter the store.  The journal is bounded: past ``2 * max_records`` lines
+    it compacts to the newest record per bits-key, newest ``max_records``
+    overall, so a long-lived service can't grow it without limit.
     """
 
-    def __init__(self, cache_dir: str, fingerprint: str):
+    def __init__(self, cache_dir: str, fingerprint: str,
+                 max_records: int = _MEASUREMENTS_MAX_RECORDS):
         self.dir = cache_dir
         self.fingerprint = fingerprint
+        self.max_records = max(1, int(max_records))
         os.makedirs(cache_dir, exist_ok=True)
         self.path = os.path.join(cache_dir, f"measurements_{fingerprint}.jsonl")
-        self._lock = threading.Lock()
+        self._journal = Journal(self.path)
 
     def load(self) -> dict[tuple, Evaluation]:
         out: dict[tuple, Evaluation] = {}
-        try:
-            with open(self.path, "r", encoding="utf-8") as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        rec = json.loads(line)
-                    except json.JSONDecodeError:
-                        continue  # torn concurrent write; journal is append-only
-                    if rec.get("fingerprint") != self.fingerprint:
-                        continue
-                    bits = tuple(int(c) for c in rec["bits"]) \
-                        if rec["bits"] != "-" else ()
-                    t = rec["time_s"]
-                    out[bits] = Evaluation(
-                        bits, float("inf") if t is None else float(t),
-                        bool(rec["valid"]), dict(rec.get("detail") or {}))
-        except FileNotFoundError:
-            pass
+        for rec in self._journal.records():
+            if rec.get("fingerprint") != self.fingerprint:
+                continue
+            try:
+                bits = tuple(int(c) for c in rec["bits"]) \
+                    if rec["bits"] != "-" else ()
+                t = rec["time_s"]
+                out[bits] = Evaluation(
+                    bits, float("inf") if t is None else float(t),
+                    bool(rec["valid"]), dict(rec.get("detail") or {}))
+            except (KeyError, TypeError, ValueError):
+                continue  # foreign/legacy line
         return out
 
     def store(self, ev: Evaluation) -> None:
@@ -119,10 +130,12 @@ class MeasurementCache:
             "detail": {k: v for k, v in ev.detail.items()
                        if isinstance(v, (str, int, float, bool))},
         }
-        line = json.dumps(rec) + "\n"
-        with self._lock:
-            with open(self.path, "a", encoding="utf-8") as f:
-                f.write(line)
+        self._journal.append([rec])
+        self._journal.compact(
+            lambda recs: newest_per_key(
+                recs, key=lambda r: (r.get("fingerprint"), r.get("bits")),
+                max_records=self.max_records),
+            threshold=2 * self.max_records)
 
 
 # ---------------------------------------------------------------------------
@@ -135,22 +148,6 @@ _SEARCH_META_MAX_LINES = 512
 #: track record from last week says little about today's machine/load, and
 #: auto-screening must never act on a stale fingerprint.
 _SEARCH_META_HORIZON_S = 7 * 24 * 3600.0
-
-
-@contextlib.contextmanager
-def _file_lock(lock_path: str):
-    """Exclusive advisory lock; no-op where fcntl is unavailable."""
-    try:
-        import fcntl
-    except ImportError:
-        yield
-        return
-    with open(lock_path, "w") as lf:
-        fcntl.flock(lf, fcntl.LOCK_EX)
-        try:
-            yield
-        finally:
-            fcntl.flock(lf, fcntl.LOCK_UN)
 
 
 def record_search_meta(cache_dir: str, fingerprint: str,
@@ -172,43 +169,23 @@ def record_search_meta(cache_dir: str, fingerprint: str,
     now = time.time() if now is None else float(now)
     horizon = _SEARCH_META_HORIZON_S if horizon_s is None else float(horizon_s)
     os.makedirs(cache_dir, exist_ok=True)
-    path = os.path.join(cache_dir, _SEARCH_META_FILE)
+    journal = Journal(os.path.join(cache_dir, _SEARCH_META_FILE))
     rec = {"fingerprint": fingerprint, "rank_corr": float(rank_corr),
            "ts": now}
     if kind:                     # which surrogate produced the evidence
         rec["kind"] = str(kind)  # (static formula vs journal-fitted model)
-    with _file_lock(path + ".lock"):
-        with open(path, "a", encoding="utf-8") as f:
-            f.write(json.dumps(rec) + "\n")
-        try:
-            with open(path, "r", encoding="utf-8") as f:
-                lines = f.readlines()
-        except FileNotFoundError:
+    with journal.lock():
+        journal.append([rec], locked=False)
+        recs = journal.records()
+        fresh = [r for r in recs
+                 if isinstance(r.get("ts"), (int, float))
+                 and now - r["ts"] <= horizon]
+        if len(fresh) == len(recs) and len(recs) <= _SEARCH_META_MAX_LINES:
             return
-        fresh: list[str] = []
-        for line in lines:
-            try:
-                ts = json.loads(line).get("ts")
-            except json.JSONDecodeError:
-                continue
-            if isinstance(ts, (int, float)) and now - ts <= horizon:
-                fresh.append(line)
-        if len(fresh) == len(lines) and len(lines) <= _SEARCH_META_MAX_LINES:
-            return
-        newest: dict[str, str] = {}
-        for line in fresh:
-            try:
-                fp = json.loads(line).get("fingerprint")
-            except json.JSONDecodeError:
-                continue
-            if fp:
-                newest.pop(fp, None)
-                newest[fp] = line            # reinsert: keeps recency order
-        keep = list(newest.values())[-_SEARCH_META_MAX_LINES:]
-        tmp = path + ".tmp"
-        with open(tmp, "w", encoding="utf-8") as f:
-            f.writelines(keep)
-        os.replace(tmp, path)
+        journal.rewrite(
+            newest_per_key(fresh, key=lambda r: r.get("fingerprint"),
+                           max_records=_SEARCH_META_MAX_LINES),
+            locked=False)
 
 
 def last_rank_corr(cache_dir: str, fingerprint: str,
@@ -222,28 +199,15 @@ def last_rank_corr(cache_dir: str, fingerprint: str,
     now = time.time() if now is None else float(now)
     max_age = _SEARCH_META_HORIZON_S if max_age_s is None else float(max_age_s)
     out: Optional[float] = None
-    try:
-        with open(os.path.join(cache_dir, _SEARCH_META_FILE), "r",
-                  encoding="utf-8") as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    continue  # torn concurrent write
-                if rec.get("fingerprint") == fingerprint:
-                    ts = rec.get("ts")
-                    if not isinstance(ts, (int, float)) \
-                            or now - ts > max_age:
-                        continue         # stale (or unprovably fresh)
-                    corr = rec.get("rank_corr")
-                    if isinstance(corr, (int, float)) \
-                            and math.isfinite(corr):
-                        out = float(corr)
-    except FileNotFoundError:
-        pass
+    journal = Journal(os.path.join(cache_dir, _SEARCH_META_FILE))
+    for rec in journal.records():
+        if rec.get("fingerprint") == fingerprint:
+            ts = rec.get("ts")
+            if not isinstance(ts, (int, float)) or now - ts > max_age:
+                continue         # stale (or unprovably fresh)
+            corr = rec.get("rank_corr")
+            if isinstance(corr, (int, float)) and math.isfinite(corr):
+                out = float(corr)
     return out
 
 

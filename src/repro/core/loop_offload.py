@@ -10,6 +10,7 @@ keeps the historical entry point and result type.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
 
@@ -46,6 +47,10 @@ def loop_offload_pass(graph: RegionGraph,
     """
     from repro.core.offload import ga_search  # deferred: keeps the shim light
 
+    warnings.warn(
+        "loop_offload_pass is deprecated; use repro.core.offload.ga_search "
+        "(same search, (coding, GAResult) tuple) or Offloader.plan",
+        DeprecationWarning, stacklevel=2)
     coding, ga = ga_search(graph, fitness_fn, ga_cfg, exclude=exclude,
                            log=log, cache_extra=cache_extra,
                            evaluator=evaluator, seeds=seeds)

@@ -20,16 +20,16 @@ and drives the same pipeline for all of them:
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
 from repro.core import similarity as sim
-from repro.core.evaluator import (Evaluator, ProcessPool, _file_lock,
-                                  last_rank_corr, record_search_meta,
+from repro.core.evaluator import (Evaluator, ProcessPool, last_rank_corr,
+                                  record_search_meta,
                                   transfer_cost_surrogate)
+from repro.core.journal import Journal
 from repro.core.frontends.registry import (FitnessBundle, OffloadConfig,
                                            decoded_pattern, detect_frontend,
                                            get_frontend)
@@ -40,8 +40,8 @@ from repro.core.ir import RegionGraph
 from repro.core.transfer_planner import TransferPlan, plan_transfers
 from repro.core.variants import generic_plan_report
 
-__all__ = ["OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
-           "ga_search", "phenotype_key", "plan_offload",
+__all__ = ["OffloadConfig", "OffloadResult", "Offloader", "PlanContext",
+           "SeedBank", "ga_search", "phenotype_key", "plan_offload",
            "search_fingerprint"]
 
 
@@ -278,11 +278,8 @@ class SeedBank:
     def __init__(self, cache_dir: str, max_records: int = 128):
         os.makedirs(cache_dir, exist_ok=True)
         self.path = os.path.join(cache_dir, "seed_bank.jsonl")
-        self._lock_path = self.path + ".lock"
+        self._journal = Journal(self.path)
         self.max_records = max(1, int(max_records))
-
-    def _write_lock(self):
-        return _file_lock(self._lock_path)
 
     @staticmethod
     def _key(rec: dict) -> tuple:
@@ -290,52 +287,23 @@ class SeedBank:
                 tuple(rec.get("sites", ())), tuple(rec.get("values", ())),
                 tuple(rec.get("destinations", ())))
 
-    def _load(self) -> list[dict]:
-        out: list[dict] = []
-        try:
-            with open(self.path, "r", encoding="utf-8") as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        out.append(json.loads(line))
-                    except json.JSONDecodeError:
-                        continue  # torn concurrent write; journal append-only
-        except FileNotFoundError:
-            pass
-        return out
-
     def _live(self) -> list[dict]:
         """Journal collapsed to unique records, oldest -> newest, bounded."""
         by_key: dict[tuple, dict] = {}
-        for rec in self._load():
+        for rec in self._journal.records():
             by_key.pop(self._key(rec), None)
             by_key[self._key(rec)] = rec      # reinsert: moves to the tail
         live = list(by_key.values())
         return live[-self.max_records:]
 
     def _append(self, recs: list[dict]) -> None:
-        with self._write_lock():
-            with open(self.path, "a", encoding="utf-8") as f:
-                for rec in recs:
-                    f.write(json.dumps(rec) + "\n")
+        self._journal.append(recs)
 
     def _maybe_compact(self) -> None:
-        try:
-            with open(self.path, "r", encoding="utf-8") as f:
-                n_lines = sum(1 for _ in f)
-        except FileNotFoundError:
-            return
-        if n_lines <= 2 * self.max_records:
-            return
-        with self._write_lock():
-            live = self._live()          # re-read under the lock: no append
-            tmp = self.path + ".tmp"     # can land between read and replace
-            with open(tmp, "w", encoding="utf-8") as f:
-                for rec in live:
-                    f.write(json.dumps(rec) + "\n")
-            os.replace(tmp, self.path)
+        # re-reads under the lock (Journal.compact), so a concurrent
+        # writer's append can't land between read and replace
+        self._journal.compact(lambda _recs: self._live(),
+                              threshold=2 * self.max_records)
 
     def record(self, graph: RegionGraph, coding: GeneCoding,
                values: Sequence[int]) -> None:
@@ -511,16 +479,54 @@ def _with_destination_costs(graph: RegionGraph, coding: GeneCoding,
 
 
 @dataclass
+class PlanContext:
+    """The search-free front half of a planning run.
+
+    ``Offloader.prepare`` normalizes a target through its frontend — graph,
+    fitness bundle, gene coding, and the persistent-cache ``fingerprint``
+    the search would key its journals by — **without running any search**.
+    The context is everything the execution side needs: ``Offloader.apply``
+    decodes stored winner bits into the frontend artifact (a pure artifact
+    load), and ``Offloader.search`` runs the GA over it.  The plan service
+    uses prepare for request admission (fingerprint lookup / coalescing)
+    and apply for warm plan-store hits.
+    """
+
+    frontend: str
+    target: Any
+    inputs: Optional[dict]
+    config: OffloadConfig
+    graph: RegionGraph
+    bundle: FitnessBundle
+    coding: GeneCoding
+    fingerprint: str
+
+    @property
+    def sites(self) -> tuple[str, ...]:
+        """Gene-site region names, in gene order — the plan-store
+        compatibility check (bits only make sense against these)."""
+        return tuple(s.region for s in self.coding.sites)
+
+
+@dataclass
 class Offloader:
-    """The unified multi-frontend offload planner."""
+    """The unified multi-frontend offload planner.
+
+    ``plan`` is the one-shot pipeline; it is literally
+    ``search(prepare(target))``.  The halves are public because the
+    persistent planning service needs them apart: ``prepare`` admits a
+    request (fingerprint, no search), ``apply`` loads a stored plan's
+    artifact (no search), ``search`` is the only place measurements run.
+    """
 
     config: OffloadConfig = field(default_factory=OffloadConfig)
 
-    def plan(self, target: Any, inputs: Optional[dict] = None,
-             config: Optional[OffloadConfig] = None) -> OffloadResult:
-        """Plan offloading for any supported target; see module docstring."""
-        from repro.core.pattern_db import default_db
-
+    def prepare(self, target: Any, inputs: Optional[dict] = None,
+                config: Optional[OffloadConfig] = None) -> PlanContext:
+        """Frontend half of planning: normalize -> graph -> fitness bundle
+        -> gene coding -> search fingerprint.  Runs no search and takes no
+        measurement (frontends may run the *reference* program once to have
+        something to verify against)."""
         cfg = config or self.config
         log = cfg.log or (lambda s: None)
         name = cfg.frontend or detect_frontend(target, cfg)
@@ -539,11 +545,51 @@ class Offloader:
                                    destinations=destinations)
         log(f"graph: {graph.summary()} gene_length={coding.length} "
             f"alphabet={coding.destinations}")
+        fingerprint = search_fingerprint(graph, coding, bundle.claimed,
+                                         bundle.cache_extra)
+        return PlanContext(frontend=name, target=target, inputs=inputs,
+                           config=cfg, graph=graph, bundle=bundle,
+                           coding=coding, fingerprint=fingerprint)
+
+    def apply(self, ctx: PlanContext, values: Sequence[int]) -> Any:
+        """Pure artifact loader: decode ``values`` (a stored winner
+        chromosome) into the frontend deliverable — ``SubstitutedCallable``,
+        ``PyOffloadArtifact``, ``ExecPlan``, or an impl map.  No search, no
+        measurement: this is the execution side of the split, what a warm
+        plan-store hit runs instead of a GA."""
+        values = tuple(int(v) for v in values)
+        if len(values) != ctx.coding.length:
+            raise ValueError(
+                f"plan has {len(values)} genes but the program codes "
+                f"{ctx.coding.length} — stored plan does not fit this target")
+        fe = get_frontend(ctx.frontend)
+        return fe.apply_plan(ctx.graph, ctx.coding, values, ctx.bundle)
+
+    def plan(self, target: Any, inputs: Optional[dict] = None,
+             config: Optional[OffloadConfig] = None) -> OffloadResult:
+        """Plan offloading for any supported target; see module docstring."""
+        return self.search(self.prepare(target, inputs, config))
+
+    def search(self, ctx: PlanContext,
+               ga: Optional[GAConfig] = None,
+               extra_seeds: Sequence[Sequence[int]] = ()) -> OffloadResult:
+        """Measurement half of planning: compose the fitness, warm-start the
+        population, run the GA, and assemble the unified result.
+
+        ``ga`` overrides ``ctx.config.ga`` (the refinement loop bumps seed /
+        generations); ``extra_seeds`` are prepended warm starts (the
+        refinement loop seeds with the deployed plan's chromosome).
+        """
+        from repro.core.pattern_db import default_db
+
+        cfg = ctx.config
+        log = cfg.log or (lambda s: None)
+        graph, bundle, coding = ctx.graph, ctx.bundle, ctx.coding
 
         fitness = cfg.fitness_fn or bundle.fitness_factory(coding)
         fitness = _with_destination_costs(graph, coding, fitness)
 
-        ga_cfg = cfg.ga
+        ga_cfg = ga or cfg.ga
         if bundle.serial_only and (ga_cfg.workers > 1
                                    or ga_cfg.pool is not None):
             # wall-clock measurements interleave on shared hardware —
@@ -573,7 +619,7 @@ class Offloader:
                 "use thread workers (GAConfig.workers) here")
 
         # --- GA population warm starts ---------------------------------
-        seeds: list[tuple] = []
+        seeds: list[tuple] = [tuple(int(v) for v in s) for s in extra_seeds]
         if cfg.seed_from_db and coding.length:
             seeds += _pattern_db_seed(graph, coding, cfg.db or default_db())
         bank: Optional[SeedBank] = None
@@ -585,14 +631,24 @@ class Offloader:
                     log(f"seed bank: {len(neigh)} neighbor seed(s)")
                 seeds += neigh
 
-        coding, ga = ga_search(
+        coding, ga_res = ga_search(
             graph, fitness, ga_cfg, coding=coding, exclude=bundle.claimed,
             log=log, cache_extra=bundle.cache_extra, seeds=seeds,
             impl_resolver=bundle.impl_resolver)
 
-        best = ga.best
+        best = ga_res.best
+        artifact = self.apply(ctx, best.bits)
+        if bank is not None and coding.length:
+            bank.record(graph, coding, best.bits)
+        return self._assemble(ctx, ga_res, artifact)
+
+    def _assemble(self, ctx: PlanContext, ga_res: GAResult,
+                  artifact: Any) -> OffloadResult:
+        """Package search output (or a loaded plan) as the unified result."""
+        cfg, graph, bundle, coding = (ctx.config, ctx.graph, ctx.bundle,
+                                      ctx.coding)
+        best = ga_res.best
         pattern = decoded_pattern(coding, best.bits, bundle.base_impl)
-        artifact = fe.apply_plan(graph, coding, tuple(best.bits), bundle)
         # the uniform substitution report: frontends with a real resolution
         # step supply one (the jaxpr engine / ast variant menus); everyone
         # else gets the generic decode-level record — same shape either way
@@ -609,17 +665,15 @@ class Offloader:
                                          base_impl=bundle.base_impl,
                                          patterns=patterns)
         tp = plan_transfers(graph, pattern, hoist=cfg.hoist_transfers)
-        if bank is not None and coding.length:
-            bank.record(graph, coding, best.bits)
 
-        baseline = bundle.context.get("baseline") or ga.baseline or best
+        baseline = bundle.context.get("baseline") or ga_res.baseline or best
         verification = {
             "mode": "measured" if bundle.measured else "static-cost",
             "verified": bool(best.valid) and bundle.measured,
         }
         return OffloadResult(
-            frontend=name, graph=graph, coding=coding, block=bundle.block,
-            ga=ga, pattern=pattern,
+            frontend=ctx.frontend, graph=graph, coding=coding,
+            block=bundle.block, ga=ga_res, pattern=pattern,
             destinations=coding.destinations_of(best.bits),
             baseline=baseline, best=best, transfer_plan=tp,
             artifact=artifact, verification=verification,

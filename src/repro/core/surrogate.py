@@ -36,7 +36,6 @@ anti-static-prediction stance).
 """
 from __future__ import annotations
 
-import json
 import math
 import os
 from dataclasses import dataclass, field
@@ -350,10 +349,10 @@ def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
 
 
 def _save_fit(cache_dir: str, fit: FittedSurrogate) -> None:
-    from repro.core.evaluator import _file_lock
+    from repro.core.journal import Journal, newest_per_key
 
     os.makedirs(cache_dir, exist_ok=True)
-    path = os.path.join(cache_dir, SURROGATE_FIT_FILE)
+    journal = Journal(os.path.join(cache_dir, SURROGATE_FIT_FILE))
     rec = {
         "fingerprint": fit.fingerprint,
         "n_records": fit.n_records,
@@ -367,51 +366,27 @@ def _save_fit(cache_dir: str, fit: FittedSurrogate) -> None:
         "mean": [float(m) for m in fit.mean],
         "scale": [float(s) for s in fit.scale],
     }
-    with _file_lock(path + ".lock"):
-        with open(path, "a", encoding="utf-8") as f:
-            f.write(json.dumps(rec) + "\n")
-        try:
-            with open(path, "r", encoding="utf-8") as f:
-                lines = f.readlines()
-        except FileNotFoundError:       # pragma: no cover
+    with journal.lock():
+        journal.append([rec], locked=False)
+        if journal.line_count() <= _FIT_MAX_LINES:
             return
-        if len(lines) <= _FIT_MAX_LINES:
-            return
-        newest: dict[str, str] = {}
-        for line in lines:
-            try:
-                fp = json.loads(line).get("fingerprint")
-            except json.JSONDecodeError:
-                continue
-            if fp:
-                newest.pop(fp, None)
-                newest[fp] = line       # reinsert: keeps recency order
-        tmp = path + ".tmp"
-        with open(tmp, "w", encoding="utf-8") as f:
-            f.writelines(list(newest.values())[-_FIT_MAX_LINES:])
-        os.replace(tmp, path)
+        journal.rewrite(
+            newest_per_key(journal.records(),
+                           key=lambda r: r.get("fingerprint"),
+                           max_records=_FIT_MAX_LINES),
+            locked=False)
 
 
 def load_fit(cache_dir: str, fingerprint: str) -> Optional[dict]:
     """Most recent persisted fit record for a fingerprint (coefficients by
     feature name, journal size, both rank correlations) — the inspection
     entry point; returns None when nothing was ever fitted."""
+    from repro.core.journal import Journal
+
     out: Optional[dict] = None
-    try:
-        with open(os.path.join(cache_dir, SURROGATE_FIT_FILE), "r",
-                  encoding="utf-8") as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    rec = json.loads(line)
-                except json.JSONDecodeError:
-                    continue            # torn concurrent write
-                if rec.get("fingerprint") == fingerprint:
-                    out = rec
-    except FileNotFoundError:
-        pass
+    for rec in Journal(os.path.join(cache_dir, SURROGATE_FIT_FILE)).records():
+        if rec.get("fingerprint") == fingerprint:
+            out = rec
     if out is not None:
         out = dict(out)
         out["coefficients"] = dict(zip(out.get("feature_names", ()),

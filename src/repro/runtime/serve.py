@@ -3,6 +3,15 @@
 ``Server`` owns params + plan; ``generate`` pads a request batch to the
 static shapes, prefills, then decodes greedily or with temperature sampling.
 The decode loop donates the state so caches update in place.
+
+The plan is **hot-swappable**: everything derived from it (the jitted decode
+fn, the per-capacity prefill cache) lives in one immutable ``_Bound``
+snapshot published by a single reference assignment.  ``generate`` reads the
+snapshot once per call, so an in-flight generation always runs one complete
+plan end-to-end — a concurrent :meth:`Server.swap_plan` (the planning
+service's hot-swap) takes effect on the *next* call, never mid-sequence.
+``Server.from_store`` constructs a server straight from a persisted plan
+fingerprint, with no planner in the loop.
 """
 from __future__ import annotations
 
@@ -25,34 +34,79 @@ class ServeConfig:
     seed: int = 0
 
 
+class _Bound:
+    """One plan plus everything jitted against it.  Immutable after
+    construction (the prefill dict only memoizes pure jit wrappers per
+    capacity — idempotent, so racing fills are harmless)."""
+
+    __slots__ = ("plan", "decode", "_model", "_prefill")
+
+    def __init__(self, model: Model, plan: ExecPlan):
+        self.plan = plan
+        self._model = model
+        self.decode = jax.jit(
+            lambda p, tok, st: model.decode(p, tok, st, plan),
+            donate_argnums=(2,))
+        self._prefill: dict = {}
+
+    def prefill_fn(self, cache_capacity: int):
+        if cache_capacity not in self._prefill:
+            model, plan = self._model, self.plan
+            self._prefill[cache_capacity] = jax.jit(
+                functools.partial(
+                    lambda p, inp: model.prefill(
+                        p, inp, plan, cache_capacity=cache_capacity)))
+        return self._prefill[cache_capacity]
+
+
 class Server:
     def __init__(self, model: Model, params, plan: ExecPlan,
                  cfg: Optional[ServeConfig] = None):
         self.model = model
         self.params = params
-        self.plan = plan
         self.cfg = cfg or ServeConfig()
-        self._decode = jax.jit(
-            lambda p, tok, st: model.decode(p, tok, st, plan),
-            donate_argnums=(2,))
-        self._prefill = {}
+        self._bound = _Bound(model, plan)
 
-    def _prefill_fn(self, cache_capacity: int):
-        if cache_capacity not in self._prefill:
-            self._prefill[cache_capacity] = jax.jit(
-                functools.partial(
-                    lambda p, inp: self.model.prefill(
-                        p, inp, self.plan, cache_capacity=cache_capacity)))
-        return self._prefill[cache_capacity]
+    @classmethod
+    def from_store(cls, model: Model, params, store, fingerprint: str,
+                   cfg: Optional[ServeConfig] = None) -> "Server":
+        """Construct a server from a persisted plan: loads the newest
+        :class:`~repro.service.store.PlanRecord` for ``fingerprint`` from a
+        :class:`~repro.service.store.PlanStore` and rehydrates its
+        ``ExecPlan`` — no search, no planner in the loop."""
+        rec = store.load(fingerprint)
+        if rec is None:
+            raise LookupError(
+                f"no stored plan for fingerprint {fingerprint!r} — run the "
+                f"planning service (or Offloader.plan) first")
+        plan = store.rehydrate(rec)
+        if not isinstance(plan, ExecPlan):
+            raise TypeError(
+                f"stored plan for {fingerprint!r} rehydrates to "
+                f"{type(plan).__name__}, not an ExecPlan — Server only "
+                f"serves module-frontend plans")
+        return cls(model, params, plan, cfg)
+
+    @property
+    def plan(self) -> ExecPlan:
+        return self._bound.plan
+
+    def swap_plan(self, plan: ExecPlan) -> None:
+        """Hot-swap the execution plan.  Builds the new plan's jitted
+        closures first, then publishes them in one reference assignment:
+        concurrent ``generate`` calls finish on the plan they started with
+        and the next call picks this one up — never a torn mix."""
+        self._bound = _Bound(self.model, plan)
 
     def generate(self, inputs: dict, max_new: Optional[int] = None) -> np.ndarray:
         """inputs: dict with 'tokens' (B,S) (+ frames/patch_feats).  Returns
         generated tokens (B, max_new)."""
-        max_new = max_new or self.cfg.max_new_tokens
+        bound = self._bound          # one snapshot: the whole call runs one
+        max_new = max_new or self.cfg.max_new_tokens   # complete plan
         tokens = inputs["tokens"]
         b, s = tokens.shape
         cap = s + max_new + (self.model.cfg.vision_patches or 0)
-        logits, state = self._prefill_fn(cap)(self.params, inputs)
+        logits, state = bound.prefill_fn(cap)(self.params, inputs)
         key = jax.random.key(self.cfg.seed)
         out = np.zeros((b, max_new), np.int32)
         tok = self._sample(logits, key, 0)
@@ -60,7 +114,7 @@ class Server:
             out[:, i] = np.asarray(tok[:, 0])
             if i == max_new - 1:
                 break
-            logits, state = self._decode(self.params, tok, state)
+            logits, state = bound.decode(self.params, tok, state)
             tok = self._sample(logits, key, i + 1)
         return out
 

@@ -1,0 +1,11 @@
+"""Persistent offload-planning service (the daemon layer over the search
+stack): versioned plan store, request coalescing, background GA refinement
+with atomic hot-swap.  See ``docs/api.md`` ("The planning service")."""
+from repro.service.service import (PlanService, ServedPlan, ServiceConfig,
+                                   ServiceStats)
+from repro.service.store import (PlanMismatchError, PlanRecord, PlanStore,
+                                 record_from_result)
+
+__all__ = ["PlanService", "ServedPlan", "ServiceConfig", "ServiceStats",
+           "PlanMismatchError", "PlanRecord", "PlanStore",
+           "record_from_result"]

@@ -1,0 +1,362 @@
+"""PlanService: the persistent offload-planning daemon.
+
+The library call ``Offloader.plan`` is one-shot: search, return, forget.
+The paper's deployment story needs the opposite shape — many clients, one
+long-lived planner whose plans persist and keep improving while serving
+(ROADMAP: "Offload planning as a persistent service").  This module is that
+daemon, three layers on top of the search stack:
+
+**Admission + coalescing.**  ``submit(target)`` runs only the search-free
+half of the pipeline (``Offloader.prepare``) to learn the request's
+``search_fingerprint``, then routes: an already-deployed fingerprint is
+served instantly; a fingerprint with a search in flight *joins* that search
+(one future fans out to every waiter — the Evaluator's in-flight dedup
+lifted a layer, from chromosomes to whole programs); a cold fingerprint is
+admitted to the worker pool, where a plan-store hit becomes a warm artifact
+load (no GA) and only a genuinely unknown program pays for a search.
+Distinct fingerprints plan concurrently under the worker budget.
+
+**Persistence.**  Every search's winner is written to the
+:class:`~repro.service.store.PlanStore` under the service directory; the
+GA's measurement journals, surrogate fits and seed bank live in a cache
+directory beside it (the service forces ``GAConfig.cache_dir`` there), so a
+restarted service warm-loads yesterday's plans and a refinement search
+re-reads yesterday's measurements.
+
+**Background refinement + hot-swap.**  ``refine_once(fingerprint)`` resumes
+the GA on a deployed program — seeded with the deployed chromosome, keyed to
+the same measurement journal (persisted measurements replay for free, the
+journal-fitted surrogate screens) — and, only when the new winner measures
+*strictly* better than the deployed plan's recorded time, atomically
+hot-swaps it: the served plan is one immutable :class:`ServedPlan` published
+by a single reference assignment, so a concurrent reader sees the old plan
+or the new plan, never a torn mix, and the previous plan is retained for
+:meth:`PlanService.rollback`.  ``start_refinement`` runs that loop on a
+daemon thread across all deployed fingerprints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from repro.core.frontends.registry import OffloadConfig
+from repro.core.offload import Offloader, PlanContext
+from repro.service.store import PlanRecord, PlanStore, record_from_result
+
+__all__ = ["PlanService", "ServedPlan", "ServiceConfig", "ServiceStats"]
+
+
+@dataclass
+class ServiceConfig:
+    """Service-level knobs (per-request planning knobs stay in
+    :class:`OffloadConfig`)."""
+
+    workers: int = 2                  # concurrent searches, distinct
+                                      # fingerprints only — same-fingerprint
+                                      # requests always coalesce
+    history_depth: int = 8            # store versions kept per fingerprint
+    refine_interval_s: float = 30.0   # background loop sleep between sweeps
+    refine_generations: Optional[int] = None   # GA generations per
+                                      # refinement round (None = request's)
+    refine_population: Optional[int] = None    # population override, ditto
+
+
+@dataclass
+class ServiceStats:
+    """Request accounting: how much planning work the service avoided."""
+
+    requests: int = 0        # submit() calls
+    live_hits: int = 0       # served from the in-memory deployed table
+    coalesced: int = 0       # joined another request's in-flight admission
+    warm_loads: int = 0      # plan-store hit: artifact load, no GA search
+    searches: int = 0        # full GA searches actually run
+    refinements: int = 0     # refinement rounds completed
+    swaps: int = 0           # refinements that hot-swapped a better plan
+    rollbacks: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class ServedPlan:
+    """One immutable deployed plan.  Hot-swap publishes a *new* instance by
+    a single reference assignment — readers that grabbed this one keep a
+    consistent (record, artifact) pair forever, which is the no-torn-plan
+    guarantee."""
+
+    fingerprint: str
+    record: PlanRecord               # the persisted version backing this
+    artifact: Any                    # frontend deliverable, ready to run
+    warm: bool                       # True = loaded from store, no search
+
+    @property
+    def version(self) -> int:
+        return self.record.version
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        a = self.artifact
+        if callable(a):
+            return a(*args, **kwargs)
+        if hasattr(a, "run"):
+            return a.run(*args, **kwargs)
+        raise TypeError(
+            f"artifact {type(a).__name__} is not directly runnable; read "
+            f".artifact (e.g. hand an ExecPlan to runtime.serve.Server)")
+
+
+@dataclass
+class _Entry:
+    """Mutable service-side state for one deployed fingerprint.  Only
+    ``current`` is read on the hot path (single reference, atomically
+    swapped); everything else is refinement bookkeeping."""
+
+    current: ServedPlan
+    ctx: PlanContext
+    offloader: Offloader
+    previous: Optional[ServedPlan] = None    # rollback target
+    rounds: int = 0                          # refinement rounds run
+
+
+class PlanService:
+    """The planning daemon.  See module docstring for the three layers."""
+
+    def __init__(self, store_dir: str,
+                 config: Optional[OffloadConfig] = None,
+                 service: Optional[ServiceConfig] = None):
+        self.service_config = service or ServiceConfig()
+        self.store = PlanStore(store_dir,
+                               history_depth=self.service_config.history_depth)
+        self.cache_dir = os.path.join(store_dir, "cache")
+        self.config = self._with_cache(config or OffloadConfig())
+        self.stats = ServiceStats()
+        self._lock = threading.Lock()
+        self._inflight: dict[str, Future] = {}
+        self._entries: dict[str, _Entry] = {}
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(1, int(self.service_config.workers)),
+            thread_name_prefix="plan-service")
+        self._refine_stop = threading.Event()
+        self._refine_thread: Optional[threading.Thread] = None
+
+    def _with_cache(self, cfg: OffloadConfig) -> OffloadConfig:
+        """Pin the GA's journals under the service directory so measurement
+        history, surrogate fits, the seed bank and the plan store share one
+        persistent home (a request's explicit cache_dir wins)."""
+        if cfg.ga.cache_dir:
+            return cfg
+        return dataclasses.replace(
+            cfg, ga=dataclasses.replace(cfg.ga, cache_dir=self.cache_dir))
+
+    # -- admission + coalescing ----------------------------------------------
+
+    def submit(self, target: Any, inputs: Optional[dict] = None,
+               config: Optional[OffloadConfig] = None) -> "Future[ServedPlan]":
+        """Admit a planning request; returns a future resolving to the
+        deployed plan.  Prepare (no search) runs inline to fingerprint the
+        request; the expensive path runs on the worker pool at most once per
+        fingerprint regardless of how many clients ask."""
+        cfg = self._with_cache(config) if config is not None else self.config
+        off = Offloader(cfg)
+        ctx = off.prepare(target, inputs)
+        with self._lock:
+            self.stats.requests += 1
+            entry = self._entries.get(ctx.fingerprint)
+            if entry is not None:
+                self.stats.live_hits += 1
+                fut: Future = Future()
+                fut.set_result(entry.current)
+                return fut
+            pending = self._inflight.get(ctx.fingerprint)
+            if pending is not None:
+                self.stats.coalesced += 1
+                return pending
+            fut = Future()
+            self._inflight[ctx.fingerprint] = fut
+        self._pool.submit(self._admit, off, ctx, fut)
+        return fut
+
+    def plan(self, target: Any, inputs: Optional[dict] = None,
+             config: Optional[OffloadConfig] = None) -> ServedPlan:
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(target, inputs, config).result()
+
+    def _admit(self, off: Offloader, ctx: PlanContext, fut: Future) -> None:
+        try:
+            plan = self._load_or_search(off, ctx)
+        except BaseException as e:  # noqa: BLE001 — fan the failure out to
+            with self._lock:        # every coalesced waiter, then forget the
+                self._inflight.pop(ctx.fingerprint, None)   # fingerprint so
+            fut.set_exception(e)    # a later request can retry
+            return
+        with self._lock:
+            self._entries[ctx.fingerprint] = _Entry(
+                current=plan, ctx=ctx, offloader=off)
+            self._inflight.pop(ctx.fingerprint, None)
+        fut.set_result(plan)
+
+    def _load_or_search(self, off: Offloader, ctx: PlanContext) -> ServedPlan:
+        rec = self.store.load(ctx.fingerprint)
+        if rec is not None and rec.sites == ctx.sites \
+                and rec.destinations == ctx.coding.destinations:
+            # warm path: stored plan fits this program — pure artifact load
+            if "exec_plan" in rec.payload:
+                artifact = self.store.rehydrate(rec)
+            else:
+                artifact = off.apply(ctx, rec.bits)
+            with self._lock:
+                self.stats.warm_loads += 1
+            return ServedPlan(ctx.fingerprint, rec, artifact, warm=True)
+        res = off.search(ctx)
+        with self._lock:
+            self.stats.searches += 1
+        stored = self.store.put(record_from_result(
+            res, ctx.fingerprint,
+            meta={"origin": "cold-search", "evaluations": res.ga.evaluations}))
+        return ServedPlan(ctx.fingerprint, stored, res.artifact, warm=False)
+
+    # -- serving -------------------------------------------------------------
+
+    def current(self, fingerprint: str) -> ServedPlan:
+        """The deployed plan (an immutable snapshot — safe to use across a
+        concurrent hot-swap)."""
+        with self._lock:
+            entry = self._entries.get(fingerprint)
+        if entry is None:
+            raise LookupError(f"fingerprint {fingerprint!r} is not deployed "
+                              f"in this service (submit a target first)")
+        return entry.current
+
+    def endpoint(self, fingerprint: str) -> Callable[..., Any]:
+        """A callable bound to the fingerprint, not the plan: every call
+        snapshots ``current`` once, so calls always run a complete plan and
+        pick up a hot-swap on their next invocation."""
+        self.current(fingerprint)          # fail fast on unknown fingerprint
+
+        def call(*args: Any, **kwargs: Any) -> Any:
+            return self.current(fingerprint)(*args, **kwargs)
+
+        return call
+
+    def fingerprints(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(self._entries)
+
+    # -- background refinement + hot-swap ------------------------------------
+
+    def refine_once(self, fingerprint: str) -> bool:
+        """Resume the GA on a deployed fingerprint and hot-swap the result
+        iff it measured strictly better than the deployed plan.
+
+        The search is seeded with the deployed chromosome and keyed to the
+        same measurement journal (``cache_dir`` is pinned), so persisted
+        measurements replay for free and the journal-fitted surrogate can
+        screen.  Returns True when a swap happened.
+        """
+        with self._lock:
+            entry = self._entries.get(fingerprint)
+        if entry is None:
+            raise LookupError(f"fingerprint {fingerprint!r} is not deployed")
+        svc = self.service_config
+        entry.rounds += 1
+        ga = entry.ctx.config.ga
+        overrides: dict = {
+            # a fresh seed per round: refinement explores, it doesn't replay
+            "seed": ga.seed + entry.rounds,
+        }
+        if svc.refine_generations is not None:
+            overrides["generations"] = int(svc.refine_generations)
+        if svc.refine_population is not None:
+            overrides["population"] = int(svc.refine_population)
+        res = entry.offloader.search(
+            entry.ctx, ga=dataclasses.replace(ga, **overrides),
+            extra_seeds=[entry.current.record.bits])
+        with self._lock:
+            self.stats.refinements += 1
+        deployed = entry.current.record
+        better = (res.best.valid
+                  and res.best.time_s < deployed.best_time_s
+                  and tuple(int(v) for v in res.best.bits) != deployed.bits)
+        if not better:
+            return False
+        stored = self.store.put(record_from_result(
+            res, fingerprint,
+            meta={"origin": "refinement", "round": entry.rounds,
+                  "replaced_version": deployed.version,
+                  "evaluations": res.ga.evaluations}))
+        new_plan = ServedPlan(fingerprint, stored, res.artifact, warm=False)
+        with self._lock:
+            entry.previous = entry.current
+            entry.current = new_plan       # the atomic hot-swap: one
+            self.stats.swaps += 1          # reference assignment publishes
+        return True                        # a complete immutable plan
+
+    def rollback(self, fingerprint: str) -> ServedPlan:
+        """Re-deploy the plan the last hot-swap replaced (and append it to
+        the store as the new head version, so restarts agree)."""
+        with self._lock:
+            entry = self._entries.get(fingerprint)
+            prev = entry.previous if entry is not None else None
+        if entry is None:
+            raise LookupError(f"fingerprint {fingerprint!r} is not deployed")
+        if prev is None:
+            raise LookupError(f"no previous plan retained for "
+                              f"{fingerprint!r} — nothing to roll back to")
+        stored = self.store.put(dataclasses.replace(
+            prev.record,
+            meta={**prev.record.meta,
+                  "rolled_back_from": entry.current.version}))
+        restored = ServedPlan(fingerprint, stored, prev.artifact,
+                              warm=prev.warm)
+        with self._lock:
+            entry.previous = entry.current
+            entry.current = restored
+            self.stats.rollbacks += 1
+        return restored
+
+    def start_refinement(self, interval_s: Optional[float] = None) -> None:
+        """Run :meth:`refine_once` over all deployed fingerprints on a
+        daemon thread, sleeping ``interval_s`` between sweeps."""
+        sleep_s = self.service_config.refine_interval_s \
+            if interval_s is None else float(interval_s)
+        if self._refine_thread is not None and self._refine_thread.is_alive():
+            return
+        self._refine_stop.clear()
+
+        def loop() -> None:
+            while not self._refine_stop.is_set():
+                for fp in self.fingerprints():
+                    if self._refine_stop.is_set():
+                        return
+                    try:
+                        self.refine_once(fp)
+                    except Exception:  # noqa: BLE001 — one fingerprint's
+                        continue       # bad round must not kill the loop
+                self._refine_stop.wait(sleep_s)
+
+        self._refine_thread = threading.Thread(
+            target=loop, name="plan-refine", daemon=True)
+        self._refine_thread.start()
+
+    def stop_refinement(self, timeout_s: float = 10.0) -> None:
+        self._refine_stop.set()
+        t = self._refine_thread
+        if t is not None:
+            t.join(timeout=timeout_s)
+        self._refine_thread = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        self.stop_refinement()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "PlanService":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()

@@ -490,3 +490,52 @@ def test_overlap_disables_itself_under_contention():
     eng.evaluate_batch(pop[8:12])
     assert eng.stats.overlapped_compiles == overlapped_before, \
         "post-backoff batches must warm up serially"
+
+
+# ---------------------------------------------------------------------------
+# measurement-journal bounding
+# ---------------------------------------------------------------------------
+
+
+def test_measurement_journal_stays_bounded_and_keeps_newest(tmp_path):
+    from repro.core.evaluator import MeasurementCache
+
+    def bits(i, length=5):
+        return tuple((i >> j) & 1 for j in range(length))
+
+    cache = MeasurementCache(str(tmp_path), "fp", max_records=4)
+    for i in range(12):
+        cache.store(Evaluation(bits(i), 1.0 + i, True))
+        with open(cache.path) as f:
+            lines = sum(1 for line in f if line.strip())
+        assert lines <= 2 * cache.max_records, \
+            "journal must compact before outgrowing twice the bound"
+
+    loaded = cache.load()
+    # compaction trims to max_records, then appends grow the file again up
+    # to the 2x trigger — the steady-state bound, never the raw 12 stores
+    assert cache.max_records <= len(loaded) <= 2 * cache.max_records
+    # the newest max_records patterns always survive
+    for i in range(12 - cache.max_records, 12):
+        assert bits(i) in loaded and loaded[bits(i)].time_s == 1.0 + i
+
+    # last write wins: re-measuring a surviving pattern replaces it in place
+    cache.store(Evaluation(bits(11), 0.25, True))
+    assert cache.load()[bits(11)].time_s == 0.25
+
+
+def test_measurement_journal_compaction_preserves_reload_fidelity(tmp_path):
+    from repro.core.evaluator import MeasurementCache
+
+    cache = MeasurementCache(str(tmp_path), "fp", max_records=2)
+    cache.store(Evaluation((0, 0), float("inf"), False, {"err": "oom"}))
+    cache.store(Evaluation((0, 1), 2.0, True, {"n": 3}))
+    for i in range(6):  # push past the 2x threshold repeatedly
+        cache.store(Evaluation((1, i % 2), 3.0 + i, True))
+    loaded = cache.load()
+    assert set(loaded) <= {(0, 0), (0, 1), (1, 0), (1, 1)}
+    assert loaded[(1, 1)].time_s == 8.0 and loaded[(1, 0)].time_s == 7.0
+
+    # a second cache on the same dir/fingerprint sees the identical state
+    again = MeasurementCache(str(tmp_path), "fp", max_records=2).load()
+    assert again == loaded

@@ -346,10 +346,20 @@ def test_surrogate_ranks_stub_behind_reference():
 
 def test_surrogate_rank_corr_reported_by_search():
     g = _ir_graph()
-    res = loop_offload_pass(g, _det_fitness,
-                            GAConfig(population=8, generations=4, seed=1))
-    corr = res.ga.surrogate_rank_corr
+    _, ga = ga_search(g, _det_fitness,
+                      GAConfig(population=8, generations=4, seed=1))
+    corr = ga.surrogate_rank_corr
     assert math.isfinite(corr) and -1.0 <= corr <= 1.0
+
+
+def test_loop_offload_pass_shim_warns_and_matches_ga_search():
+    g = _ir_graph()
+    with pytest.warns(DeprecationWarning, match="ga_search"):
+        res = loop_offload_pass(g, _det_fitness,
+                                GAConfig(population=8, generations=4, seed=1))
+    _, ga = ga_search(g, _det_fitness,
+                      GAConfig(population=8, generations=4, seed=1))
+    assert res.ga.best.bits == ga.best.bits
 
 
 def test_seed_bank_neighbor_warm_start(tmp_path):

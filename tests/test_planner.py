@@ -37,9 +37,10 @@ def test_python_offload_end_to_end(rng):
     p = PyProgram(SRC, consts=consts)
     inputs = dict(a=rng.random((16, 16)), b=rng.random((16, 16)),
                   x=rng.random(16))
-    res = plan_python_offload(
-        p, inputs, ga_cfg=GAConfig(population=6, generations=3, seed=0),
-        repeats=1)
+    with pytest.warns(DeprecationWarning):   # legacy shim coverage
+        res = plan_python_offload(
+            p, inputs, ga_cfg=GAConfig(population=6, generations=3, seed=0),
+            repeats=1)
     # block pass found and kept the matmul replacement
     assert any(b.pattern == "matmul" for b in res.block.offloads)
     # final plan beats the all-interpreted baseline

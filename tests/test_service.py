@@ -1,0 +1,479 @@
+"""Persistent planning-service tests: PlanStore versioning + round-trip,
+PlanService admission (same-fingerprint coalescing, distinct-fingerprint
+concurrency), background refinement with atomic hot-swap / rollback, and the
+serving integration (``Server.from_store``, ``swap_plan`` under load).
+
+The acceptance lifecycle: a cold request pays for a search and persists the
+winner; a second request is a warm artifact load with no GA; refinement
+finds a strictly better-measured plan and hot-swaps it while clients keep
+calling, with outputs staying correct across the swap.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Evaluation, GAConfig, OffloadConfig, Offloader
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.models import REFERENCE_PLAN, build_model
+from repro.models.plan import ExecPlan
+from repro.runtime.serve import ServeConfig, Server
+from repro.service import (PlanMismatchError, PlanService, PlanStore,
+                           ServiceConfig, record_from_result)
+
+from test_offload_api import (FRONTEND_CASES, _det_fitness, _ir_graph,
+                              ALL_FRONTENDS)
+
+
+def _ir_config(**over):
+    ga = over.pop("ga", GAConfig(population=6, generations=2, seed=0))
+    over.setdefault("fitness_fn", _det_fitness)
+    return OffloadConfig(frontend="ir", ga=ga, **over)
+
+
+# ---------------------------------------------------------------------------
+# PlanStore: versioning, history, rollback, compaction, mismatch refusal
+# ---------------------------------------------------------------------------
+
+
+def _store_record(tmp_path, bits=(0, 0, 0), **over):
+    off = Offloader(_ir_config())
+    ctx = off.prepare(_ir_graph())
+    res = off.search(ctx)
+    rec = record_from_result(res, ctx.fingerprint)
+    import dataclasses
+    return ctx, dataclasses.replace(rec, bits=tuple(bits), **over)
+
+
+def test_store_versions_grow_and_history_is_append_only(tmp_path):
+    store = PlanStore(str(tmp_path))
+    ctx, rec = _store_record(tmp_path)
+    v1 = store.put(rec)
+    v2 = store.put(rec)
+    assert (v1.version, v2.version) == (1, 2)
+    assert store.load(ctx.fingerprint).version == 2
+    assert [r.version for r in store.history(ctx.fingerprint)] == [1, 2]
+    assert store.fingerprints() == (ctx.fingerprint,)
+    # rollback appends the previous version's content as a NEW head
+    rb = store.rollback(ctx.fingerprint)
+    assert rb.version == 3
+    assert rb.meta["rolled_back_from"] == 2
+    assert store.load(ctx.fingerprint).version == 3
+
+
+def test_store_compaction_keeps_newest_history_depth(tmp_path):
+    store = PlanStore(str(tmp_path), history_depth=3, max_records=4)
+    ctx, rec = _store_record(tmp_path)
+    for _ in range(10):
+        store.put(rec)
+    hist = store.history(ctx.fingerprint)
+    assert len(hist) <= 4
+    assert hist[-1].version == 10          # newest survives compaction
+    assert store.load(ctx.fingerprint).version == 10
+
+
+def test_store_check_refuses_mismatched_plan_or_coding(tmp_path):
+    store = PlanStore(str(tmp_path))
+    ctx, rec = _store_record(tmp_path)
+    store.check(rec, ctx)                  # matching plan passes
+    import dataclasses
+    with pytest.raises(PlanMismatchError):
+        store.check(dataclasses.replace(rec, fingerprint="deadbeef"), ctx)
+    with pytest.raises(PlanMismatchError):
+        store.check(dataclasses.replace(rec, sites=("other",)), ctx)
+    # rehydrate without a payload needs the original target
+    with pytest.raises(ValueError):
+        store.rehydrate(rec)
+
+
+# ---------------------------------------------------------------------------
+# cold search -> persisted plan -> warm load (no GA) across a restart
+# ---------------------------------------------------------------------------
+
+
+def test_cold_search_persists_then_restart_warm_loads(tmp_path):
+    cfg = _ir_config()
+    with PlanService(str(tmp_path), config=cfg) as svc:
+        plan = svc.plan(_ir_graph())
+        assert not plan.warm and plan.version == 1
+        assert svc.stats.searches == 1 and svc.stats.warm_loads == 0
+        assert plan.record.meta["origin"] == "cold-search"
+        assert plan.record.meta["evaluations"] > 0
+        fp = plan.fingerprint
+
+    # a fresh service on the same directory: pure artifact load, no search
+    with PlanService(str(tmp_path), config=cfg) as svc2:
+        plan2 = svc2.plan(_ir_graph())
+        assert plan2.warm and plan2.fingerprint == fp
+        assert plan2.record.bits == plan.record.bits
+        assert plan2.record.pattern == plan.record.pattern
+        assert svc2.stats.searches == 0 and svc2.stats.warm_loads == 1
+        # second request in the same process: served from the live table
+        plan3 = svc2.plan(_ir_graph())
+        assert plan3 is plan2
+        assert svc2.stats.live_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# coalescing: N concurrent requests for one fingerprint -> exactly one search
+# ---------------------------------------------------------------------------
+
+
+def test_same_fingerprint_requests_coalesce_to_one_search(tmp_path):
+    started, release = threading.Event(), threading.Event()
+    calls: list = []
+    calls_lock = threading.Lock()
+
+    def blocking_fitness(values) -> Evaluation:
+        with calls_lock:
+            calls.append(tuple(values))
+        started.set()
+        assert release.wait(timeout=60)
+        return _det_fitness(values)
+
+    cfg = _ir_config(fitness_fn=blocking_fitness)
+    with PlanService(str(tmp_path / "svc"), config=cfg) as svc:
+        futs = [svc.submit(_ir_graph())]
+        assert started.wait(timeout=60)    # first request is mid-search
+        futs += [svc.submit(_ir_graph()) for _ in range(3)]
+        release.set()
+        plans = [f.result(timeout=120) for f in futs]
+
+    assert svc.stats.requests == 4
+    assert svc.stats.searches == 1         # the only admission that searched
+    assert svc.stats.coalesced == 3        # everyone else joined it
+    assert svc.stats.warm_loads == 0 and svc.stats.live_hits == 0
+    assert all(p is plans[0] for p in plans)   # one future fanned out
+    assert plans[0].version == 1
+
+    # evidence the GA ran once: the service run measured exactly the same
+    # chromosome set as one solo search with the same budget and seed
+    solo_calls: list = []
+
+    def counting_fitness(values) -> Evaluation:
+        solo_calls.append(tuple(values))
+        return _det_fitness(values)
+
+    solo = Offloader(_ir_config(
+        fitness_fn=counting_fitness,
+        ga=GAConfig(population=6, generations=2, seed=0,
+                    cache_dir=str(tmp_path / "solo"))))
+    solo.plan(_ir_graph())
+    assert sorted(set(calls)) == sorted(set(solo_calls))
+    assert len(calls) == len(solo_calls)
+    assert plans[0].record.meta["evaluations"] == len(solo_calls)
+
+
+def test_distinct_fingerprints_plan_concurrently(tmp_path):
+    # both searches must reach their first measurement at the same time; a
+    # serial service would leave one side waiting at the barrier forever
+    barrier = threading.Barrier(2)
+    flags = {"a": False, "b": False}
+
+    def fitness_for(tag):
+        def fitness(values) -> Evaluation:
+            if not flags[tag]:
+                flags[tag] = True
+                barrier.wait(timeout=60)   # raises BrokenBarrierError if the
+            return _det_fitness(values)    # other search never starts
+        return fitness
+
+    from repro.core import RegionGraph
+
+    def graph(tag):
+        g = _ir_graph()
+        return RegionGraph(list(g.regions), "ir", f"toy_{tag}")
+
+    with PlanService(str(tmp_path), config=_ir_config(),
+                     service=ServiceConfig(workers=2)) as svc:
+        fa = svc.submit(graph("a"),
+                        config=_ir_config(fitness_fn=fitness_for("a")))
+        fb = svc.submit(graph("b"),
+                        config=_ir_config(fitness_fn=fitness_for("b")))
+        pa, pb = fa.result(timeout=120), fb.result(timeout=120)
+
+    assert pa.fingerprint != pb.fingerprint
+    assert svc.stats.searches == 2 and svc.stats.coalesced == 0
+    assert len(svc.fingerprints()) == 2
+
+
+# ---------------------------------------------------------------------------
+# store round-trip for every frontend's artifact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FRONTENDS)
+def test_store_roundtrips_each_frontend_artifact(tmp_path, name):
+    target, inputs, kwargs = FRONTEND_CASES[name]()
+    cfg = OffloadConfig(ga=GAConfig(population=4, generations=1, seed=0),
+                        **kwargs)
+    with PlanService(str(tmp_path), config=cfg) as svc:
+        cold = svc.plan(target, inputs)
+        assert not cold.warm
+    assert svc.stats.searches == 1
+
+    target2, inputs2, _ = FRONTEND_CASES[name]()
+    with PlanService(str(tmp_path), config=cfg) as svc2:
+        warm = svc2.plan(target2, inputs2)
+    assert warm.warm, "restart must load the stored plan, not search"
+    assert svc2.stats.searches == 0 and svc2.stats.warm_loads == 1
+    assert warm.record.bits == cold.record.bits
+    assert warm.record.frontend == name
+    assert warm.record.pattern == cold.record.pattern
+
+    if name == "module":
+        # self-contained payload: the ExecPlan round-trips through JSON
+        assert isinstance(warm.artifact, ExecPlan)
+        assert warm.artifact == cold.artifact
+        assert "exec_plan" in warm.record.payload
+    else:
+        assert type(warm.artifact) is type(cold.artifact)
+    if name == "jaxpr":                    # live artifact, re-applied: runs
+        x = jnp.linspace(0.0, 1.0, 8)
+        np.testing.assert_allclose(np.asarray(warm(x)),
+                                   np.asarray(cold(x)), rtol=1e-5)
+    if name == "python_ast":
+        out_w, out_c = warm.artifact.run(**inputs2), cold.artifact.run(**inputs)
+        assert set(out_w) == set(out_c)
+        for k in out_w:
+            np.testing.assert_allclose(np.asarray(out_w[k], dtype=float),
+                                       np.asarray(out_c[k], dtype=float),
+                                       rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# background refinement: strictly-better swap, atomicity, rollback
+# ---------------------------------------------------------------------------
+
+_TARGET_BITS = (1, 0, 1)
+
+
+def _valley_fitness(values) -> Evaluation:
+    # minimized at a non-trivial pattern the GA's seeded all-off / all-on
+    # population cannot contain, so a tiny cold search deterministically
+    # misses it and refinement has a strictly better plan to find
+    t = 0.5 + 0.2 * sum(int(a != b) for a, b in zip(values, _TARGET_BITS))
+    return Evaluation(tuple(values), t, True)
+
+
+def test_refinement_hot_swaps_strictly_better_plan_then_rolls_back(tmp_path):
+    cfg = _ir_config(fitness_fn=_valley_fitness,
+                     ga=GAConfig(population=2, generations=1, seed=0))
+    svc = PlanService(str(tmp_path), config=cfg,
+                      service=ServiceConfig(refine_generations=6,
+                                            refine_population=8))
+    with svc:
+        plan = svc.plan(_ir_graph())
+        fp = plan.fingerprint
+        # cold budget only covers the seeded corners: best is all-on
+        assert plan.record.bits == (1, 1, 1)
+        assert plan.record.best_time_s == pytest.approx(0.7)
+
+        versions: list = []
+        errors: list = []
+        stop = threading.Event()
+
+        def client():
+            try:
+                while not stop.is_set():
+                    snap = svc.current(fp)   # immutable snapshot: record and
+                    versions.append(snap.version)   # artifact always agree
+                    assert snap.record.fingerprint == fp
+                    assert snap.record.best_time_s == pytest.approx(
+                        _valley_fitness(snap.record.bits).time_s)
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        t = threading.Thread(target=client)
+        t.start()
+        try:
+            swapped = svc.refine_once(fp)
+        finally:
+            stop.set()
+            t.join(timeout=30)
+        assert not errors
+        assert swapped, "refinement must find the strictly better plan"
+        assert versions == sorted(versions), "clients never see a stale " \
+            "plan after the swap published the new one"
+
+        cur = svc.current(fp)
+        assert cur.record.bits == _TARGET_BITS
+        assert cur.record.best_time_s == pytest.approx(0.5)
+        assert cur.version == 2
+        assert cur.record.meta["origin"] == "refinement"
+        assert cur.record.meta["replaced_version"] == 1
+        assert svc.stats.refinements == 1 and svc.stats.swaps == 1
+
+        # a further round has nothing strictly better: no swap, no new version
+        assert svc.refine_once(fp) is False
+        assert svc.current(fp).version == 2
+
+        # rollback re-deploys the replaced plan as a new head version
+        restored = svc.rollback(fp)
+        assert restored.record.bits == (1, 1, 1)
+        assert restored.version == 3
+        assert svc.store.load(fp).version == 3
+        assert svc.stats.rollbacks == 1
+
+
+def test_refinement_loop_thread_runs_and_stops(tmp_path):
+    cfg = _ir_config(fitness_fn=_valley_fitness,
+                     ga=GAConfig(population=2, generations=1, seed=0))
+    svc = PlanService(str(tmp_path), config=cfg,
+                      service=ServiceConfig(refine_generations=6,
+                                            refine_population=8))
+    with svc:
+        plan = svc.plan(_ir_graph())
+        svc.start_refinement(interval_s=0.05)
+        deadline = time.monotonic() + 60
+        while svc.stats.swaps == 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        svc.stop_refinement()
+        assert svc.stats.swaps >= 1
+        assert svc.current(plan.fingerprint).record.bits == _TARGET_BITS
+
+
+# ---------------------------------------------------------------------------
+# the acceptance lifecycle on a live artifact: clients keep calling through
+# the hot-swap, outputs stay correct (allclose vs reference) throughout
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_under_load_keeps_outputs_correct(tmp_path):
+    from test_offload_api import PY_CONSTS, PY_SRC, _py_inputs
+
+    target_bits = (1, 0)     # jit the first loop only: not a seeded corner
+
+    def valley(values) -> Evaluation:
+        t = 0.5 + 0.2 * sum(int(a != b) for a, b in zip(values, target_bits))
+        return Evaluation(tuple(values), t, True)
+
+    cfg = OffloadConfig(frontend="python_ast", fitness_fn=valley, repeats=1,
+                        ga=GAConfig(population=2, generations=1, seed=0),
+                        options={"consts": PY_CONSTS})
+    svc = PlanService(str(tmp_path), config=cfg,
+                      service=ServiceConfig(refine_generations=6,
+                                            refine_population=8))
+    with svc:
+        inputs = _py_inputs()
+        plan = svc.plan(PY_SRC, inputs)
+        fp = plan.fingerprint
+        # cold budget only measured the seeded corners — both miss the valley
+        assert plan.record.bits in ((0, 0), (1, 1))
+        assert plan.record.best_time_s == pytest.approx(0.7)
+
+        # the reference: the all-interpreted program's outputs — every plan
+        # must compute the same values, swapped or not
+        off = Offloader(cfg)
+        reference = off.apply(off.prepare(PY_SRC, inputs),
+                              (0, 0)).run(**inputs)
+        call = svc.endpoint(fp)
+
+        def check(out):
+            assert set(out) == set(reference)
+            for k in reference:
+                np.testing.assert_allclose(
+                    np.asarray(out[k], dtype=float),
+                    np.asarray(reference[k], dtype=float), rtol=1e-6)
+
+        check(call(**inputs))
+
+        errors: list = []
+        stop = threading.Event()
+
+        def client():
+            try:
+                while not stop.is_set():
+                    check(call(**inputs))   # snapshots current() per call
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        t = threading.Thread(target=client)
+        t.start()
+        try:
+            swapped = svc.refine_once(fp)
+            # the swapped-in plan serves the very next snapshot
+            check(call(**inputs))
+        finally:
+            stop.set()
+            t.join(timeout=30)
+        assert not errors, f"client failed across the swap: {errors[:1]}"
+        assert swapped, "refinement must find the strictly better plan"
+        cur = svc.current(fp)
+        assert cur.record.bits == target_bits and cur.version == 2
+        assert cur.record.best_time_s == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: Server.from_store + swap_plan during generate
+# ---------------------------------------------------------------------------
+
+
+def test_server_from_store_and_swap_plan_under_generate(tmp_path):
+    arch = get_config("qwen3_0_6b")
+    with PlanService(str(tmp_path),
+                     config=OffloadConfig(
+                         ga=GAConfig(population=4, generations=1,
+                                     seed=0))) as svc:
+        plan = svc.plan(arch)
+        fp = plan.fingerprint
+    assert isinstance(plan.artifact, ExecPlan)
+    assert "exec_plan" in plan.record.payload
+
+    cfg = arch.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    data = SyntheticLMDataset(DataConfig(seq_len=32, global_batch=4,
+                                         vocab=cfg.vocab, seed=0))
+    toks = jnp.asarray(data.batch(0)["tokens"][:2, :16])
+
+    # construct straight from the persisted artifact: no planner in the loop
+    store = PlanStore(str(tmp_path))
+    server = Server.from_store(model, params, store, fp,
+                               ServeConfig(max_new_tokens=6))
+    assert server.plan == plan.artifact
+    out_stored = server.generate({"tokens": toks})
+    assert out_stored.shape == (2, 6)
+
+    with pytest.raises(LookupError):
+        Server.from_store(model, params, store, "no-such-fp")
+
+    # expected outputs for each plan (greedy decode is deterministic)
+    server.swap_plan(REFERENCE_PLAN)
+    assert server.plan == REFERENCE_PLAN
+    out_ref = server.generate({"tokens": toks})
+    expected = [out_stored, out_ref]
+
+    errors: list = []
+    stop = threading.Event()
+
+    def client():
+        try:
+            while not stop.is_set():
+                bound_plan = server.plan          # which plan is current now
+                out = server.generate({"tokens": toks})
+                # every generation ran ONE complete plan end-to-end: its
+                # output matches one of the two plans' expected tokens
+                ok = any(np.array_equal(out, exp) for exp in expected)
+                assert ok, f"torn generation under swap (plan={bound_plan})"
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    t = threading.Thread(target=client)
+    t.start()
+    try:
+        for i in range(4):                       # hammer the swap path
+            server.swap_plan(plan.artifact if i % 2 == 0 else REFERENCE_PLAN)
+            time.sleep(0.05)
+        server.swap_plan(plan.artifact)
+    finally:
+        stop.set()
+        t.join(timeout=120)
+    assert not errors, f"generate failed across swaps: {errors[:1]}"
+    # post-swap calls serve the new plan
+    np.testing.assert_array_equal(server.generate({"tokens": toks}),
+                                  out_stored)
