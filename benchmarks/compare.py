@@ -1,8 +1,8 @@
-"""Perf-trajectory gate: compare a fresh ``BENCH_PR7.json`` against the
+"""Perf-trajectory gate: compare a fresh ``BENCH_PR8.json`` against the
 committed baseline and fail on regression.
 
-  PYTHONPATH=src python -m benchmarks.compare BENCH_PR7.json \
-      benchmarks/baseline/BENCH_PR7.json --max-regression 0.25
+  PYTHONPATH=src python -m benchmarks.compare BENCH_PR8.json \
+      benchmarks/baseline/BENCH_PR8.json --max-regression 0.25
 
 Only *machine-relative* metrics are gated (same-run ratios in percent,
 bounded scores like rank correlations, measurement counts) — absolute
@@ -60,6 +60,14 @@ GATES: dict[str, tuple[str, str, float]] = {
     # searches cannot drop
     "service.warm_load_speedup":              ("rel", "higher", 0.75),
     "service.coalescing.avoided_searches":    ("abs", "higher", 0.5),
+    # observability: the disabled-path instrumentation bound (span count x
+    # measured null-span cost over the plan wall) must stay under 5% — the
+    # tracing layer may not tax callers who never asked for a trace.  The
+    # phase spans must keep accounting for the plan wall (prepare + search
+    # are offload.plan's only direct children, so this sits at ~100; a 10-
+    # point margin flags structural attribution loss, not timing noise)
+    "obs.trace_overhead_pct":                 ("abs", "lower", 5.0),
+    "obs.plan_span_coverage_pct":             ("abs", "higher", 10.0),
 }
 
 

@@ -6,8 +6,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs benches
 that support it in smoke mode (no full GA searches) — the CI regression
 gate.  ``--json`` additionally writes the rows as a machine-readable
-report (the perf-trajectory artifact ``BENCH_PR7.json``; see
-``benchmarks.compare`` for the gate that consumes it).
+report (the perf-trajectory artifact ``BENCH_PR8.json``; see
+``benchmarks.compare`` for the gate that consumes it).  ``--metrics``
+dumps the process metrics registry (everything the instrumented hot
+paths counted while the benches ran) as a second JSON artifact.
 """
 from __future__ import annotations
 
@@ -28,16 +30,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: ga,block,transfer,frontends,kernels,"
-                         "roofline,service")
+                         "roofline,service,obs")
     ap.add_argument("--quick", action="store_true",
                     help="smoke mode for benches that support it")
     ap.add_argument("--json", default="",
                     help="also write rows to this path as a JSON report")
+    ap.add_argument("--metrics", default="",
+                    help="also dump the process metrics-registry snapshot "
+                         "(repro.obs.metrics) to this path as JSON")
     args = ap.parse_args()
 
     from benchmarks import (bench_block_offload, bench_frontends,
-                            bench_ga_offload, bench_kernels, bench_roofline,
-                            bench_service, bench_transfer)
+                            bench_ga_offload, bench_kernels, bench_obs,
+                            bench_roofline, bench_service, bench_transfer)
     benches = {
         "ga": bench_ga_offload.main,
         "block": bench_block_offload.main,
@@ -46,6 +51,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "roofline": bench_roofline.main,
         "service": bench_service.main,
+        "obs": bench_obs.main,
     }
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")
@@ -78,6 +84,12 @@ def main() -> None:
             f.write("\n")
         print(f"# wrote {len(report_rows)} rows to {args.json}",
               file=sys.stderr)
+    if args.metrics:
+        from repro.obs import metrics as obs_metrics
+        with open(args.metrics, "w", encoding="utf-8") as f:
+            json.dump(obs_metrics.snapshot(), f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote metrics snapshot to {args.metrics}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

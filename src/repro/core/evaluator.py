@@ -54,6 +54,8 @@ from typing import Any, Callable, Optional, Sequence
 
 from repro.core.ga import Evaluation
 from repro.core.journal import Journal, file_lock, newest_per_key
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["EvalStats", "Evaluator", "ProcessPool", "transfer_cost_surrogate",
            "register_fitness_factory", "fitness_factory",
@@ -419,27 +421,35 @@ class Evaluator:
         return spearman_rank_corr([p[0] for p in pairs],
                                   [p[1] for p in pairs])
 
-    def _measure(self, bits: tuple) -> Evaluation:
+    def _measure(self, bits: tuple,
+                 parent: Optional[int] = None) -> Evaluation:
         fn = self.fitness_fn
+        key = _bits_key(bits)
         if (self.workers <= 1 and hasattr(fn, "prepare")
                 and hasattr(fn, "measure")):
             # serial two-phase measurement (baseline chromosome, single-item
             # batches, post-backoff batches): an uncontended prepare — time
             # it to calibrate the overlap phase's saving estimate for free
             t0 = time.perf_counter()
-            prep = fn.prepare(bits)
+            with obs_trace.span("eval.prepare", parent=parent, bits=key):
+                prep = fn.prepare(bits)
             dt = time.perf_counter() - t0
             with self._lock:
                 n = self._overlap_solo_n
                 prev = self._overlap_probe_s or 0.0
                 self._overlap_probe_s = (prev * n + dt) / (n + 1)
                 self._overlap_solo_n = n + 1
-            return self._record(bits, fn.measure(prep))
-        return self._record(bits, self.fitness_fn(bits))
+            with obs_trace.span("eval.measure", parent=parent, bits=key):
+                ev = fn.measure(prep)
+            return self._record(bits, ev)
+        with obs_trace.span("eval.measure", parent=parent, bits=key):
+            ev = self.fitness_fn(bits)
+        return self._record(bits, ev)
 
-    def _run_measure(self, bits: tuple, fut: Future) -> None:
+    def _run_measure(self, bits: tuple, fut: Future,
+                     parent: Optional[int] = None) -> None:
         try:
-            ev = self._measure(bits)
+            ev = self._measure(bits, parent=parent)
         except BaseException as e:  # fitness fns normally catch their own
             try:
                 fut.set_exception(e)
@@ -455,6 +465,23 @@ class Evaluator:
         """Evaluate one chromosome (cache -> in-flight -> measure)."""
         return self.evaluate_batch([tuple(bits)])[0]
 
+    #: EvalStats fields mirrored into the process metrics registry as
+    #: ``eval.<field>`` counters after every batch (delta accounting).
+    _METRIC_FIELDS = ("measurements", "cache_hits", "persistent_hits",
+                      "inflight_hits", "screened_out", "overlapped_compiles")
+
+    def _publish_metrics(self, before: EvalStats, span) -> None:
+        st = self.stats
+        deltas = {f: getattr(st, f) - getattr(before, f)
+                  for f in self._METRIC_FIELDS}
+        deltas["compile_overlap_saved_s"] = (st.compile_overlap_saved_s
+                                             - before.compile_overlap_saved_s)
+        for name, d in deltas.items():
+            if d:
+                obs_metrics.counter(f"eval.{name}").inc(d)
+        span.set(**{k: round(v, 6) if isinstance(v, float) else v
+                    for k, v in deltas.items()})
+
     def evaluate_batch(self, population: Sequence[Sequence[int]]
                        ) -> list[Evaluation]:
         """Evaluate a whole population; results in population order.
@@ -463,6 +490,14 @@ class Evaluator:
         or a persisted one), and chromosomes being measured concurrently by
         another caller are all deduped to a single measurement.
         """
+        before = dataclasses.replace(self.stats)
+        with obs_trace.span("eval.batch", size=len(population)) as sp:
+            out = self._evaluate_batch(population)
+            self._publish_metrics(before, sp)
+            return out
+
+    def _evaluate_batch(self, population: Sequence[Sequence[int]]
+                        ) -> list[Evaluation]:
         t0 = time.perf_counter()
         pop = [tuple(int(b) for b in p) for p in population]
         # everything below keys on the phenotype key (identity by default):
@@ -554,8 +589,12 @@ class Evaluator:
                     futures[key].set_result(ev)
             elif self.workers > 1 and len(to_measure) > 1:
                 pool = self._ensure_pool()
+                # pool threads have their own (empty) span stacks: hand them
+                # this thread's span id so their spans nest under the batch
+                parent = obs_trace.current_span_id()
                 for key, bits in fut_bits.items():
-                    pool.submit(self._run_measure, bits, futures[key])
+                    pool.submit(self._run_measure, bits, futures[key],
+                                parent)
             elif (self.compile_workers > 1 and len(fut_bits) > 1
                   and not self.stats.overlap_disabled
                   and hasattr(self.fitness_fn, "prepare")
@@ -630,10 +669,15 @@ class Evaluator:
         lifetime and later batches warm up serially."""
         pool = self._ensure_compile_pool()
         items = list(fut_bits.items())
+        # compile-pool threads parent their spans on the dispatching
+        # thread's batch span (their own stacks are empty)
+        parent = obs_trace.current_span_id()
 
         def timed_prepare(bits: tuple):
             t0 = time.perf_counter()
-            prep = self.fitness_fn.prepare(bits)
+            with obs_trace.span("eval.prepare", parent=parent,
+                                bits=_bits_key(bits), overlapped=True):
+                prep = self.fitness_fn.prepare(bits)
             return prep, time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -670,7 +714,9 @@ class Evaluator:
                 prep, dt = pf.result()
                 with self._lock:
                     self.stats.compile_serial_s += dt
-                ev = self._record(bits, self.fitness_fn.measure(prep))
+                with obs_trace.span("eval.measure", bits=_bits_key(bits)):
+                    ev = self.fitness_fn.measure(prep)
+                ev = self._record(bits, ev)
             except BaseException as e:  # fitness fns normally catch their own
                 try:
                     futures[key].set_exception(e)

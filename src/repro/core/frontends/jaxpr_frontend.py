@@ -361,9 +361,12 @@ class JaxprFrontend:
                 cache_extra=f"jaxpr={graph.source_name}|staticcost",
                 measured=False)
 
+        import threading
+
         from repro.core.fitness import WallClockFitness
         from repro.core.frontends.registry import decoded_pattern
         from repro.core.genes import VARIANT_ALPHABET
+        from repro.core.pattern_db import record_pattern_outcome
         from repro.core.substitution import SubstitutionEngine
 
         example_args = tuple(config.options.get("example_args", ()))
@@ -376,16 +379,54 @@ class JaxprFrontend:
             f"{tuple(np.shape(a))}:{getattr(a, 'dtype', np.dtype(type(a)))}"
             for a in jax.tree_util.tree_leaves(example_args))
         repeats = config.repeats
+        precision_dir = config.ga.cache_dir
 
         def factory(coding):
+            # bits -> SubstitutionReport of the program just built, so the
+            # verifier outcome in prepare() can be attributed per (pattern,
+            # variant).  Guarded: prepare may run on compile-pool threads.
+            reports: dict = {}
+            rlock = threading.Lock()
+
             def build(values):
                 impl = decoded_pattern(coding, tuple(values), {})
                 sub = engine.substitute(impl)
+                with rlock:
+                    reports[tuple(values)] = sub.report
                 jitted = jax.jit(sub.fn)
                 return lambda: jitted(*example_args)
 
-            return WallClockFitness(build, reference_output=reference_output,
-                                    repeats=repeats)
+            class _RecordingFitness(WallClockFitness):
+                """Classify each chromosome's verifier outcome and journal
+                it per substituted (pattern, variant) — the ROADMAP's
+                per-pattern match-precision record."""
+
+                def prepare(self, bits):
+                    prep = super().prepare(tuple(bits))
+                    with rlock:
+                        report = reports.pop(tuple(bits), None)
+                    if report is None:     # build itself failed: no program
+                        return prep
+                    if prep.failure is None:
+                        outcome = "ok"
+                    elif "verify" in prep.failure.detail:
+                        outcome = "verify_fail"
+                    else:
+                        outcome = "error"
+                    for c in report.choices:
+                        if c.chosen != "ref":
+                            record_pattern_outcome(
+                                precision_dir, c.pattern, c.chosen,
+                                outcome, region=c.region)
+                        elif c.requested not in ("ref", "interp",
+                                                 "host", "cpu"):
+                            record_pattern_outcome(
+                                precision_dir, c.pattern, c.requested,
+                                "bind_fail", region=c.region)
+                    return prep
+
+            return _RecordingFitness(build, reference_output=reference_output,
+                                     repeats=repeats)
 
         # note: block-pass matches are *not* claimed here — on the measured
         # path the genes range over each matched region's variant set (the

@@ -73,6 +73,15 @@ class OffloadConfig:
                                               # environments, deterministic
                                               # test harnesses)
     log: Optional[Callable[[str], None]] = None
+    trace: Optional[str] = None               # JSONL trace file: Offloader
+                                              # phases (prepare/search/apply),
+                                              # evaluator batches and per-
+                                              # chromosome prepare/measure
+                                              # spans are recorded there (see
+                                              # repro.obs.trace + the
+                                              # launch/obsreport CLI); None =
+                                              # tracing disabled (near-zero
+                                              # cost)
     options: dict = field(default_factory=dict)   # frontend-specific knobs
                                               # (module: lower_fn, n_devices,
                                               #  model_flops, hbm_budget,

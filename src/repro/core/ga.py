@@ -29,6 +29,9 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 
 @dataclass
 class GAConfig:
@@ -258,21 +261,31 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
 
     for gen in range(cfg.generations):
         # whole-generation batch: dedup + (optionally) parallel measurement
-        evals = evaluator.evaluate_batch(pop)
-        gen_best = min(evals, key=lambda e: e.time_s)
-        if best is None or gen_best.time_s < best.time_s:
-            best = gen_best
-            stale = 0
-        else:
-            stale += 1
-        finite = [e.time_s for e in evals if math.isfinite(e.time_s)]
-        history.append({
-            "generation": gen,
-            "best_time_s": best.time_s,
-            "gen_best_time_s": gen_best.time_s,
-            "mean_time_s": float(np.mean(finite)) if finite else float("inf"),
-            "n_invalid": sum(1 for e in evals if not e.valid),
-        })
+        with obs_trace.span("ga.generation", generation=gen) as gspan:
+            evals = evaluator.evaluate_batch(pop)
+            gen_best = min(evals, key=lambda e: e.time_s)
+            if best is None or gen_best.time_s < best.time_s:
+                best = gen_best
+                stale = 0
+            else:
+                stale += 1
+            finite = [e.time_s for e in evals
+                      if math.isfinite(e.time_s)]
+            history.append({
+                "generation": gen,
+                "best_time_s": best.time_s,
+                "gen_best_time_s": gen_best.time_s,
+                "mean_time_s": float(np.mean(finite)) if finite
+                else float("inf"),
+                "n_invalid": sum(1 for e in evals if not e.valid),
+            })
+            gspan.set(**history[-1])
+        obs_metrics.counter("ga.generations").inc()
+        obs_metrics.gauge("ga.best_time_s").set(best.time_s)
+        obs_metrics.gauge("ga.gen_mean_time_s").set(
+            history[-1]["mean_time_s"]
+            if math.isfinite(history[-1]["mean_time_s"]) else -1.0)
+        obs_metrics.counter("ga.invalid").inc(history[-1]["n_invalid"])
         if log:
             log(f"gen {gen}: best={best.time_s:.6g}s "
                 f"mean={history[-1]['mean_time_s']:.6g}s "

@@ -39,6 +39,7 @@ from repro.core.genes import (DEFAULT_ALPHABET, GeneCoding, coding_from_graph,
 from repro.core.ir import RegionGraph
 from repro.core.transfer_planner import TransferPlan, plan_transfers
 from repro.core.variants import generic_plan_report
+from repro.obs import trace as obs_trace
 
 __all__ = ["OffloadConfig", "OffloadResult", "Offloader", "PlanContext",
            "SeedBank", "ga_search", "phenotype_key", "plan_offload",
@@ -533,20 +534,27 @@ class Offloader:
         fe = get_frontend(name)
         log(f"frontend: {name}")
 
-        if hasattr(fe, "normalize_target"):
-            target = fe.normalize_target(target, inputs, cfg)
-        graph = fe.build_graph(target, inputs, cfg)
-        bundle: FitnessBundle = fe.make_fitness(graph, target, inputs, cfg)
-        if cfg.destinations is not None:       # explicit config always wins
-            destinations = tuple(cfg.destinations)
-        else:                                  # else the frontend's proposal
-            destinations = tuple(bundle.destinations or DEFAULT_ALPHABET)
-        coding = coding_from_graph(graph, exclude=bundle.claimed,
-                                   destinations=destinations)
-        log(f"graph: {graph.summary()} gene_length={coding.length} "
-            f"alphabet={coding.destinations}")
-        fingerprint = search_fingerprint(graph, coding, bundle.claimed,
-                                         bundle.cache_extra)
+        with obs_trace.maybe_tracing(cfg.trace), \
+                obs_trace.span("plan.prepare", frontend=name) as sp:
+            if hasattr(fe, "normalize_target"):
+                target = fe.normalize_target(target, inputs, cfg)
+            with obs_trace.span("prepare.build_graph"):
+                graph = fe.build_graph(target, inputs, cfg)
+            with obs_trace.span("prepare.make_fitness"):
+                bundle: FitnessBundle = fe.make_fitness(graph, target,
+                                                        inputs, cfg)
+            if cfg.destinations is not None:   # explicit config always wins
+                destinations = tuple(cfg.destinations)
+            else:                              # else the frontend's proposal
+                destinations = tuple(bundle.destinations or DEFAULT_ALPHABET)
+            coding = coding_from_graph(graph, exclude=bundle.claimed,
+                                       destinations=destinations)
+            log(f"graph: {graph.summary()} gene_length={coding.length} "
+                f"alphabet={coding.destinations}")
+            fingerprint = search_fingerprint(graph, coding, bundle.claimed,
+                                             bundle.cache_extra)
+            sp.set(fingerprint=fingerprint, gene_length=coding.length,
+                   regions=len(graph.regions))
         return PlanContext(frontend=name, target=target, inputs=inputs,
                            config=cfg, graph=graph, bundle=bundle,
                            coding=coding, fingerprint=fingerprint)
@@ -563,12 +571,20 @@ class Offloader:
                 f"plan has {len(values)} genes but the program codes "
                 f"{ctx.coding.length} — stored plan does not fit this target")
         fe = get_frontend(ctx.frontend)
-        return fe.apply_plan(ctx.graph, ctx.coding, values, ctx.bundle)
+        with obs_trace.maybe_tracing(ctx.config.trace), \
+                obs_trace.span("plan.apply", frontend=ctx.frontend,
+                               bits="".join(str(v) for v in values)):
+            return fe.apply_plan(ctx.graph, ctx.coding, values, ctx.bundle)
 
     def plan(self, target: Any, inputs: Optional[dict] = None,
              config: Optional[OffloadConfig] = None) -> OffloadResult:
         """Plan offloading for any supported target; see module docstring."""
-        return self.search(self.prepare(target, inputs, config))
+        cfg = config or self.config
+        with obs_trace.maybe_tracing(cfg.trace), \
+                obs_trace.span("offload.plan") as sp:
+            ctx = self.prepare(target, inputs, config)
+            sp.set(frontend=ctx.frontend, fingerprint=ctx.fingerprint)
+            return self.search(ctx)
 
     def search(self, ctx: PlanContext,
                ga: Optional[GAConfig] = None,
@@ -580,6 +596,17 @@ class Offloader:
         generations); ``extra_seeds`` are prepended warm starts (the
         refinement loop seeds with the deployed plan's chromosome).
         """
+        with obs_trace.maybe_tracing(ctx.config.trace), \
+                obs_trace.span("plan.search", frontend=ctx.frontend,
+                               fingerprint=ctx.fingerprint) as sp:
+            res = self._search(ctx, ga, extra_seeds)
+            sp.set(best_time_s=res.best.time_s,
+                   evaluations=res.ga.evaluations,
+                   generations=len(res.ga.history))
+            return res
+
+    def _search(self, ctx: PlanContext, ga: Optional[GAConfig],
+                extra_seeds: Sequence[Sequence[int]]) -> OffloadResult:
         from repro.core.pattern_db import default_db
 
         cfg = ctx.config

@@ -20,7 +20,9 @@ from __future__ import annotations
 import ast as pyast
 import dataclasses
 import json
+import os
 import textwrap
+import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -30,6 +32,8 @@ import numpy as np
 
 from repro.core import similarity as sim
 from repro.core.ir import Region
+from repro.core.journal import Journal
+from repro.obs import metrics as obs_metrics
 
 # ---------------------------------------------------------------------------
 # records
@@ -75,9 +79,83 @@ class Match:
     needs_confirmation: bool = False
 
 
+# ---------------------------------------------------------------------------
+# per-pattern verifier-outcome journal (ROADMAP: match precision from
+# verifier outcomes — a pattern whose substitutions keep failing
+# verification should raise its own threshold)
+# ---------------------------------------------------------------------------
+
+PRECISION_FILE = "pattern_precision.jsonl"
+_PRECISION_MAX_LINES = 4096
+
+#: outcome vocabulary.  ``ok`` / ``verify_fail`` / ``error`` are verifier
+#: verdicts on a substitution that ran; ``bind_fail`` means the matched
+#: variant refused to bind (predicate/aval rejection) so nothing ran —
+#: recorded, but excluded from the precision denominator by default.
+PRECISION_OUTCOMES = ("ok", "verify_fail", "error", "bind_fail")
+
+
+def record_pattern_outcome(cache_dir: Optional[str], pattern: Optional[str],
+                           variant: str, outcome: str,
+                           region: str = "") -> None:
+    """Journal one verifier outcome for a (pattern, variant) substitution
+    into ``{cache_dir}/pattern_precision.jsonl`` and mirror it into the
+    process metrics registry (``patterns.outcomes``).  ``cache_dir=None``
+    keeps the metrics side only; records without a pattern are dropped."""
+    if not pattern:
+        return
+    obs_metrics.counter("patterns.outcomes", pattern=pattern,
+                        variant=variant, outcome=outcome).inc()
+    if not cache_dir:
+        return
+    journal = Journal(os.path.join(cache_dir, PRECISION_FILE))
+    journal.append([{"pattern": pattern, "variant": str(variant),
+                     "outcome": str(outcome), "region": region,
+                     "ts": time.time()}])
+    journal.compact(lambda recs: recs[-_PRECISION_MAX_LINES:],
+                    threshold=2 * _PRECISION_MAX_LINES)
+
+
+def load_pattern_precision(cache_dir: str) -> dict[str, dict[str, int]]:
+    """The journal aggregated: ``pattern -> {outcome: count}``."""
+    out: dict[str, dict[str, int]] = {}
+    journal = Journal(os.path.join(cache_dir, PRECISION_FILE))
+    for rec in journal.records():
+        pattern, outcome = rec.get("pattern"), rec.get("outcome")
+        if not pattern or not outcome:
+            continue
+        counts = out.setdefault(pattern, {})
+        counts[outcome] = counts.get(outcome, 0) + 1
+    return out
+
+
 class PatternDB:
-    def __init__(self, records: list[PatternRecord]):
+    def __init__(self, records: list[PatternRecord],
+                 precision_dir: Optional[str] = None):
         self.records = records
+        #: where this DB reads verifier-outcome journals from
+        #: (:func:`record_pattern_outcome` writers pass their own cache_dir)
+        self.precision_dir = precision_dir
+
+    # --- match precision from verifier outcomes -----------------------------
+    def precision(self, pattern: str,
+                  cache_dir: Optional[str] = None) -> Optional[float]:
+        """Fraction of this pattern's *ran* substitutions the verifier
+        accepted: ``ok / (ok + verify_fail + error)`` over the precision
+        journal.  ``bind_fail`` records (the variant never ran, so the
+        verifier said nothing) don't enter the denominator.  None when no
+        journal directory is configured or the pattern has no ran outcomes
+        yet — "no evidence", distinct from 0.0 ("all failed")."""
+        d = cache_dir or self.precision_dir
+        if not d:
+            return None
+        counts = load_pattern_precision(d).get(pattern)
+        if not counts:
+            return None
+        ran = sum(counts.get(o, 0) for o in ("ok", "verify_fail", "error"))
+        if ran == 0:
+            return None
+        return counts.get("ok", 0) / ran
 
     #: a similarity match must beat the runner-up pattern by this margin,
     #: otherwise it is ambiguous (generic loop scaffolding looks like every

@@ -376,18 +376,28 @@ class SubstitutionEngine:
         trivially as the reference path with ``chosen == "ref"``."""
         from repro.core.verifier import VerifyResult, verify as _verify
 
+        from repro.core.pattern_db import record_pattern_outcome
+
         site = next((s for s in self._sites if s.region == region), None)
         if site is None:
             raise KeyError(f"no substitutable site for region {region!r}")
         adapter, chosen, why = self._resolve_variant(site, str(impl_id))
         if adapter is None:
+            if chosen == "ref" and str(impl_id) not in ("ref", "interp",
+                                                        "host", "cpu"):
+                record_pattern_outcome(None, site.pattern, str(impl_id),
+                                       "bind_fail", region=region)
             return VerifyResult(True, 0.0, 0.0, why), chosen
         ins, ref_outs = self._site_values(site)
         got = adapter(*ins)
         used = self._out_used(site)
         ref_used = [o for o, u in zip(ref_outs, used) if u]
         got_used = [o for o, u in zip(got, used) if u]
-        return _verify(ref_used, got_used, rtol=rtol, atol=atol), chosen
+        res = _verify(ref_used, got_used, rtol=rtol, atol=atol)
+        record_pattern_outcome(None, site.pattern, chosen,
+                               "ok" if res.ok else "verify_fail",
+                               region=region)
+        return res, chosen
 
     def reference(self) -> Any:
         """The unsubstituted program's outputs on the example arguments

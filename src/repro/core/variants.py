@@ -33,6 +33,7 @@ import jax
 from repro.kernels.registry import (CallSite, KernelRegistry,
                                     VariantUnavailable, auto_variant_order,
                                     default_registry)
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["SubstitutionChoice", "SubstitutionReport", "check_adapter",
            "resolve_variant", "generic_plan_report"]
@@ -126,9 +127,18 @@ def resolve_variant(site: CallSite, requested: str,
     """
     registry = registry or default_registry()
     backend = backend or jax.default_backend()
+
+    def _count(outcome: str, variant: str) -> None:
+        # bind/fallback telemetry tagged by pattern and variant — the live
+        # counterpart of the pattern_precision journal (repro.core.pattern_db)
+        obs_metrics.counter("variants.resolutions",
+                            pattern=site.pattern or "-",
+                            variant=variant, outcome=outcome).inc()
+
     if requested in _REF_IMPLS:
         return None, "ref", "requested"
     if not site.pattern:
+        _count("no_pattern", str(requested))
         return None, "ref", "no pattern matched this region"
     names = registry.variant_names(site.pattern)
     if requested in names:
@@ -137,6 +147,7 @@ def resolve_variant(site: CallSite, requested: str,
         candidates = tuple(n for n in auto_variant_order(backend)
                            if n in names) or names
     else:
+        _count("unknown", str(requested))
         return None, "ref", f"unknown implementation {requested!r}"
     why = ""
     for name in candidates:
@@ -144,9 +155,11 @@ def resolve_variant(site: CallSite, requested: str,
             adapter = registry.get(site.pattern, name).bind(site)
             if check:
                 check_adapter(adapter, site)
+            _count("bound", name)
             return adapter, name, ""
         except VariantUnavailable as e:
             why = f"{name}: {e}"
+    _count("fallback", str(requested))
     return None, "ref", why
 
 

@@ -31,6 +31,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.plans import production_plan, tuned_plan
 from repro.models.api import Model, build_model
 from repro.models.plan import ExecPlan
+from repro.obs.log import get_logger, setup as setup_logging
 from repro.optim import OptimizerConfig, adamw_init
 from repro.optim.schedule import make_schedule
 from repro.runtime import sharding as shd
@@ -38,6 +39,8 @@ from repro.runtime.pspec import axis_rules
 from repro.runtime.train import TrainState, jit_train_step, make_train_step
 
 Sds = jax.ShapeDtypeStruct
+
+log = get_logger("launch.dryrun")
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +128,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, plan: ExecPlan,
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              plan_kind: str = "production", out_dir: str = "experiments/dryrun",
              verbose: bool = True) -> dict:
+    setup_logging()          # idempotent — run_cell is also a library entry
     cfg = get_config(arch)
     shape = SHAPES_BY_NAME[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -136,7 +140,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["skip_reason"] = cfg.skip_reason(shape)
         _write(rec, out_dir)
         if verbose:
-            print(f"[skip] {arch} x {shape_name}: {rec['skip_reason']}")
+            log.info("[skip] %s x %s: %s", arch, shape_name,
+                     rec["skip_reason"])
         return rec
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -148,9 +153,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
-        print(mem)   # proves it fits (per-device bytes)
+        log.info("%s", mem)   # proves it fits (per-device bytes)
         ca = compiled.cost_analysis()
-        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        log.info("%s", {k: ca[k] for k in ("flops", "bytes accessed")
+                        if k in ca})
         roof = rl.analyze(compiled, compiled.as_text(), n_dev,
                           model_flops_global=mf)
         live = (getattr(mem, "argument_size_in_bytes", 0)
@@ -176,19 +182,20 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         })
         if verbose:
             s = roof.summary()
-            print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
-                  f"live={live/1e9:.2f}GB "
-                  f"compute={s['compute_s']*1e3:.2f}ms "
-                  f"memory={s['memory_s']*1e3:.2f}ms "
-                  f"collective={s['collective_s']*1e3:.2f}ms "
-                  f"dominant={s['dominant']} "
-                  f"roofline_frac={s['roofline_fraction']:.3f}")
+            log.info("[ok] %s x %s x %s: live=%.2fGB compute=%.2fms "
+                     "memory=%.2fms collective=%.2fms dominant=%s "
+                     "roofline_frac=%.3f",
+                     arch, shape_name, mesh_name, live / 1e9,
+                     s["compute_s"] * 1e3, s["memory_s"] * 1e3,
+                     s["collective_s"] * 1e3, s["dominant"],
+                     s["roofline_fraction"])
     except Exception as e:  # noqa: BLE001
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"[:2000]
         rec["traceback"] = traceback.format_exc()[-4000:]
         if verbose:
-            print(f"[ERROR] {arch} x {shape_name} x {mesh_name}: {rec['error'][:300]}")
+            log.error("[ERROR] %s x %s x %s: %s", arch, shape_name,
+                      mesh_name, rec["error"][:300])
     _write(rec, out_dir)
     return rec
 
@@ -201,6 +208,7 @@ def _write(rec: dict, out_dir: str) -> None:
 
 
 def main() -> None:
+    setup_logging()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
     ap.add_argument("--shape", default=None,
@@ -245,7 +253,7 @@ def main() -> None:
         n_ok += rec["status"] == "ok"
         n_err += rec["status"] == "error"
         n_skip += rec["status"] == "skip"
-    print(f"done: ok={n_ok} error={n_err} skip={n_skip}")
+    log.info("done: ok=%d error=%d skip=%d", n_ok, n_err, n_skip)
     if n_err:
         raise SystemExit(1)
 

@@ -23,13 +23,17 @@ from repro.core.frontends import module_frontend
 from repro.data import Batcher, DataConfig, SyntheticLMDataset
 from repro.models import build_model
 from repro.models.plan import ExecPlan
+from repro.obs.log import get_logger, setup as setup_logging
 from repro.optim import OptimizerConfig
 from repro.optim.schedule import make_schedule
 from repro.runtime.fault_tolerance import Supervisor
 from repro.runtime.train import init_train_state, make_train_step
 
+log = get_logger("launch.train")
+
 
 def main() -> None:
+    setup_logging()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3_0_6b", choices=list(ARCH_IDS))
     ap.add_argument("--steps", type=int, default=50)
@@ -49,14 +53,15 @@ def main() -> None:
         cfg = cfg.reduced()
     model = build_model(cfg)
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(model.param_shapes()))
-    print(f"arch={args.arch} ({'full' if args.no_reduced else 'reduced'}) "
-          f"params={n_params/1e6:.2f}M devices={len(jax.devices())}")
+    log.info("arch=%s (%s) params=%.2fM devices=%d", args.arch,
+             "full" if args.no_reduced else "reduced", n_params / 1e6,
+             len(jax.devices()))
 
     # the paper's pipeline: pattern-DB block offload decides implementations
     block = block_offload_pass(module_frontend.build_graph(cfg), default_db())
     plan = ExecPlan(compute_dtype="float32", attn_kv_chunk=128,
                     microbatch=args.microbatch).replace(**block.plan_updates)
-    print("offload plan:", block.plan_updates)
+    log.info("offload plan: %s", block.plan_updates)
 
     data = SyntheticLMDataset(DataConfig(
         seq_len=args.seq_len, global_batch=args.global_batch,
@@ -71,11 +76,11 @@ def main() -> None:
     start = 0
     if args.resume and mgr.latest_step() is not None:
         start, state = mgr.restore(state)
-        print(f"resumed from step {start}")
+        log.info("resumed from step %d", start)
 
     sup = Supervisor(mgr, ckpt_every=args.ckpt_every,
-                     on_straggler=lambda s, dt: print(
-                         f"  [straggler] step {s}: {dt*1e3:.0f} ms"))
+                     on_straggler=lambda s, dt: log.warning(
+                         "straggler step %d: %.0f ms", s, dt * 1e3))
     losses: list = []
 
     def batch_fn(s):
@@ -85,13 +90,14 @@ def main() -> None:
         state, metrics = step_fn(state, batch)
         losses.append(float(metrics["loss"]))
         if len(losses) % 10 == 0:
-            print(f"step {start + len(losses):4d}  loss={losses[-1]:.4f}")
+            log.info("step %4d  loss=%.4f", start + len(losses), losses[-1])
         return state, metrics
 
     state, report = sup.run(state, batch_fn, wrapped, n_steps=args.steps,
                             start_step=start)
-    print(f"done: {report.steps_done} steps, {report.restarts} restarts; "
-          f"loss {losses[0]:.4f} -> {np.mean(losses[-5:]):.4f}")
+    log.info("done: %d steps, %d restarts; loss %.4f -> %.4f",
+             report.steps_done, report.restarts, losses[0],
+             np.mean(losses[-5:]))
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ fingerprint, with no planner in the loop.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 from typing import Optional
 
@@ -25,6 +26,8 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.models.plan import ExecPlan
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -105,17 +108,25 @@ class Server:
         max_new = max_new or self.cfg.max_new_tokens   # complete plan
         tokens = inputs["tokens"]
         b, s = tokens.shape
-        cap = s + max_new + (self.model.cfg.vision_patches or 0)
-        logits, state = bound.prefill_fn(cap)(self.params, inputs)
-        key = jax.random.key(self.cfg.seed)
-        out = np.zeros((b, max_new), np.int32)
-        tok = self._sample(logits, key, 0)
-        for i in range(max_new):
-            out[:, i] = np.asarray(tok[:, 0])
-            if i == max_new - 1:
-                break
-            logits, state = bound.decode(self.params, tok, state)
-            tok = self._sample(logits, key, i + 1)
+        t0 = time.perf_counter()
+        with obs_trace.span("serve.generate", batch=b, prompt_len=s,
+                            max_new=max_new):
+            cap = s + max_new + (self.model.cfg.vision_patches or 0)
+            logits, state = bound.prefill_fn(cap)(self.params, inputs)
+            key = jax.random.key(self.cfg.seed)
+            out = np.zeros((b, max_new), np.int32)
+            tok = self._sample(logits, key, 0)
+            for i in range(max_new):
+                out[:, i] = np.asarray(tok[:, 0])
+                if i == max_new - 1:
+                    break
+                logits, state = bound.decode(self.params, tok, state)
+                tok = self._sample(logits, key, i + 1)
+        # the histogram lives in the process-wide registry keyed by name,
+        # not on the _Bound snapshot — a mid-flight swap_plan publishes a
+        # new snapshot but cannot reset the latency series
+        obs_metrics.histogram("serve.generate_seconds").observe(
+            time.perf_counter() - t0)
         return out
 
     def _sample(self, logits, key, i):

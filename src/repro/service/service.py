@@ -45,6 +45,8 @@ from typing import Any, Callable, Optional
 
 from repro.core.frontends.registry import OffloadConfig
 from repro.core.offload import Offloader, PlanContext
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.service.store import PlanRecord, PlanStore, record_from_result
 
 __all__ = ["PlanService", "ServedPlan", "ServiceConfig", "ServiceStats"]
@@ -77,6 +79,7 @@ class ServiceStats:
     refinements: int = 0     # refinement rounds completed
     swaps: int = 0           # refinements that hot-swapped a better plan
     rollbacks: int = 0
+    evictions: int = 0       # fingerprints dropped by the TTL sweep
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -170,14 +173,20 @@ class PlanService:
                 self.stats.live_hits += 1
                 fut: Future = Future()
                 fut.set_result(entry.current)
-                return fut
-            pending = self._inflight.get(ctx.fingerprint)
-            if pending is not None:
-                self.stats.coalesced += 1
-                return pending
-            fut = Future()
-            self._inflight[ctx.fingerprint] = fut
-        self._pool.submit(self._admit, off, ctx, fut)
+                outcome = "live-hit"
+            else:
+                pending = self._inflight.get(ctx.fingerprint)
+                if pending is not None:
+                    self.stats.coalesced += 1
+                    fut = pending
+                    outcome = "coalesced"
+                else:
+                    fut = Future()
+                    self._inflight[ctx.fingerprint] = fut
+                    outcome = "cold"
+        obs_metrics.counter("service.admission", outcome=outcome).inc()
+        if outcome == "cold":
+            self._pool.submit(self._admit, off, ctx, fut)
         return fut
 
     def plan(self, target: Any, inputs: Optional[dict] = None,
@@ -200,24 +209,33 @@ class PlanService:
         fut.set_result(plan)
 
     def _load_or_search(self, off: Offloader, ctx: PlanContext) -> ServedPlan:
-        rec = self.store.load(ctx.fingerprint)
-        if rec is not None and rec.sites == ctx.sites \
-                and rec.destinations == ctx.coding.destinations:
-            # warm path: stored plan fits this program — pure artifact load
-            if "exec_plan" in rec.payload:
-                artifact = self.store.rehydrate(rec)
-            else:
-                artifact = off.apply(ctx, rec.bits)
+        with obs_trace.maybe_tracing(ctx.config.trace), \
+                obs_trace.span("service.admit", frontend=ctx.frontend,
+                               fingerprint=ctx.fingerprint) as sp:
+            rec = self.store.load(ctx.fingerprint)
+            if rec is not None and rec.sites == ctx.sites \
+                    and rec.destinations == ctx.coding.destinations:
+                # warm path: stored plan fits this program — pure artifact load
+                if "exec_plan" in rec.payload:
+                    artifact = self.store.rehydrate(rec)
+                else:
+                    artifact = off.apply(ctx, rec.bits)
+                with self._lock:
+                    self.stats.warm_loads += 1
+                obs_metrics.counter("service.warm_loads").inc()
+                sp.set(path="warm-load", version=rec.version)
+                return ServedPlan(ctx.fingerprint, rec, artifact, warm=True)
+            res = off.search(ctx)
             with self._lock:
-                self.stats.warm_loads += 1
-            return ServedPlan(ctx.fingerprint, rec, artifact, warm=True)
-        res = off.search(ctx)
-        with self._lock:
-            self.stats.searches += 1
-        stored = self.store.put(record_from_result(
-            res, ctx.fingerprint,
-            meta={"origin": "cold-search", "evaluations": res.ga.evaluations}))
-        return ServedPlan(ctx.fingerprint, stored, res.artifact, warm=False)
+                self.stats.searches += 1
+            obs_metrics.counter("service.searches").inc()
+            stored = self.store.put(record_from_result(
+                res, ctx.fingerprint,
+                meta={"origin": "cold-search",
+                      "evaluations": res.ga.evaluations}))
+            sp.set(path="cold-search", version=stored.version)
+            return ServedPlan(ctx.fingerprint, stored, res.artifact,
+                              warm=False)
 
     # -- serving -------------------------------------------------------------
 
@@ -245,6 +263,24 @@ class PlanService:
     def fingerprints(self) -> tuple[str, ...]:
         with self._lock:
             return tuple(self._entries)
+
+    # -- store hygiene -------------------------------------------------------
+
+    def evict_stale(self, max_age_s: float,
+                    now: Optional[float] = None) -> tuple[str, ...]:
+        """TTL sweep over the plan store: drop every fingerprint whose
+        newest stored version is older than ``max_age_s`` seconds.  Plans
+        that are currently deployed or mid-admission are never evicted
+        (they are the ``keep`` set) — the sweep retires fingerprints no
+        live client can be holding.  Returns the evicted fingerprints."""
+        with self._lock:
+            keep = set(self._entries) | set(self._inflight)
+        evicted = self.store.evict_stale(max_age_s, now=now, keep=keep)
+        if evicted:
+            with self._lock:
+                self.stats.evictions += len(evicted)
+            obs_metrics.counter("service.evictions").inc(len(evicted))
+        return evicted
 
     # -- background refinement + hot-swap ------------------------------------
 
@@ -277,6 +313,7 @@ class PlanService:
             extra_seeds=[entry.current.record.bits])
         with self._lock:
             self.stats.refinements += 1
+        obs_metrics.counter("service.refinements").inc()
         deployed = entry.current.record
         better = (res.best.valid
                   and res.best.time_s < deployed.best_time_s
@@ -293,6 +330,7 @@ class PlanService:
             entry.previous = entry.current
             entry.current = new_plan       # the atomic hot-swap: one
             self.stats.swaps += 1          # reference assignment publishes
+        obs_metrics.counter("service.swaps").inc()
         return True                        # a complete immutable plan
 
     def rollback(self, fingerprint: str) -> ServedPlan:
@@ -316,6 +354,7 @@ class PlanService:
             entry.previous = entry.current
             entry.current = restored
             self.stats.rollbacks += 1
+        obs_metrics.counter("service.rollbacks").inc()
         return restored
 
     def start_refinement(self, interval_s: Optional[float] = None) -> None:

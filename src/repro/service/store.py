@@ -210,6 +210,35 @@ class PlanStore:
             threshold=2 * self.max_records)
         return record
 
+    def evict_stale(self, max_age_s: float, now: Optional[float] = None,
+                    keep: Any = ()) -> tuple[str, ...]:
+        """TTL sweep: drop every fingerprint whose *newest* stored version
+        is older than ``now - max_age_s`` (the whole history goes with it —
+        a retired program's stale v1 is as dead as its stale v5).
+        Fingerprints in ``keep`` (the service passes its deployed and
+        in-flight ones) are never evicted.  Runs read + rewrite under the
+        journal lock so a concurrent ``put`` can't vanish mid-sweep.
+        Returns the evicted fingerprints."""
+        now = time.time() if now is None else float(now)
+        cutoff = now - float(max_age_s)
+        keep = set(keep)
+        with self._journal.lock():
+            recs = self._journal.records()
+            newest: dict[str, float] = {}
+            for rec in recs:
+                fp = rec.get("fingerprint")
+                if fp:
+                    newest[fp] = max(newest.get(fp, 0.0),
+                                     float(rec.get("ts") or 0.0))
+            stale = {fp for fp, ts in newest.items()
+                     if fp not in keep and ts < cutoff}
+            if not stale:
+                return ()
+            self._journal.rewrite(
+                [r for r in recs if r.get("fingerprint") not in stale],
+                locked=False)
+        return tuple(sorted(stale))
+
     def rollback(self, fingerprint: str) -> PlanRecord:
         """Re-deploy the previous surviving version by appending its content
         as a *new* head version (history is append-only — rolling back is a

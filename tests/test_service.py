@@ -413,6 +413,12 @@ def test_hot_swap_under_load_keeps_outputs_correct(tmp_path):
 # ---------------------------------------------------------------------------
 
 
+def _generate_hist_count() -> int:
+    from repro.obs import metrics as obs_metrics
+    fam = obs_metrics.snapshot().get("serve.generate_seconds")
+    return sum(s.get("count", 0) for s in fam["series"]) if fam else 0
+
+
 def test_server_from_store_and_swap_plan_under_generate(tmp_path):
     arch = get_config("qwen3_0_6b")
     with PlanService(str(tmp_path),
@@ -436,6 +442,7 @@ def test_server_from_store_and_swap_plan_under_generate(tmp_path):
     server = Server.from_store(model, params, store, fp,
                                ServeConfig(max_new_tokens=6))
     assert server.plan == plan.artifact
+    hist0 = _generate_hist_count()
     out_stored = server.generate({"tokens": toks})
     assert out_stored.shape == (2, 6)
 
@@ -477,3 +484,7 @@ def test_server_from_store_and_swap_plan_under_generate(tmp_path):
     # post-swap calls serve the new plan
     np.testing.assert_array_equal(server.generate({"tokens": toks}),
                                   out_stored)
+    # the per-generate latency histogram lives in the process-wide metrics
+    # registry, not on the plan snapshot: five swap_plan calls later it has
+    # kept accumulating (>= the 3 deterministic generate calls above)
+    assert _generate_hist_count() >= hist0 + 3
