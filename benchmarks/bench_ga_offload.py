@@ -248,6 +248,68 @@ def _bench_surrogate_fit_synth(rows: list) -> None:
 
 
 # ---------------------------------------------------------------------------
+# part 1a': multi-objective Pareto search on a mixed-destination workload
+# ---------------------------------------------------------------------------
+
+
+def _bench_pareto(rows: list) -> None:
+    """NSGA multi-objective search (latency × energy × transfer) over the
+    extended cpu/gpu/fpga_stub alphabet: deterministic fitness + modeled
+    watts, so the front shape and the energy-vs-latency trade-off are
+    byte-stable across machines — the gateable Pareto numbers.  GPU genes
+    cut wall-clock but burn 250 W, CPU is slow at 65 W, the stub adds
+    modeled seconds at 30 W: a mixed-destination front must exist even on
+    CPU-only CI."""
+    from repro.core import OffloadConfig, Offloader
+    from repro.core import objectives as objmod
+    from repro.core.ga import dominates
+    from repro.core.genes import EXTENDED_ALPHABET
+    from repro.core.ir import Region, RegionGraph
+
+    regions = [
+        Region(f"r{i}", "loop", uses=frozenset({f"v{i}"}),
+               defs=frozenset({f"v{i}"}), offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=2 + i)
+        for i in range(5)]
+    graph = RegionGraph(regions, "ir", "bench_pareto")
+
+    def speedup(values) -> Evaluation:
+        t = 1.0 - 0.12 * sum(int(v) == 1 for v in values)
+        return Evaluation(tuple(values), t, True)
+
+    res = Offloader(OffloadConfig(
+        frontend="ir", fitness_fn=speedup, destinations=EXTENDED_ALPHABET,
+        ga=GAConfig(population=10, generations=4, seed=0,
+                    objectives=objmod.OBJECTIVES))).plan(graph)
+
+    front = res.front_summary()
+    assert len(front) >= 2, "mixed-destination workload must yield a front"
+    pts = [objmod.objective_values(ev, res.graph, res.coding)
+           for ev in res.front]
+    for i, a in enumerate(pts):
+        for j, b in enumerate(pts):
+            assert i == j or not dominates(a, b), "front not Pareto-optimal"
+
+    lat = min(front, key=lambda p: (p["latency_s"], p["energy_j"]))
+    en = min(front, key=lambda p: (p["energy_j"], p["latency_s"]))
+    energy_gain = 100.0 * (lat["energy_j"] / en["energy_j"] - 1.0)
+    latency_cost = 100.0 * (en["latency_s"] / lat["latency_s"] - 1.0)
+    assert energy_gain > 0 and latency_cost > 0, \
+        "energy-optimal must trade latency for joules"
+    rows += [
+        row("ga_offload.pareto_front_size", len(front),
+            f"non-dominated patterns over {objmod.OBJECTIVES}; "
+            f"latency-opt={''.join(map(str, lat['bits']))} "
+            f"energy-opt={''.join(map(str, en['bits']))}"),
+        row("ga_offload.pareto_energy_gain_pct", energy_gain,
+            f"latency point burns {lat['energy_j']:.1f} J vs "
+            f"{en['energy_j']:.1f} J at the energy point, which pays "
+            f"{latency_cost:.0f}% latency for it (modeled watts, "
+            f"deterministic)"),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # part 1b: measured jaxpr search with compile-parallel/time-serial warm-ups
 # ---------------------------------------------------------------------------
 
@@ -464,6 +526,7 @@ def main(quick: bool = False) -> list[str]:
     rows: list[str] = []
     _bench_python_ga(rows, quick=quick)
     _bench_surrogate_fit_synth(rows)
+    _bench_pareto(rows)
     _bench_jaxpr_overlap(rows)
     if not quick:
         _bench_module_parallel(rows)

@@ -1,8 +1,8 @@
-"""Perf-trajectory gate: compare a fresh ``BENCH_PR8.json`` against the
+"""Perf-trajectory gate: compare a fresh ``BENCH_PR9.json`` against the
 committed baseline and fail on regression.
 
-  PYTHONPATH=src python -m benchmarks.compare BENCH_PR8.json \
-      benchmarks/baseline/BENCH_PR8.json --max-regression 0.25
+  PYTHONPATH=src python -m benchmarks.compare BENCH_PR9.json \
+      benchmarks/baseline/BENCH_PR9.json --max-regression 0.25
 
 Only *machine-relative* metrics are gated (same-run ratios in percent,
 bounded scores like rank correlations, measurement counts) — absolute
@@ -41,6 +41,13 @@ GATES: dict[str, tuple[str, str, float]] = {
     "ga_offload.surrogate_kind_fitted":       ("abs", "higher", 0.5),
     # compile-overlap must keep saving warm-up wall on the jaxpr path
     "ga_offload.compile_overlap_saved_pct":   ("abs", "higher", 25.0),
+    # multi-objective search: the mixed-destination workload must keep
+    # yielding a Pareto front (>= 2 points: losing it means the NSGA path
+    # collapsed to single-objective) whose energy-optimal point trades a
+    # real share of modeled joules for latency.  Deterministic fitness and
+    # modeled watts: byte-stable, tight margins
+    "ga_offload.pareto_front_size":           ("abs", "higher", 2.0),
+    "ga_offload.pareto_energy_gain_pct":      ("abs", "higher", 15.0),
     # function-block gene must keep beating the best loop/span-only plan
     # on the attention stack (same-run ratio, both plans measured back to
     # back; the gap is ~1.3x, so a 25-point margin absorbs timing noise

@@ -319,8 +319,15 @@ class Evaluator:
                  executor: Optional[Any] = None,
                  dispatch_fn: Optional[Callable[[tuple], Evaluation]] = None,
                  phenotype_key: Optional[Callable[[tuple], Any]] = None,
-                 compile_workers: Optional[int] = None):
+                 compile_workers: Optional[int] = None,
+                 annotate: Optional[Callable[[Evaluation], Evaluation]]
+                 = None):
         self.fitness_fn = fitness_fn
+        # post-measurement hook: enrich an Evaluation's detail dict before it
+        # is cached/persisted (multi-objective search stamps per-objective
+        # fields — energy_j, transfer_bytes — so journal rows carry them;
+        # see repro.core.objectives.annotate_objectives)
+        self.annotate = annotate
         self.workers = max(0, int(workers))
         self.compile_workers = max(0, int(compile_workers or 0))
         self._key = phenotype_key or (lambda bits: bits)
@@ -390,6 +397,11 @@ class Evaluator:
     # -- measurement --------------------------------------------------------
 
     def _record(self, bits: tuple, ev: Evaluation) -> Evaluation:
+        if self.annotate is not None:
+            try:
+                ev = self.annotate(ev)
+            except Exception:  # noqa: BLE001 — annotation must never cost a
+                pass           # measurement; the objective fn recomputes
         score = None
         if self.surrogate is not None and math.isfinite(ev.time_s):
             try:

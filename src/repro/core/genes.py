@@ -50,18 +50,30 @@ class Destination:
     # cost model for cost-only destinations (seconds):
     launch_overhead_s: float = 0.0     # fixed per-region dispatch/transfer cost
     per_trip_s: float = 0.0            # modeled cost per (static) loop trip
+    # energy model (repro.core.objectives): watts this destination draws
+    # while it executes a region's trips — the modeled prior behind the
+    # ``energy`` objective on hosts with no power counters.  The shipped
+    # values are deliberately *different* per destination so mixed-
+    # destination Pareto fronts exist on CPU-only CI.
+    active_power_w: float = 0.0
 
 
-CPU = Destination("cpu", executable=True, impl_index=0)
-GPU = Destination("gpu", executable=True, impl_index=1)
+CPU = Destination("cpu", executable=True, impl_index=0,
+                  active_power_w=65.0)
+GPU = Destination("gpu", executable=True, impl_index=1,
+                  active_power_w=250.0)
 #: FPGA stub: no backend yet — reference execution plus a modeled cost of a
-#: PCIe-attached reconfigurable card (fixed DMA/launch latency, cheap trips).
+#: PCIe-attached reconfigurable card (fixed DMA/launch latency, cheap trips,
+#: low board power: the paper's power-saving destination).
 FPGA_STUB = Destination("fpga_stub", executable=False, impl_index=0,
-                        launch_overhead_s=2e-4, per_trip_s=5e-8)
+                        launch_overhead_s=2e-4, per_trip_s=5e-8,
+                        active_power_w=30.0)
 #: variant destinations: same accelerator, different *implementation* of the
 #: site (the kernel-substitution alphabet — a gene picks which code runs).
-GPU_FUSED = Destination("gpu_fused", executable=True, impl_index=1)
-GPU_PALLAS = Destination("gpu_pallas", executable=True, impl_index=2)
+GPU_FUSED = Destination("gpu_fused", executable=True, impl_index=1,
+                        active_power_w=250.0)
+GPU_PALLAS = Destination("gpu_pallas", executable=True, impl_index=2,
+                         active_power_w=220.0)
 
 _DESTINATIONS: dict[str, Destination] = {
     d.name: d for d in (CPU, GPU, FPGA_STUB, GPU_FUSED, GPU_PALLAS)

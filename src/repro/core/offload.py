@@ -126,7 +126,8 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
               cache_extra: str = "",
               evaluator: Optional[Evaluator] = None,
               seeds: Sequence[Sequence[int]] = (),
-              impl_resolver: Optional[Callable[[str, Any], Any]] = None
+              impl_resolver: Optional[Callable[[str, Any], Any]] = None,
+              objective_fn: Optional[Callable[[Evaluation], tuple]] = None
               ) -> tuple[GeneCoding, GAResult]:
     """Run the GA over a graph's unclaimed offloadable regions.
 
@@ -149,10 +150,25 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
     ``impl_resolver`` (usually ``FitnessBundle.impl_resolver``) folds the
     frontend's bind results into the phenotype key, so chromosomes whose
     variants fall back to the same implementation share one measurement.
+
+    A multi-axis ``cfg.objectives`` tuple (e.g.
+    :data:`repro.core.objectives.OBJECTIVES`) switches ``run_ga`` to
+    NSGA-style Pareto selection: an objective-vector function is built from
+    the graph/coding (or taken from ``objective_fn``), every new
+    measurement is annotated with per-objective detail fields so the
+    journal learns them, and — with a ``cache_dir`` — one ridge surrogate
+    per extra objective is fitted and persisted after the search (screening
+    itself stays latency-ranked).
     """
+    from repro.core import objectives as objmod
+
     cfg = ga_cfg or GAConfig()
     if coding is None:
         coding = coding_from_graph(graph, exclude=exclude)
+    multi = len(tuple(cfg.objectives)) > 1 or objective_fn is not None
+    if multi and objective_fn is None:
+        objective_fn = objmod.make_objective_fn(graph, coding,
+                                                cfg.objectives)
     owns = evaluator is None
     pool: Optional[ProcessPool] = None
     fingerprint = ""
@@ -196,7 +212,9 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
                       surrogate=surrogate, screen_top_k=top_k,
                       phenotype_key=phenotype_key(coding,
                                                   resolver=impl_resolver),
-                      compile_workers=cfg.compile_workers)
+                      compile_workers=cfg.compile_workers,
+                      annotate=objmod.annotate_objectives(graph, coding)
+                      if multi else None)
         if cfg.pool is not None:
             pool = ProcessPool(cfg.pool, workers=cfg.workers or None)
             evaluator = Evaluator(None, **pool.evaluator_kwargs(), **common)
@@ -204,7 +222,8 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
             evaluator = Evaluator(fitness_fn, workers=cfg.workers, **common)
     try:
         ga = run_ga(coding.length, fitness_fn, cfg, log=log,
-                    evaluator=evaluator, arity=coding.arity, seeds=seeds)
+                    evaluator=evaluator, arity=coding.arity, seeds=seeds,
+                    objective_fn=objective_fn if multi else None)
         ga = dataclasses.replace(ga, surrogate_kind=surrogate_kind)
         if owns and cfg.cache_dir and ga.screened_out == 0:
             # only unscreened searches are evidence: a screened search
@@ -215,6 +234,16 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
                                ga.surrogate_rank_corr,
                                horizon_s=cfg.auto_screen_horizon_s,
                                kind=surrogate_kind)
+        if owns and multi and cfg.cache_dir and cfg.fit_surrogate:
+            # per-objective ridge fits from the (now annotated) journal —
+            # persisted for inspection/screening evidence, one model per
+            # extra objective from the same measurement rows
+            from repro.core.surrogate import fit_surrogate
+            for obj in tuple(cfg.objectives):
+                if obj != "latency":
+                    fit_surrogate(graph, coding, cfg.cache_dir, fingerprint,
+                                  min_records=cfg.surrogate_min_records,
+                                  objective=obj)
     finally:
         if owns:
             evaluator.close()
@@ -421,6 +450,52 @@ class OffloadResult:
             "compile_overlap_saved_s": g.compile_overlap_saved_s,
         }
 
+    @property
+    def front(self) -> list[Evaluation]:
+        """The search's Pareto-optimal Evaluations (multi-objective mode;
+        single-objective searches report just the best)."""
+        return self.ga.front
+
+    def front_summary(self) -> list[dict]:
+        """JSON-safe Pareto front: one dict per non-dominated pattern with
+        its bits and per-objective values (persisted into PlanRecord so a
+        service can swap operating points without a new search).  Latency
+        comes from the measurement; energy/transfer prefer the annotated
+        detail fields and fall back to the objective models."""
+        from repro.core import objectives as objmod
+
+        out = []
+        for ev in self.ga.front:
+            vals = objmod.objective_values(ev, self.graph, self.coding)
+            out.append({
+                "bits": [int(v) for v in ev.bits],
+                "latency_s": float(vals[0]),
+                "energy_j": float(vals[1]),
+                "transfer_bytes": float(vals[2]),
+            })
+        return out
+
+    def operating_point(self, objective: str = "latency") -> Evaluation:
+        """The front point optimal on one axis (an operating point a
+        service picks per traffic level: ``latency`` under load,
+        ``energy`` when idle).  Ties break toward lower latency; an empty
+        front (single-objective search) returns ``best``."""
+        from repro.core import objectives as objmod
+
+        if not self.ga.front:
+            return self.best
+        try:
+            ax = objmod.OBJECTIVES.index(objective)
+        except ValueError:
+            raise ValueError(f"unknown objective {objective!r}; known: "
+                             f"{objmod.OBJECTIVES}") from None
+        key = {}
+        for ev in self.ga.front:
+            key[id(ev)] = objmod.objective_values(ev, self.graph,
+                                                  self.coding)
+        return min(self.ga.front,
+                   key=lambda e: (key[id(e)][ax], key[id(e)][0]))
+
     def summary(self) -> dict:
         return {
             "frontend": self.frontend,
@@ -431,6 +506,7 @@ class OffloadResult:
             "verified": self.verification.get("verified", False),
             "substituted": dict(self.report.substituted) if self.report
             else {},
+            "front_size": len(self.ga.front),
             **self.savings,
         }
 
@@ -602,7 +678,8 @@ class Offloader:
             res = self._search(ctx, ga, extra_seeds)
             sp.set(best_time_s=res.best.time_s,
                    evaluations=res.ga.evaluations,
-                   generations=len(res.ga.history))
+                   generations=len(res.ga.history),
+                   front_size=len(res.ga.front))
             return res
 
     def _search(self, ctx: PlanContext, ga: Optional[GAConfig],

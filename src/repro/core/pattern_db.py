@@ -138,24 +138,56 @@ class PatternDB:
         self.precision_dir = precision_dir
 
     # --- match precision from verifier outcomes -----------------------------
-    def precision(self, pattern: str,
-                  cache_dir: Optional[str] = None) -> Optional[float]:
-        """Fraction of this pattern's *ran* substitutions the verifier
-        accepted: ``ok / (ok + verify_fail + error)`` over the precision
-        journal.  ``bind_fail`` records (the variant never ran, so the
-        verifier said nothing) don't enter the denominator.  None when no
-        journal directory is configured or the pattern has no ran outcomes
-        yet — "no evidence", distinct from 0.0 ("all failed")."""
+    def precision_evidence(self, pattern: str,
+                           cache_dir: Optional[str] = None
+                           ) -> tuple[Optional[float], int]:
+        """(precision, ran-outcome count) for a pattern — the precision is
+        the fraction of *ran* substitutions the verifier accepted,
+        ``ok / (ok + verify_fail + error)``; ``bind_fail`` records (the
+        variant never ran, so the verifier said nothing) don't enter the
+        denominator.  ``(None, 0)`` when no journal directory is configured
+        or the pattern has no ran outcomes yet — "no evidence", distinct
+        from 0.0 ("all failed")."""
         d = cache_dir or self.precision_dir
         if not d:
-            return None
+            return None, 0
         counts = load_pattern_precision(d).get(pattern)
         if not counts:
-            return None
+            return None, 0
         ran = sum(counts.get(o, 0) for o in ("ok", "verify_fail", "error"))
         if ran == 0:
-            return None
-        return counts.get("ok", 0) / ran
+            return None, 0
+        return counts.get("ok", 0) / ran, ran
+
+    def precision(self, pattern: str,
+                  cache_dir: Optional[str] = None) -> Optional[float]:
+        """Precision alone; see :meth:`precision_evidence`."""
+        return self.precision_evidence(pattern, cache_dir)[0]
+
+    #: ran outcomes a pattern needs before precision feedback touches its
+    #: threshold — the flakiness floor: one bad measurement (or two) can
+    #: never blacklist a pattern by itself.
+    PRECISION_MIN_EVIDENCE = 3
+    #: how much a fully-failing pattern's threshold tightens: effective
+    #: threshold = threshold + (1 - precision) * PRECISION_TIGHTEN ...
+    PRECISION_TIGHTEN = 0.12
+    #: ... capped here, so a pattern stays matchable by a near-perfect
+    #: similarity score even when every recorded substitution failed
+    #: (measurement remains the final arbiter; feedback only raises the
+    #: evidence bar, it never hard-blacklists).
+    PRECISION_CEILING = 0.98
+
+    def effective_threshold(self, rec: PatternRecord) -> float:
+        """The record's similarity threshold with precision feedback: a
+        pattern whose substitutions keep failing verification demands a
+        stricter match (低精度パターンは厳しめに).  No journal, no
+        evidence, or fewer than :data:`PRECISION_MIN_EVIDENCE` ran
+        outcomes → the static threshold, unchanged."""
+        p, ran = self.precision_evidence(rec.name)
+        if p is None or ran < self.PRECISION_MIN_EVIDENCE or p >= 1.0:
+            return rec.threshold
+        return min(self.PRECISION_CEILING,
+                   rec.threshold + (1.0 - p) * self.PRECISION_TIGHTEN)
 
     #: a similarity match must beat the runner-up pattern by this margin,
     #: otherwise it is ambiguous (generic loop scaffolding looks like every
@@ -181,7 +213,10 @@ class PatternDB:
                 scores.append((sim.similarity(region.feature_vector, vec), rec))
         scores.sort(key=lambda sr: -sr[0])
         for i, (score, rec) in enumerate(scores):
-            thr = min_similarity if min_similarity is not None else rec.threshold
+            # precision feedback: an explicit caller override always wins;
+            # otherwise low-precision patterns demand a stricter score
+            thr = min_similarity if min_similarity is not None \
+                else self.effective_threshold(rec)
             if score < thr:
                 continue
             runner_up = scores[i + 1][0] if i + 1 < len(scores) else 0.0
@@ -231,7 +266,7 @@ class PatternDB:
                 continue
             score = sim.similarity(merged, vec)
             thr = (min_similarity if min_similarity is not None
-                   else rec.threshold)
+                   else self.effective_threshold(rec))
             if score >= thr and (best is None or score > best.score):
                 best = Match(rec, "similarity", score, regions[0].name,
                              needs_confirmation=rec.interface_changes)

@@ -214,6 +214,12 @@ class FittedSurrogate:
     n_val: int = 0                        # held-out rows (0 = LOO was used)
     fingerprint: str = ""
     kind: str = "fitted"
+    objective: str = "latency"            # which journal column the fit
+                                          # predicts: measured seconds
+                                          # ("latency") or a per-objective
+                                          # detail field ("energy",
+                                          # "transfer") — one ridge model
+                                          # per objective, same journal
 
     def __call__(self, bits: tuple) -> float:
         x = (self.extractor(bits) - self.mean) / self.scale
@@ -238,18 +244,32 @@ class FittedSurrogate:
                 for n, c in zip(self.extractor.feature_names, self.coef)}
 
 
-def _journal_rows(cache_dir: str, fingerprint: str,
-                  coding: GeneCoding) -> list[tuple[tuple, float]]:
-    """(bits, measured seconds) for every finite valid measurement of this
-    fingerprint whose chromosome fits the current coding."""
+#: objective name -> journal detail field holding its measured value
+#: (``None`` = the row's ``time_s`` itself).  Rows written before PR 9
+#: carry no per-objective fields; they simply drop out of non-latency
+#: fits (graceful latency-only degradation) instead of poisoning them.
+_OBJECTIVE_FIELDS: dict[str, Optional[str]] = {
+    "latency": None, "energy": "energy_j", "transfer": "transfer_bytes",
+}
+
+
+def _journal_rows(cache_dir: str, fingerprint: str, coding: GeneCoding,
+                  objective: str = "latency") -> list[tuple[tuple, float]]:
+    """(bits, measured objective value) for every finite valid measurement
+    of this fingerprint whose chromosome fits the current coding.  Unknown
+    objective names read the detail field of that name directly."""
     from repro.core.evaluator import MeasurementCache
 
+    field_name = _OBJECTIVE_FIELDS.get(objective, objective)
     rows: list[tuple[tuple, float]] = []
     for bits, ev in MeasurementCache(cache_dir, fingerprint).load().items():
-        if (ev.valid and math.isfinite(ev.time_s)
+        if not (ev.valid and math.isfinite(ev.time_s)
                 and len(bits) == coding.length
                 and all(0 <= int(v) < coding.arity for v in bits)):
-            rows.append((bits, float(ev.time_s)))
+            continue
+        y = ev.time_s if field_name is None else ev.detail.get(field_name)
+        if isinstance(y, (int, float)) and math.isfinite(y):
+            rows.append((bits, float(y)))
     return rows
 
 
@@ -259,7 +279,8 @@ def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
                   min_records: int = 10, ridge: float = 1e-2,
                   var_bytes: Optional[dict] = None,
                   base_impl: Optional[dict] = None,
-                  persist: bool = True) -> Optional[FittedSurrogate]:
+                  persist: bool = True,
+                  objective: str = "latency") -> Optional[FittedSurrogate]:
     """Fit a ridge regression of chromosome features against the persisted
     measurement journal for ``fingerprint``.
 
@@ -268,6 +289,12 @@ def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
     ranking signal.  Otherwise the fit is journaled to
     ``{cache_dir}/surrogate_fit.jsonl`` (beside ``search_meta.jsonl``) and
     returned with both models' journal rank correlations attached.
+
+    ``objective`` selects the journal column predicted: the default
+    ``"latency"`` fits measured seconds (the historical behavior); the
+    multi-objective search additionally fits ``"energy"`` / ``"transfer"``
+    against the per-objective detail fields the annotate hook journals —
+    one ridge model per objective from the same measurement rows.
     """
     from repro.core.evaluator import transfer_cost_surrogate
 
@@ -275,7 +302,7 @@ def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
         prior = transfer_cost_surrogate(graph, coding,
                                         var_bytes=var_bytes,
                                         base_impl=base_impl)
-    rows = _journal_rows(cache_dir, fingerprint, coding)
+    rows = _journal_rows(cache_dir, fingerprint, coding, objective)
     if len(rows) < max(3, int(min_records)):
         return None
     extractor = FeatureExtractor(graph, coding, prior,
@@ -337,7 +364,7 @@ def fit_surrogate(graph: RegionGraph, coding: GeneCoding, cache_dir: str,
         extractor=extractor, coef=coef, intercept=y_mean,
         mean=mean, scale=scale, n_records=len(rows),
         rank_corr=rank_corr, static_rank_corr=static_rank_corr,
-        n_val=n_val, fingerprint=fingerprint)
+        n_val=n_val, fingerprint=fingerprint, objective=objective)
     if persist:
         _save_fit(cache_dir, fitted)
     return fitted
@@ -355,6 +382,7 @@ def _save_fit(cache_dir: str, fit: FittedSurrogate) -> None:
     journal = Journal(os.path.join(cache_dir, SURROGATE_FIT_FILE))
     rec = {
         "fingerprint": fit.fingerprint,
+        "objective": fit.objective,
         "n_records": fit.n_records,
         "n_val": fit.n_val,
         "rank_corr": fit.rank_corr if math.isfinite(fit.rank_corr) else None,
@@ -372,20 +400,24 @@ def _save_fit(cache_dir: str, fit: FittedSurrogate) -> None:
             return
         journal.rewrite(
             newest_per_key(journal.records(),
-                           key=lambda r: r.get("fingerprint"),
+                           key=lambda r: (r.get("fingerprint"),
+                                          r.get("objective", "latency")),
                            max_records=_FIT_MAX_LINES),
             locked=False)
 
 
-def load_fit(cache_dir: str, fingerprint: str) -> Optional[dict]:
-    """Most recent persisted fit record for a fingerprint (coefficients by
-    feature name, journal size, both rank correlations) — the inspection
-    entry point; returns None when nothing was ever fitted."""
+def load_fit(cache_dir: str, fingerprint: str,
+             objective: str = "latency") -> Optional[dict]:
+    """Most recent persisted fit record for a (fingerprint, objective)
+    (coefficients by feature name, journal size, both rank correlations) —
+    the inspection entry point; returns None when nothing was ever fitted.
+    Records from before per-objective fits count as latency fits."""
     from repro.core.journal import Journal
 
     out: Optional[dict] = None
     for rec in Journal(os.path.join(cache_dir, SURROGATE_FIT_FILE)).records():
-        if rec.get("fingerprint") == fingerprint:
+        if rec.get("fingerprint") == fingerprint \
+                and rec.get("objective", "latency") == objective:
             out = rec
     if out is not None:
         out = dict(out)

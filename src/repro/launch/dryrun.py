@@ -31,6 +31,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.plans import production_plan, tuned_plan
 from repro.models.api import Model, build_model
 from repro.models.plan import ExecPlan
+from repro.obs import trace as obs_trace
 from repro.obs.log import get_logger, setup as setup_logging
 from repro.optim import OptimizerConfig, adamw_init
 from repro.optim.schedule import make_schedule
@@ -221,8 +222,16 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--resume", action="store_true",
                     help="skip cells already recorded ok/skip")
+    ap.add_argument("--trace", default="",
+                    help="write an obs trace journal to this path "
+                         "(render with repro.launch.obsreport)")
     args = ap.parse_args()
 
+    with obs_trace.maybe_tracing(args.trace or None):
+        _run(args)
+
+
+def _run(args) -> None:
     archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
     shapes = [s.name for s in ALL_SHAPES] if args.all or not args.shape \
         else [args.shape]

@@ -23,6 +23,7 @@ from repro.core.frontends import module_frontend
 from repro.data import Batcher, DataConfig, SyntheticLMDataset
 from repro.models import build_model
 from repro.models.plan import ExecPlan
+from repro.obs import trace as obs_trace
 from repro.obs.log import get_logger, setup as setup_logging
 from repro.optim import OptimizerConfig
 from repro.optim.schedule import make_schedule
@@ -46,8 +47,16 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--no-reduced", action="store_true",
                     help="use the FULL config (needs real accelerators)")
+    ap.add_argument("--trace", default="",
+                    help="write an obs trace journal to this path "
+                         "(render with repro.launch.obsreport)")
     args = ap.parse_args()
 
+    with obs_trace.maybe_tracing(args.trace or None):
+        _run(args)
+
+
+def _run(args) -> None:
     cfg = get_config(args.arch)
     if not args.no_reduced:
         cfg = cfg.reduced()

@@ -15,6 +15,7 @@ fingerprint, with no planner in the loop.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import time
 from dataclasses import dataclass
@@ -69,6 +70,10 @@ class Server:
         self.params = params
         self.cfg = cfg or ServeConfig()
         self._bound = _Bound(model, plan)
+        # request-arrival timestamps for traffic_hz(): the signal the
+        # planning service's operating-point policy reads (latency-optimal
+        # under load, energy-optimal idle)
+        self._req_times: collections.deque = collections.deque(maxlen=256)
 
     @classmethod
     def from_store(cls, model: Model, params, store, fingerprint: str,
@@ -109,6 +114,8 @@ class Server:
         tokens = inputs["tokens"]
         b, s = tokens.shape
         t0 = time.perf_counter()
+        self._req_times.append(t0)
+        obs_metrics.gauge("serve.traffic_hz").set(self.traffic_hz())
         with obs_trace.span("serve.generate", batch=b, prompt_len=s,
                             max_new=max_new):
             cap = s + max_new + (self.model.cfg.vision_patches or 0)
@@ -128,6 +135,15 @@ class Server:
         obs_metrics.histogram("serve.generate_seconds").observe(
             time.perf_counter() - t0)
         return out
+
+    def traffic_hz(self, window_s: float = 60.0) -> float:
+        """Recent request rate (requests/s over the trailing window) — feed
+        it to :meth:`repro.service.service.PlanService.select_for_traffic`
+        to pick the right Pareto operating point for the current load."""
+        if window_s <= 0:
+            return 0.0
+        cutoff = time.perf_counter() - float(window_s)
+        return sum(1 for t in self._req_times if t >= cutoff) / float(window_s)
 
     def _sample(self, logits, key, i):
         lg = logits[:, -1].astype(jnp.float32)

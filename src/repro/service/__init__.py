@@ -4,8 +4,9 @@ with atomic hot-swap.  See ``docs/api.md`` ("The planning service")."""
 from repro.service.service import (PlanService, ServedPlan, ServiceConfig,
                                    ServiceStats)
 from repro.service.store import (PlanMismatchError, PlanRecord, PlanStore,
+                                 env_matches, environment_fingerprint,
                                  record_from_result)
 
 __all__ = ["PlanService", "ServedPlan", "ServiceConfig", "ServiceStats",
            "PlanMismatchError", "PlanRecord", "PlanStore",
-           "record_from_result"]
+           "env_matches", "environment_fingerprint", "record_from_result"]

@@ -47,7 +47,8 @@ from repro.core.frontends.registry import OffloadConfig
 from repro.core.offload import Offloader, PlanContext
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.service.store import PlanRecord, PlanStore, record_from_result
+from repro.service.store import (PlanRecord, PlanStore, _json_safe,
+                                 env_matches, record_from_result)
 
 __all__ = ["PlanService", "ServedPlan", "ServiceConfig", "ServiceStats"]
 
@@ -65,6 +66,15 @@ class ServiceConfig:
     refine_generations: Optional[int] = None   # GA generations per
                                       # refinement round (None = request's)
     refine_population: Optional[int] = None    # population override, ditto
+    plan_ttl_s: Optional[float] = None  # plan-store TTL: the refinement
+                                      # loop sweeps evict_stale(plan_ttl_s)
+                                      # once per round (deployed/in-flight
+                                      # fingerprints always spared); None
+                                      # disables the sweep
+    busy_hz: float = 1.0              # traffic threshold for
+                                      # select_for_traffic: at/above it the
+                                      # latency-optimal operating point is
+                                      # deployed, below it energy-optimal
 
 
 @dataclass
@@ -80,6 +90,11 @@ class ServiceStats:
     swaps: int = 0           # refinements that hot-swapped a better plan
     rollbacks: int = 0
     evictions: int = 0       # fingerprints dropped by the TTL sweep
+    env_mismatches: int = 0  # warm loads refused because the stored plan
+                             # was measured on different hardware (the
+                             # cross-host reuse fix: re-measured instead)
+    repoints: int = 0        # operating-point swaps served straight from
+                             # the stored Pareto front (no search)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -213,9 +228,11 @@ class PlanService:
                 obs_trace.span("service.admit", frontend=ctx.frontend,
                                fingerprint=ctx.fingerprint) as sp:
             rec = self.store.load(ctx.fingerprint)
-            if rec is not None and rec.sites == ctx.sites \
-                    and rec.destinations == ctx.coding.destinations:
-                # warm path: stored plan fits this program — pure artifact load
+            fits = (rec is not None and rec.sites == ctx.sites
+                    and rec.destinations == ctx.coding.destinations)
+            if fits and env_matches(rec.env):
+                # warm path: stored plan fits this program AND was measured
+                # on this hardware — pure artifact load
                 if "exec_plan" in rec.payload:
                     artifact = self.store.rehydrate(rec)
                 else:
@@ -225,15 +242,29 @@ class PlanService:
                 obs_metrics.counter("service.warm_loads").inc()
                 sp.set(path="warm-load", version=rec.version)
                 return ServedPlan(ctx.fingerprint, rec, artifact, warm=True)
-            res = off.search(ctx)
+            seeds: list[tuple] = []
+            origin = "cold-search"
+            if fits:
+                # cross-host reuse fix: the chromosome fits but the record's
+                # measurements came from different hardware (or an unknown
+                # one) — its times are not evidence here.  Re-verify by
+                # re-measuring, seeded with the foreign winner so a plan
+                # that *does* transfer is found in generation 0
+                with self._lock:
+                    self.stats.env_mismatches += 1
+                obs_metrics.counter("service.env_mismatch").inc()
+                sp.set(env_mismatch=True)
+                origin = "env-remeasure"
+                seeds = [rec.bits]
+            res = off.search(ctx, extra_seeds=seeds)
             with self._lock:
                 self.stats.searches += 1
             obs_metrics.counter("service.searches").inc()
             stored = self.store.put(record_from_result(
                 res, ctx.fingerprint,
-                meta={"origin": "cold-search",
+                meta={"origin": origin,
                       "evaluations": res.ga.evaluations}))
-            sp.set(path="cold-search", version=stored.version)
+            sp.set(path=origin, version=stored.version)
             return ServedPlan(ctx.fingerprint, stored, res.artifact,
                               warm=False)
 
@@ -263,6 +294,75 @@ class PlanService:
     def fingerprints(self) -> tuple[str, ...]:
         with self._lock:
             return tuple(self._entries)
+
+    # -- operating points (the Pareto front, served) -------------------------
+
+    #: objective name -> per-point field in PlanRecord.front
+    _FRONT_FIELDS = {"latency": "latency_s", "energy": "energy_j",
+                     "transfer": "transfer_bytes"}
+
+    def select_operating_point(self, fingerprint: str,
+                               objective: str = "latency") -> ServedPlan:
+        """Deploy the stored Pareto-front point optimal on one axis —
+        **without a new search**: the front was measured when the plan was,
+        so swapping between its points is a pure artifact re-apply plus a
+        store append (ties break toward lower latency; a record with no
+        front, e.g. from a single-objective search, keeps the current
+        plan).  The swap publishes like a refinement hot-swap: immutable
+        plan, single reference assignment, previous retained for rollback.
+        """
+        with self._lock:
+            entry = self._entries.get(fingerprint)
+        if entry is None:
+            raise LookupError(f"fingerprint {fingerprint!r} is not deployed")
+        try:
+            axis = self._FRONT_FIELDS[objective]
+        except KeyError:
+            raise ValueError(
+                f"unknown objective {objective!r}; known: "
+                f"{tuple(self._FRONT_FIELDS)}") from None
+        rec = entry.current.record
+        front = [p for p in rec.front if p.get("bits")]
+        if not front:
+            return entry.current
+        inf = float("inf")
+        point = min(front, key=lambda p: (float(p.get(axis, inf)),
+                                          float(p.get("latency_s", inf))))
+        bits = tuple(int(v) for v in point["bits"])
+        if bits == tuple(rec.bits):
+            return entry.current           # already at that operating point
+        artifact = entry.offloader.apply(entry.ctx, bits)
+        payload: dict = {}
+        from repro.models.plan import ExecPlan
+        if isinstance(artifact, ExecPlan):
+            payload["exec_plan"] = {
+                k: v for k, v in dataclasses.asdict(artifact).items()
+                if isinstance(v, (str, int, float, bool)) or v is None}
+        pattern = {str(k): _json_safe(v)
+                   for k, v in entry.ctx.coding.decode(bits).items()}
+        stored = self.store.put(dataclasses.replace(
+            rec, bits=bits, pattern=pattern, payload=payload,
+            best_time_s=float(point.get("latency_s", inf)),
+            meta={**rec.meta, "origin": "operating-point",
+                  "objective": objective, "repointed_from": rec.version}))
+        new_plan = ServedPlan(fingerprint, stored, artifact, warm=True)
+        with self._lock:
+            entry.previous = entry.current
+            entry.current = new_plan
+            self.stats.repoints += 1
+        obs_metrics.counter("service.repoints", objective=objective).inc()
+        return new_plan
+
+    def select_for_traffic(self, fingerprint: str, traffic_hz: float,
+                           busy_hz: Optional[float] = None) -> ServedPlan:
+        """Traffic-level policy over :meth:`select_operating_point`: under
+        load (>= ``busy_hz`` requests/s, default from ServiceConfig) serve
+        the latency-optimal front point; idle, the energy-optimal one.
+        Feed it :meth:`repro.runtime.serve.Server.traffic_hz`."""
+        thr = self.service_config.busy_hz if busy_hz is None \
+            else float(busy_hz)
+        objective = "latency" if float(traffic_hz) >= thr else "energy"
+        return self.select_operating_point(fingerprint, objective)
 
     # -- store hygiene -------------------------------------------------------
 
@@ -375,6 +475,13 @@ class PlanService:
                         self.refine_once(fp)
                     except Exception:  # noqa: BLE001 — one fingerprint's
                         continue       # bad round must not kill the loop
+                if self.service_config.plan_ttl_s is not None:
+                    # periodic TTL sweep (the evict_stale wiring): deployed
+                    # and in-flight fingerprints are spared by the method
+                    try:
+                        self.evict_stale(self.service_config.plan_ttl_s)
+                    except Exception:  # noqa: BLE001 — hygiene must not
+                        pass           # kill refinement
                 self._refine_stop.wait(sleep_s)
 
         self._refine_thread = threading.Thread(

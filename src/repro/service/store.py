@@ -40,9 +40,43 @@ from repro.core.journal import Journal, newest_per_key
 from repro.core.offload import OffloadResult, Offloader, PlanContext
 
 __all__ = ["PlanRecord", "PlanStore", "PlanMismatchError",
-           "record_from_result"]
+           "environment_fingerprint", "env_matches", "record_from_result"]
 
 PLAN_STORE_FILE = "plan_store.jsonl"
+
+
+def environment_fingerprint() -> dict:
+    """The hardware/runtime identity a plan's measurements are valid on:
+    device kind/count, host cpu count, jax version.  Plans embed measured
+    times from one machine; a warm load elsewhere must re-verify instead of
+    blindly serving them (cross-host plan-reuse fix).  Returns ``{}`` when
+    jax is unavailable — and an empty env always *mismatches*, because an
+    unknown environment is exactly the unsafe case."""
+    try:
+        import jax
+        devs = jax.devices()
+        return {
+            "device_kind": devs[0].device_kind if devs else "",
+            "device_count": len(devs),
+            "cpu_count": int(os.cpu_count() or 0),
+            "jax_version": jax.__version__,
+        }
+    except Exception:  # noqa: BLE001 — no jax / no backend: unknown env
+        return {}
+
+
+def env_matches(recorded: dict, current: Optional[dict] = None) -> bool:
+    """True when a stored plan's environment fingerprint matches the host we
+    are about to serve it on.  A record with no env (pre-PR 9, or captured
+    where jax was absent) never matches — those are the blind-reuse records
+    this check exists to catch."""
+    if not recorded:
+        return False
+    cur = environment_fingerprint() if current is None else current
+    if not cur:
+        return False
+    keys = ("device_kind", "device_count", "cpu_count", "jax_version")
+    return all(recorded.get(k) == cur.get(k) for k in keys)
 
 
 class PlanMismatchError(ValueError):
@@ -69,6 +103,15 @@ class PlanRecord:
                                       # bits, e.g. {"exec_plan": {...}}
     meta: dict = field(default_factory=dict)      # provenance (free-form)
     ts: float = 0.0                   # append time (epoch seconds)
+    env: dict = field(default_factory=dict)       # environment fingerprint
+                                      # the measurements were taken on
+                                      # (environment_fingerprint()); empty
+                                      # = unknown host, treated as mismatch
+    front: tuple = ()                 # Pareto front of the producing search:
+                                      # dicts of {bits, latency_s, energy_j,
+                                      # transfer_bytes} per non-dominated
+                                      # pattern — lets the service swap
+                                      # operating points without a search
 
     @property
     def speedup(self) -> float:
@@ -86,6 +129,8 @@ class PlanRecord:
             if math.isfinite(self.best_time_s) else None
         rec["baseline_time_s"] = self.baseline_time_s \
             if math.isfinite(self.baseline_time_s) else None
+        rec["front"] = [dict(p, bits=[int(v) for v in p.get("bits", ())])
+                        for p in self.front]
         return rec
 
     @classmethod
@@ -106,7 +151,11 @@ class PlanRecord:
             source=str(rec.get("source", "")),
             payload=dict(rec.get("payload") or {}),
             meta=dict(rec.get("meta") or {}),
-            ts=float(rec.get("ts") or 0.0))
+            ts=float(rec.get("ts") or 0.0),
+            env=dict(rec.get("env") or {}),
+            front=tuple(dict(p, bits=tuple(int(v)
+                                           for v in p.get("bits", ())))
+                        for p in rec.get("front") or ()))
 
 
 def _json_safe(value: Any) -> Any:
@@ -147,7 +196,9 @@ def record_from_result(res: OffloadResult, fingerprint: str,
         verified=bool(res.verification.get("verified", False)),
         source=res.graph.source_name,
         payload=payload,
-        meta=dict(meta or {}))
+        meta=dict(meta or {}),
+        env=environment_fingerprint(),
+        front=tuple(res.front_summary()))
 
 
 class PlanStore:

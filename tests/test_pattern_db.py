@@ -110,3 +110,111 @@ def test_persistence_roundtrip(tmp_path):
     assert [r.name for r in db2.records] == [r.name for r in db.records]
     r = _region_from_code(NAIVE_MATMUL)
     assert db2.match_region(r, "python_ast")[0].record.name == "matmul"
+
+
+# ---------------------------------------------------------------------------
+# precision feedback: verifier outcomes tighten a pattern's match threshold
+# (low-precision patterns demand stricter similarity, with an evidence floor
+# so one flaky measurement can never blacklist a pattern)
+# ---------------------------------------------------------------------------
+
+# a heavily edited clone: still matmul-shaped, but scoring between the
+# static threshold (0.88) and the precision ceiling (0.98) — exactly the
+# borderline match the feedback is supposed to gate
+BORDERLINE_MATMUL = """
+for row in range(rows):
+    for col in range(cols):
+        s = 1.0
+        for kk in range(inner):
+            s = s + lhs[row][kk] * rhs[kk][col] + eps
+        out[row][col] = s
+        acc[row] = acc[row] + s
+"""
+
+
+def _db_with_journal(tmp_path):
+    from repro.core.pattern_db import PatternDB
+    return PatternDB(default_db().records, precision_dir=str(tmp_path))
+
+
+def test_precision_feedback_respects_evidence_floor(tmp_path):
+    from repro.core.pattern_db import record_pattern_outcome
+    db = _db_with_journal(tmp_path)
+    rec = next(r for r in db.records if r.name == "matmul")
+    # no journal entries: no evidence, static threshold
+    assert db.precision_evidence("matmul") == (None, 0)
+    assert db.effective_threshold(rec) == rec.threshold
+    # one or two failures stay below PRECISION_MIN_EVIDENCE: unchanged
+    for _ in range(db.PRECISION_MIN_EVIDENCE - 1):
+        record_pattern_outcome(str(tmp_path), "matmul", "kernel",
+                               "verify_fail")
+        assert db.effective_threshold(rec) == rec.threshold
+    # the third ran outcome crosses the floor: threshold tightens
+    record_pattern_outcome(str(tmp_path), "matmul", "kernel", "verify_fail")
+    assert db.precision_evidence("matmul") == (0.0, 3)
+    assert db.effective_threshold(rec) == pytest.approx(
+        min(db.PRECISION_CEILING,
+            rec.threshold + db.PRECISION_TIGHTEN))
+
+
+def test_precision_feedback_scales_caps_and_ignores_bind_fail(tmp_path):
+    from repro.core.pattern_db import record_pattern_outcome
+    db = _db_with_journal(tmp_path)
+    matmul = next(r for r in db.records if r.name == "matmul")
+    rms = next(r for r in db.records if r.name == "rmsnorm")
+    # 50% precision: halfway tightening
+    for outcome in ("ok", "ok", "verify_fail", "error"):
+        record_pattern_outcome(str(tmp_path), "matmul", "kernel", outcome)
+    assert db.effective_threshold(matmul) == pytest.approx(
+        matmul.threshold + 0.5 * db.PRECISION_TIGHTEN)
+    # bind_fail records never enter the denominator (nothing ran)
+    record_pattern_outcome(str(tmp_path), "matmul", "kernel", "bind_fail")
+    assert db.precision_evidence("matmul") == (0.5, 4)
+    # a fully-failing pattern caps at the ceiling, not a hard blacklist
+    for _ in range(4):
+        record_pattern_outcome(str(tmp_path), "rmsnorm", "fused",
+                               "verify_fail")
+    assert db.effective_threshold(rms) == pytest.approx(db.PRECISION_CEILING)
+    assert db.effective_threshold(rms) < 1.0
+    # an all-ok pattern keeps its static threshold exactly
+    for _ in range(4):
+        record_pattern_outcome(str(tmp_path), "fft", "lib", "ok")
+    fft = next(r for r in db.records if r.name == "fft")
+    assert db.effective_threshold(fft) == fft.threshold
+
+
+def test_precision_feedback_gates_borderline_match(tmp_path):
+    from repro.core.pattern_db import record_pattern_outcome
+    db = _db_with_journal(tmp_path)
+    r = _region_from_code(BORDERLINE_MATMUL)
+    # healthy pattern: the borderline clone matches
+    before = db.match_region(r, "python_ast")
+    assert before and before[0].record.name == "matmul"
+    assert 0.88 < before[0].score < 0.98
+    # after enough verifier failures the same region no longer matches it
+    for _ in range(db.PRECISION_MIN_EVIDENCE):
+        record_pattern_outcome(str(tmp_path), "matmul", "kernel",
+                               "verify_fail")
+    after = db.match_region(r, "python_ast")
+    assert not any(m.record.name == "matmul" for m in after)
+    # an explicit caller override always wins over the feedback
+    forced = db.match_region(r, "python_ast", min_similarity=0.9)
+    assert forced and forced[0].record.name == "matmul"
+    # and the near-perfect clone still clears even the tightened bar
+    # (measurement stays the final arbiter; feedback only raises the
+    # evidence bar, it never hard-blacklists)
+    naive = db.match_region(_region_from_code(NAIVE_MATMUL), "python_ast")
+    assert naive and naive[0].record.name == "matmul"
+
+
+def test_default_db_without_journal_is_unchanged(tmp_path):
+    from repro.core.pattern_db import record_pattern_outcome
+    # outcomes recorded somewhere on disk don't affect a DB that was never
+    # pointed at that journal (default_db has no precision_dir)
+    record_pattern_outcome(str(tmp_path), "matmul", "kernel", "verify_fail")
+    db = default_db()
+    assert db.precision_dir is None
+    rec = next(r for r in db.records if r.name == "matmul")
+    assert db.effective_threshold(rec) == rec.threshold
+    # but the same journal read explicitly reports the evidence
+    assert db.precision_evidence("matmul", str(tmp_path)) == (0.0, 1)

@@ -488,3 +488,212 @@ def test_server_from_store_and_swap_plan_under_generate(tmp_path):
     # registry, not on the plan snapshot: five swap_plan calls later it has
     # kept accumulating (>= the 3 deterministic generate calls above)
     assert _generate_hist_count() >= hist0 + 3
+
+
+# ---------------------------------------------------------------------------
+# cross-host plan reuse: a stored plan measured on different hardware is
+# re-verified by re-measurement instead of blindly reused
+# ---------------------------------------------------------------------------
+
+
+def test_environment_fingerprint_and_matching():
+    from repro.service import env_matches, environment_fingerprint
+
+    env = environment_fingerprint()
+    assert set(env) == {"device_kind", "device_count", "cpu_count",
+                        "jax_version"}
+    assert env_matches(env)
+    # an empty / missing fingerprint is the unsafe legacy case: mismatch
+    assert not env_matches({})
+    assert not env_matches({"device_kind": env["device_kind"]})
+    foreign = dict(env, device_kind="tpu-v99", device_count=4096)
+    assert not env_matches(foreign)
+    assert env_matches(foreign, current=foreign)
+
+
+def test_env_mismatch_remeasures_instead_of_warm_load(tmp_path):
+    import dataclasses
+
+    cfg = _ir_config()
+    with PlanService(str(tmp_path), config=cfg) as svc:
+        plan = svc.plan(_ir_graph())
+        fp = plan.fingerprint
+    assert plan.record.env  # searches stamp the host fingerprint
+
+    # tamper: pretend the stored plan was measured on foreign hardware
+    store = PlanStore(str(tmp_path))
+    rec = store.load(fp)
+    store.put(dataclasses.replace(
+        rec, env=dict(rec.env, device_kind="tpu-v99", device_count=4096)))
+
+    with PlanService(str(tmp_path), config=cfg) as svc2:
+        plan2 = svc2.plan(_ir_graph())
+        # the chromosome fits but its measurements are not evidence here:
+        # a seeded re-search ran, no blind warm load
+        assert not plan2.warm
+        assert svc2.stats.env_mismatches == 1
+        assert svc2.stats.searches == 1 and svc2.stats.warm_loads == 0
+        assert plan2.record.meta["origin"] == "env-remeasure"
+
+    # the re-measured head now carries THIS host's env: warm loads resume
+    with PlanService(str(tmp_path), config=cfg) as svc3:
+        plan3 = svc3.plan(_ir_graph())
+        assert plan3.warm
+        assert svc3.stats.env_mismatches == 0 and svc3.stats.searches == 0
+
+
+def test_pre_env_records_always_remeasure(tmp_path):
+    import dataclasses
+
+    cfg = _ir_config()
+    with PlanService(str(tmp_path), config=cfg) as svc:
+        fp = svc.plan(_ir_graph()).fingerprint
+    store = PlanStore(str(tmp_path))
+    store.put(dataclasses.replace(store.load(fp), env={}))   # pre-PR-9 record
+    with PlanService(str(tmp_path), config=cfg) as svc2:
+        plan = svc2.plan(_ir_graph())
+        assert not plan.warm and svc2.stats.env_mismatches == 1
+
+
+# ---------------------------------------------------------------------------
+# operating points: the persisted Pareto front is served without a search
+# ---------------------------------------------------------------------------
+
+
+def _mo_ir_config(**over):
+    from repro.core.genes import EXTENDED_ALPHABET
+    from repro.core.objectives import OBJECTIVES
+
+    def speedup(values) -> Evaluation:
+        t = 1.0 - 0.12 * sum(int(v) == 1 for v in values)
+        return Evaluation(tuple(values), t, True)
+
+    ga = over.pop("ga", GAConfig(population=8, generations=2, seed=0,
+                                 objectives=OBJECTIVES))
+    over.setdefault("fitness_fn", speedup)
+    over.setdefault("destinations", EXTENDED_ALPHABET)
+    return OffloadConfig(frontend="ir", ga=ga, **over)
+
+
+def test_select_operating_point_swaps_without_search(tmp_path):
+    with PlanService(str(tmp_path), config=_mo_ir_config()) as svc:
+        plan = svc.plan(_ir_graph())
+        fp = plan.fingerprint
+        assert len(plan.record.front) >= 2
+        searches = svc.stats.searches
+
+        # already latency-optimal (the GA best): a no-op, not a repoint
+        lat = svc.select_operating_point(fp, "latency")
+        assert lat is plan and svc.stats.repoints == 0
+
+        en = svc.select_operating_point(fp, "energy")
+        assert svc.stats.searches == searches, "repoint must not search"
+        assert svc.stats.repoints == 1
+        assert en.record.bits != lat.record.bits
+        assert en.record.meta["origin"] == "operating-point"
+        assert en.record.meta["objective"] == "energy"
+        assert en.version > lat.version          # persisted as a new head
+        assert svc.current(fp) is en
+        # the energy point trades latency for joules
+        en_pt = min(plan.record.front, key=lambda p: p["energy_j"])
+        assert en.record.bits == tuple(en_pt["bits"])
+        assert en.record.best_time_s >= lat.record.best_time_s
+
+        # swap back: rollback target retained, still no search
+        back = svc.select_operating_point(fp, "latency")
+        assert back.record.bits == lat.record.bits
+        assert svc.stats.searches == searches and svc.stats.repoints == 2
+
+        with pytest.raises(ValueError):
+            svc.select_operating_point(fp, "carbon")
+        with pytest.raises(LookupError):
+            svc.select_operating_point("no-such-fp")
+
+
+def test_select_for_traffic_policy(tmp_path):
+    svc_cfg = ServiceConfig(busy_hz=2.0)
+    with PlanService(str(tmp_path), config=_mo_ir_config(),
+                     service=svc_cfg) as svc:
+        fp = svc.plan(_ir_graph()).fingerprint
+        busy = svc.select_for_traffic(fp, traffic_hz=10.0)
+        idle = svc.select_for_traffic(fp, traffic_hz=0.1)
+        assert busy.record.bits != idle.record.bits
+        assert idle.record.meta["objective"] == "energy"
+        # threshold boundary: at busy_hz the latency point serves
+        again = svc.select_for_traffic(fp, traffic_hz=2.0)
+        assert again.record.bits == busy.record.bits
+        # explicit threshold override wins over ServiceConfig
+        forced = svc.select_for_traffic(fp, traffic_hz=1.0, busy_hz=0.5)
+        assert forced.record.bits == busy.record.bits
+
+
+def test_single_objective_record_has_no_front_and_keeps_plan(tmp_path):
+    with PlanService(str(tmp_path), config=_ir_config()) as svc:
+        plan = svc.plan(_ir_graph())
+        # single-objective search: a one-point front (the best) persists,
+        # so every objective resolves to the deployed plan — no swap
+        assert len(plan.record.front) == 1
+        same = svc.select_operating_point(plan.fingerprint, "energy")
+        assert same.record.bits == plan.record.bits
+        assert svc.stats.repoints == 0
+
+
+def test_server_traffic_hz_tracks_request_rate():
+    server = Server.__new__(Server)          # rate window only, no model
+    import collections
+    server._req_times = collections.deque(maxlen=256)
+    assert server.traffic_hz() == 0.0
+    now = time.perf_counter()
+    server._req_times.extend([now - 0.5, now - 0.2, now - 0.1])
+    assert server.traffic_hz(window_s=60.0) == pytest.approx(3 / 60.0)
+    assert server.traffic_hz(window_s=0.0) == 0.0
+    # requests older than the window age out of the rate
+    server._req_times.appendleft(now - 120.0)
+    assert server.traffic_hz(window_s=60.0) == pytest.approx(3 / 60.0)
+
+
+# ---------------------------------------------------------------------------
+# TTL eviction: the background refinement loop sweeps the store
+# ---------------------------------------------------------------------------
+
+
+def test_refinement_loop_runs_ttl_sweep(tmp_path):
+    from repro.core import RegionGraph
+
+    def graph(tag):
+        g = _ir_graph()
+        return RegionGraph(list(g.regions), "ir", f"toy_{tag}")
+
+    cfg = _ir_config()
+    with PlanService(str(tmp_path), config=cfg) as seeder:
+        fp_live = seeder.plan(graph("live")).fingerprint
+        fp_stale = seeder.plan(graph("stale")).fingerprint
+
+    svc = PlanService(str(tmp_path), config=cfg,
+                      service=ServiceConfig(plan_ttl_s=0.2,
+                                            refine_generations=1,
+                                            refine_population=2))
+    with svc:
+        svc.plan(graph("live"))              # deployed: spared by the sweep
+        time.sleep(0.3)                      # both records age past the TTL
+        svc.start_refinement(interval_s=0.05)
+        deadline = time.monotonic() + 60
+        while svc.stats.evictions == 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        svc.stop_refinement()
+        assert svc.stats.evictions == 1
+        assert svc.store.load(fp_stale) is None, "stale plan swept"
+        assert svc.store.load(fp_live) is not None, "deployed plan spared"
+
+
+def test_no_ttl_configured_means_no_sweep(tmp_path):
+    svc = PlanService(str(tmp_path), config=_ir_config(),
+                      service=ServiceConfig(refine_generations=1,
+                                            refine_population=2))
+    with svc:
+        fp = svc.plan(_ir_graph()).fingerprint
+        svc.start_refinement(interval_s=0.05)
+        time.sleep(0.3)
+        svc.stop_refinement()
+        assert svc.stats.evictions == 0
+        assert svc.store.load(fp) is not None
