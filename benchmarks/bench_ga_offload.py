@@ -310,6 +310,76 @@ def _bench_pareto(rows: list) -> None:
 
 
 # ---------------------------------------------------------------------------
+# part 1a'': mesh destinations — placement x parallelism in the alphabet
+# ---------------------------------------------------------------------------
+
+
+def _bench_mesh(rows: list) -> None:
+    """Mesh destinations in the search: a deterministic multi-objective GA
+    over an explicit cpu/gpu/mesh alphabet.  On single-device CI a mesh
+    gene is cost-only — it charges the modeled per-shard transfer +
+    collective cost, prices energy at n devices, and divides the transfer
+    objective by its shard count — so the mesh rows are pure model
+    arithmetic, byte-stable on any host.  Genuine shard_map execution is
+    covered by the forced-8-device test, not gated here."""
+    from repro.core import OffloadConfig, Offloader
+    from repro.core import objectives as objmod
+    from repro.core.genes import with_mesh_destinations
+    from repro.core.ir import Region, RegionGraph
+    from repro.core.transfer_planner import modeled_mesh_cost_s
+
+    # the model itself: 4 MB each way, 4 trips, on a 4-way data mesh
+    cost_us = modeled_mesh_cost_s(4e6, 4e6, trips=4, axis="data", n=4) * 1e6
+    # proposal arithmetic is host-independent when device_count is explicit;
+    # on this (possibly single-device) host the proposal must shrink to fit
+    prop8 = with_mesh_destinations(("cpu", "gpu"), device_count=8)
+    prop_here = with_mesh_destinations(("cpu", "gpu"))
+    rows += [
+        row("ga_offload.mesh_modeled_cost_us", cost_us,
+            "modeled_mesh_cost_s(4MB, 4MB, trips=4, data, n=4): per-shard "
+            "links + ring collective + per-device launch (deterministic)"),
+        row("ga_offload.mesh_proposal_size", len(prop8),
+            f"with_mesh_destinations(cpu/gpu, device_count=8)={prop8[2:]}; "
+            f"this host proposes {len(prop_here) - 2} mesh genes"),
+    ]
+    assert len(prop8) == 5 and prop8[2:] == (
+        "mesh:data:2:batch", "mesh:data:4:batch", "mesh:data:8:batch")
+
+    mesh = "mesh:data:4:batch"
+    alphabet = ("cpu", "gpu", mesh)
+    regions = [
+        Region(f"r{i}", "loop", uses=frozenset({f"v{i}"}),
+               defs=frozenset({f"v{i}"}), offloadable=True,
+               alternatives=("ref", "kernel"), trip_count=2 + i)
+        for i in range(5)]
+    graph = RegionGraph(regions, "ir", "bench_mesh")
+
+    def speedup(values) -> Evaluation:
+        # any offload helps measured time equally; the mesh gene then pays
+        # its modeled cost on top (slower) but ships 1/4 the bytes and a
+        # collective (transfer objective) — a genuine three-way trade-off
+        t = 1.0 - 0.12 * sum(int(v) != 0 for v in values)
+        return Evaluation(tuple(values), t, True)
+
+    res = Offloader(OffloadConfig(
+        frontend="ir", fitness_fn=speedup, destinations=alphabet,
+        ga=GAConfig(population=12, generations=5, seed=0,
+                    objectives=objmod.OBJECTIVES))).plan(graph)
+
+    front = res.front_summary()
+    mesh_idx = alphabet.index(mesh)
+    mesh_pts = [p for p in front if mesh_idx in p["bits"]]
+    single_pts = [p for p in front if mesh_idx not in p["bits"]]
+    assert mesh_pts and single_pts, \
+        "front must hold mesh and single-device points"
+    rows.append(row(
+        "ga_offload.mesh_front_points", len(mesh_pts),
+        f"{len(mesh_pts)} mesh / {len(single_pts)} single-device points on "
+        f"a {len(front)}-point front over {objmod.OBJECTIVES} "
+        f"(cost-only mesh: modeled latency up, transfer bytes / n)"))
+
+
+# ---------------------------------------------------------------------------
 # part 1b: measured jaxpr search with compile-parallel/time-serial warm-ups
 # ---------------------------------------------------------------------------
 
@@ -527,6 +597,7 @@ def main(quick: bool = False) -> list[str]:
     _bench_python_ga(rows, quick=quick)
     _bench_surrogate_fit_synth(rows)
     _bench_pareto(rows)
+    _bench_mesh(rows)
     _bench_jaxpr_overlap(rows)
     if not quick:
         _bench_module_parallel(rows)

@@ -1,8 +1,8 @@
-"""Perf-trajectory gate: compare a fresh ``BENCH_PR9.json`` against the
+"""Perf-trajectory gate: compare a fresh ``BENCH_PR10.json`` against the
 committed baseline and fail on regression.
 
-  PYTHONPATH=src python -m benchmarks.compare BENCH_PR9.json \
-      benchmarks/baseline/BENCH_PR9.json --max-regression 0.25
+  PYTHONPATH=src python -m benchmarks.compare BENCH_PR10.json \
+      benchmarks/baseline/BENCH_PR10.json --max-regression 0.25
 
 Only *machine-relative* metrics are gated (same-run ratios in percent,
 bounded scores like rank correlations, measurement counts) — absolute
@@ -48,6 +48,16 @@ GATES: dict[str, tuple[str, str, float]] = {
     # modeled watts: byte-stable, tight margins
     "ga_offload.pareto_front_size":           ("abs", "higher", 2.0),
     "ga_offload.pareto_energy_gain_pct":      ("abs", "higher", 15.0),
+    # mesh destinations (placement x parallelism): pure model arithmetic
+    # and a fixed-seed search, byte-stable on any host.  The modeled mesh
+    # cost may not silently inflate (direction "lower"), the explicit
+    # 8-device proposal must keep all three data meshes, and the
+    # deterministic front must keep at least one mesh point alongside the
+    # single-device points (losing it means the mesh gene stopped trading
+    # transfer for modeled latency)
+    "ga_offload.mesh_modeled_cost_us":        ("abs", "lower", 100.0),
+    "ga_offload.mesh_proposal_size":          ("abs", "higher", 0.5),
+    "ga_offload.mesh_front_points":           ("abs", "higher", 18.5),
     # function-block gene must keep beating the best loop/span-only plan
     # on the attention stack (same-run ratio, both plans measured back to
     # back; the gap is ~1.3x, so a 25-point margin absorbs timing noise

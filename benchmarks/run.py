@@ -6,7 +6,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` runs benches
 that support it in smoke mode (no full GA searches) — the CI regression
 gate.  ``--json`` additionally writes the rows as a machine-readable
-report (the perf-trajectory artifact ``BENCH_PR9.json``; see
+report (the perf-trajectory artifact ``BENCH_PR10.json``; see
 ``benchmarks.compare`` for the gate that consumes it).  ``--metrics``
 dumps the process metrics registry (everything the instrumented hot
 paths counted while the benches ran) as a second JSON artifact.

@@ -16,15 +16,17 @@ from repro.core.frontends import (Frontend, FitnessBundle, detect_frontend,
 from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
 from repro.core.genes import (DEFAULT_ALPHABET, EXTENDED_ALPHABET,
                               VARIANT_ALPHABET, CPU, FPGA_STUB, GPU,
-                              GPU_FUSED, GPU_PALLAS, Destination, GeneCoding,
-                              Site, coding_from_graph, destination_names,
-                              get_destination, modeled_cost_s,
-                              register_destination)
+                              GPU_FUSED, GPU_PALLAS, Destination, Device,
+                              GeneCoding, MeshDestination, Site,
+                              coding_from_graph, destination_names,
+                              get_destination, mesh_proposals,
+                              modeled_cost_s, register_destination,
+                              site_modeled_cost_s, with_mesh_destinations)
 from repro.core.ir import Region, RegionGraph
-from repro.core.loop_offload import LoopOffloadResult, loop_offload_pass
 from repro.core.offload import (OffloadConfig, OffloadResult, Offloader,
-                                SeedBank, ga_search, phenotype_key,
-                                plan_offload, search_fingerprint)
+                                SeedBank, ga_search, phenotype_key, plan,
+                                plan_offload, resolve_alphabet,
+                                search_fingerprint)
 from repro.core.pattern_db import Match, PatternDB, PatternRecord, default_db
 from repro.core.substitution import (SubstitutedCallable, SubstitutionEngine,
                                      SubstitutionReport)
@@ -33,8 +35,6 @@ from repro.core.surrogate import (FeatureExtractor, FittedSurrogate,
                                   spearman_rank_corr)
 from repro.core.variants import (SubstitutionChoice, generic_plan_report,
                                  resolve_variant)
-from repro.core.planner import (ModulePlanResult, PythonPlanResult,
-                                plan_module_offload, plan_python_offload)
 from repro.core.transfer_planner import Transfer, TransferPlan, plan_transfers
 from repro.core.verifier import VerifyResult, verify
 
@@ -49,20 +49,19 @@ __all__ = [
     "Evaluation", "GAConfig", "GAResult", "run_ga",
     "DEFAULT_ALPHABET", "EXTENDED_ALPHABET", "VARIANT_ALPHABET",
     "CPU", "GPU", "FPGA_STUB", "GPU_FUSED", "GPU_PALLAS",
-    "Destination", "GeneCoding", "Site", "coding_from_graph",
-    "destination_names", "get_destination", "modeled_cost_s",
-    "register_destination",
+    "Destination", "Device", "MeshDestination", "GeneCoding", "Site",
+    "coding_from_graph", "destination_names", "get_destination",
+    "mesh_proposals", "modeled_cost_s", "register_destination",
+    "site_modeled_cost_s", "with_mesh_destinations",
     "SubstitutedCallable", "SubstitutionEngine", "SubstitutionReport",
     "SubstitutionChoice", "generic_plan_report", "resolve_variant",
     "FeatureExtractor", "FittedSurrogate", "fit_surrogate", "load_fit",
     "spearman_rank_corr",
     "Region", "RegionGraph",
-    "LoopOffloadResult", "loop_offload_pass",
     "OffloadConfig", "OffloadResult", "Offloader", "SeedBank",
-    "ga_search", "phenotype_key", "plan_offload", "search_fingerprint",
+    "ga_search", "phenotype_key", "plan", "plan_offload",
+    "resolve_alphabet", "search_fingerprint",
     "Match", "PatternDB", "PatternRecord", "default_db",
-    "ModulePlanResult", "PythonPlanResult",
-    "plan_module_offload", "plan_python_offload",
     "Transfer", "TransferPlan", "plan_transfers",
     "VerifyResult", "verify",
 ]

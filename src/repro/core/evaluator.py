@@ -345,7 +345,7 @@ class Evaluator:
         if screen_top_k is not None and surrogate is None:
             raise ValueError(
                 "screen_top_k requires a surrogate ranking function; use "
-                "loop_offload_pass (which derives one from the region graph) "
+                "ga_search (which derives one from the region graph) "
                 "or pass surrogate= explicitly")
         self.surrogate = surrogate
         self.screen_top_k = screen_top_k
@@ -798,7 +798,9 @@ def transfer_cost_surrogate(graph, coding, var_bytes: Optional[dict] = None,
 
     var_bytes = var_bytes or {}
     dests = [get_destination(d) for d in coding.destinations]
-    any_cost_only = any(not d.executable for d in dests)
+    # any placement that charges a model (stub devices, mesh genes) folds
+    # its modeled seconds into the rank so screening can't invert
+    any_charged = any(d.placement_tag is not None for d in dests)
     #: rank-units per modeled second — arbitrary but monotone: it only has
     #: to make stub-parked genes rank behind the free reference path
     _COST_ONLY_SCALE = 1e6
@@ -810,7 +812,8 @@ def transfer_cost_surrogate(graph, coding, var_bytes: Optional[dict] = None,
             return memo[bits]
         impl = dict(base_impl or {})
         impl.update(coding.decode(bits))
-        plan = plan_transfers(graph, impl, hoist=True)
+        plan = plan_transfers(graph, impl, hoist=True,
+                              destinations=coding.destinations_of(bits))
         total = 0.0
         for t in plan.transfers:
             trips = 1
@@ -819,14 +822,15 @@ def transfer_cost_surrogate(graph, coding, var_bytes: Optional[dict] = None,
                 while r is not None:
                     trips *= (r.trip_count or 1) if r.kind == "loop" else 1
                     r = graph.by_name(r.parent) if r.parent else None
-            total += trips * float(var_bytes.get(t.var, 1.0))
-        if any_cost_only:
+            total += (trips * float(var_bytes.get(t.var, 1.0))
+                      / max(t.shards, 1))
+        if any_charged:
             total += _COST_ONLY_SCALE * modeled_cost_s(graph, coding, bits)
         # prefer more offloaded work at equal transfer cost (paper intuition:
         # offload wins when transfers are amortized); for the binary alphabet
         # this is exactly the historical sum(bits)
         offloaded = sum(1 for v in bits
-                        if dests[int(v)].executable and int(v) != 0)
+                        if not dests[int(v)].is_cost_only and int(v) != 0)
         memo[bits] = total - 1e-9 * offloaded
         return memo[bits]
 

@@ -365,7 +365,7 @@ class JaxprFrontend:
 
         from repro.core.fitness import WallClockFitness
         from repro.core.frontends.registry import decoded_pattern
-        from repro.core.genes import VARIANT_ALPHABET
+        from repro.core.genes import VARIANT_ALPHABET, with_mesh_destinations
         from repro.core.pattern_db import record_pattern_outcome
         from repro.core.substitution import SubstitutionEngine
 
@@ -389,8 +389,10 @@ class JaxprFrontend:
             rlock = threading.Lock()
 
             def build(values):
-                impl = decoded_pattern(coding, tuple(values), {})
-                sub = engine.substitute(impl)
+                values = tuple(values)
+                impl = decoded_pattern(coding, values, {})
+                sub = engine.substitute(
+                    impl, destinations=coding.destinations_of(values))
                 with rlock:
                     reports[tuple(values)] = sub.report
                 jitted = jax.jit(sub.fn)
@@ -436,10 +438,19 @@ class JaxprFrontend:
         return FitnessBundle(
             fitness_factory=factory,
             block=block, claimed=(), base_impl={},
+            # device count joins the cache key: a mesh gene measured on an
+            # 8-device host and the same bits cost-modeled on a laptop are
+            # different experiments
             cache_extra=(f"jaxpr={graph.source_name}|measured"
-                         f"|args={args_sig}|backend={engine.backend}"),
+                         f"|args={args_sig}|backend={engine.backend}"
+                         f"|ndev={jax.device_count()}"),
             serial_only=True, measured=True, overlap_compiles=True,
-            destinations=VARIANT_ALPHABET,
+            # variant alphabet plus whatever meshes this host can really
+            # build (empty extension on single-device CI)
+            destinations=with_mesh_destinations(VARIANT_ALPHABET),
+            # this measured path genuinely decodes mesh genes to shard_map
+            # execution, so available meshes are measured, not modeled
+            mesh_executed=True,
             # bind results join the phenotype key: two chromosomes whose
             # variants fall back to ref at a site are one program and
             # share one measurement (eager resolution is static per
@@ -450,8 +461,10 @@ class JaxprFrontend:
     def apply_plan(self, graph: RegionGraph, coding, values, bundle):
         from repro.core.frontends.registry import decoded_pattern
 
+        values = tuple(values)
         impl = decoded_pattern(coding, values, bundle.base_impl)
         engine = bundle.context.get("engine")
         if engine is None:               # static-cost path: impl map only
             return impl
-        return engine.substitute(impl)
+        return engine.substitute(impl,
+                                 destinations=coding.destinations_of(values))

@@ -32,6 +32,7 @@ __all__ = [
     "Frontend", "FitnessBundle", "OffloadConfig",
     "register_frontend", "get_frontend", "frontend_names", "detect_frontend",
     "static_cost_fitness_factory", "decoded_pattern", "IRFrontend",
+    "resolve_alphabet",
 ]
 
 
@@ -42,6 +43,34 @@ def decoded_pattern(coding: "GeneCoding", values, base_impl: Optional[dict]
     impl = dict(base_impl or {})
     impl.update(coding.decode(values))
     return impl
+
+
+def resolve_alphabet(config: Optional["OffloadConfig"],
+                     proposed: Optional[tuple] = None) -> tuple:
+    """THE destination-alphabet precedence rule, in one place:
+
+    1. an explicit ``OffloadConfig.destinations`` always wins (the caller
+       knows the hardware they are planning for),
+    2. else the frontend's proposal (``FitnessBundle.destinations`` — e.g.
+       the jaxpr variant alphabet, extended with this host's executable
+       mesh destinations),
+    3. else :data:`~repro.core.genes.DEFAULT_ALPHABET` (the paper's binary
+       cpu/gpu chromosome).
+
+    Every entry is validated against the destination registry (mesh wire
+    strings parse on demand), so a typo fails here — before a search — with
+    the registry's own error."""
+    from repro.core.genes import DEFAULT_ALPHABET, get_destination
+
+    if config is not None and config.destinations is not None:
+        alphabet = tuple(config.destinations)
+    elif proposed:
+        alphabet = tuple(proposed)
+    else:
+        alphabet = DEFAULT_ALPHABET
+    for name in alphabet:
+        get_destination(name)        # fail fast on unknown alphabet entries
+    return alphabet
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +151,17 @@ class FitnessBundle:
                                               # alphabet (e.g. the jaxpr
                                               # variant alphabet); used when
                                               # the config left the default
+    mesh_executed: bool = False               # False (default) means mesh
+                                              # genes
+                                              # are never genuinely decoded
+                                              # to shard_map execution by
+                                              # this fitness, so the mesh
+                                              # cost model must be charged
+                                              # on top of measurements even
+                                              # when the host has the
+                                              # devices (ast/module paths).
+                                              # Irrelevant when no mesh
+                                              # destination is in play
     impl_resolver: Optional[Callable[[str, Any], Any]] = None
                                               # (region, decoded impl) -> the
                                               # impl that actually runs after

@@ -70,8 +70,8 @@ class GAConfig:
                                       # (XLA serializes LLVM compiles
                                       # in-process, so compile-bound fitness
                                       # only scales across processes).  Takes
-                                      # effect via ga_search /
-                                      # loop_offload_pass, whose caller owns
+                                      # effect via ga_search, whose
+                                      # caller owns
                                       # keeping the factory's fitness in sync
                                       # with the searched coding; bare run_ga
                                       # and Offloader.plan (which composes a
@@ -80,12 +80,12 @@ class GAConfig:
                                         # most k new offspring per generation.
                                         # Needs a surrogate ranking fn, so it
                                         # only takes effect via
-                                        # loop_offload_pass (or a hand-built
+                                        # ga_search (or a hand-built
                                         # Evaluator); bare run_ga raises
     cache_dir: Optional[str] = None   # persistent measurement cache location.
                                       # Needs a program fingerprint, so it
                                       # only takes effect via
-                                      # loop_offload_pass (or a hand-built
+                                      # ga_search (or a hand-built
                                       # Evaluator); bare run_ga raises
     auto_screen: bool = True          # when screen_top_k is unset and a prior
                                       # search of the same fingerprint (in
@@ -280,7 +280,7 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
     ``evaluator`` is an optional pre-built :class:`repro.core.evaluator.
     Evaluator` (callers that want a persistent cache keyed to a program
     fingerprint, or a surrogate pre-screen, construct it themselves — see
-    ``loop_offload_pass``).  When omitted, one is built from the GAConfig
+    ``ga_search``).  When omitted, one is built from the GAConfig
     knobs (`workers`, `cache_dir`, `screen_top_k`).  The GAResult measurement
     counters are the evaluator's lifetime totals, so pass a fresh evaluator
     per search if you want per-search numbers.
@@ -309,12 +309,12 @@ def run_ga(length: int, fitness_fn: FitnessFn, cfg: GAConfig,
             # to every other program sharing the cache_dir
             raise ValueError(
                 "GAConfig.cache_dir requires a program fingerprint; call "
-                "loop_offload_pass (which keys the cache by the region "
+                "ga_search (which keys the cache by the region "
                 "graph) or pass a pre-built Evaluator")
         if cfg.pool is not None:
             raise ValueError(
                 "GAConfig.pool requires a fitness-factory ProcessPool; call "
-                "loop_offload_pass / Offloader.plan (which own the pool "
+                "ga_search / Offloader.plan (which own the pool "
                 "lifecycle) or pass a pre-built Evaluator")
         evaluator = Evaluator(fitness_fn, workers=cfg.workers,
                               screen_top_k=cfg.screen_top_k,

@@ -11,12 +11,23 @@ and value 1 the primary accelerator, so binary chromosomes keep their exact
 historical meaning.
 
 Destinations are pluggable via :func:`register_destination`.  A destination
-may be *cost-only* (``executable=False``): regions assigned to it execute
+may be *cost-only* (``is_cost_only``): regions assigned to it execute
 their reference implementation for correctness, and a deterministic modeled
 cost (:func:`modeled_cost_s`) is charged on top of the measurement — so the
 enlarged search space is real (the GA weighs it) before the hardware exists.
 The encoding stays language/frontend-independent; frontends only contribute
 the ordered site list.
+
+Destination API v2 is a small frozen hierarchy: :class:`Device` is a single
+physical device; :class:`MeshDestination` places a region on an ``n``-device
+mesh along a named axis with a sharding spec (arXiv 2011.12431's mixed
+offloading destinations, extended to placement × parallelism).  The wire
+format IS the destination name (``mesh:data:4:batch``), so alphabets,
+SeedBank records, phenotype keys, and PlanStore payloads — all of which
+carry name strings — round-trip mesh specs with no schema change.  On hosts
+with fewer than ``n`` devices a mesh destination degrades to cost-only:
+reference execution plus a modeled per-shard-transfer + collective cost
+(:func:`repro.core.transfer_planner.modeled_mesh_cost_s`).
 """
 from __future__ import annotations
 
@@ -32,16 +43,54 @@ from repro.core.ir import Region, RegionGraph
 # destination alphabet
 # ---------------------------------------------------------------------------
 
+#: modeled watt prior for destinations that declare no ``active_power_w``
+#: (a conventional host CPU package) — the energy model's fallback.
+DEFAULT_ACTIVE_POWER_W = 65.0
+#: modeled per-device watt prior for mesh destinations (GPU-class devices).
+MESH_DEVICE_POWER_W = 250.0
+
+_PROBED_DEVICE_COUNT: Optional[int] = None
+
+
+def probed_device_count() -> int:
+    """How many accelerator-visible devices this process has (cached).
+
+    Mesh destinations compare their ``n`` against this to decide between
+    genuine shard_map execution and cost-only modeling.  Falls back to 1
+    when jax is unavailable or backend init fails."""
+    global _PROBED_DEVICE_COUNT
+    if _PROBED_DEVICE_COUNT is None:
+        try:
+            import jax
+            _PROBED_DEVICE_COUNT = int(jax.device_count())
+        except Exception:
+            _PROBED_DEVICE_COUNT = 1
+    return _PROBED_DEVICE_COUNT
+
 
 @dataclass(frozen=True)
 class Destination:
-    """One place a region can run.
+    """One place a region can run (Destination API v2 base).
 
     ``executable`` destinations map to a real implementation of the site
     (``impl_index`` selects it: 0 = reference, 1 = offloaded alternative).
-    Cost-only destinations (``executable=False``) execute the reference
+    Cost-only destinations (``is_cost_only``) execute the reference
     implementation and charge a modeled time instead — a stand-in device
     whose cost model keeps the search space honest before hardware exists.
+
+    The v2 surface every consumer goes through:
+
+    * ``wire()`` / ``from_wire()`` — the one serialization (the name string)
+      used by gene alphabets, SeedBank cross-alphabet mapping, phenotype
+      keys, and PlanStore payloads.
+    * ``watts()`` — modeled draw while executing (per-device prior ×
+      ``device_count``), the energy objective's input.
+    * ``is_cost_only`` — whether assignment charges a model instead of
+      running offloaded code *on this host* (environment-dependent for
+      meshes, static for stub devices).
+    * ``placement_tag`` — non-None when the assignment changes the
+      phenotype beyond the decoded impl map (stub parking, mesh placement),
+      so the measurement cache never conflates such chromosomes.
     """
 
     name: str
@@ -57,23 +106,131 @@ class Destination:
     # destination Pareto fronts exist on CPU-only CI.
     active_power_w: float = 0.0
 
+    # -- v2 API ------------------------------------------------------------
+    @property
+    def device_count(self) -> int:
+        return 1
 
-CPU = Destination("cpu", executable=True, impl_index=0,
-                  active_power_w=65.0)
-GPU = Destination("gpu", executable=True, impl_index=1,
-                  active_power_w=250.0)
+    @property
+    def is_cost_only(self) -> bool:
+        return not self.executable
+
+    @property
+    def placement_tag(self) -> Optional[str]:
+        return self.name if self.is_cost_only else None
+
+    def watts(self) -> float:
+        per_device = (self.active_power_w if self.active_power_w > 0
+                      else DEFAULT_ACTIVE_POWER_W)
+        return per_device * self.device_count
+
+    def wire(self) -> str:
+        """Stable wire string: the name is the serialization."""
+        return self.name
+
+    @classmethod
+    def from_wire(cls, wire: str) -> "Destination":
+        return get_destination(wire)
+
+
+@dataclass(frozen=True)
+class Device(Destination):
+    """A single physical (or stand-in) device — the scalar v1 alphabet."""
+
+
+@dataclass(frozen=True)
+class MeshDestination(Destination):
+    """Place a region on an ``n``-device mesh along one named axis.
+
+    ``axis`` is the mesh axis kind — ``"data"`` shards the batch (leading)
+    dimension, ``"model"`` the feature (trailing) dimension.  ``spec``
+    names the sharded dimension (``"batch"``, ``"feature"``, or ``"dimK"``
+    for an explicit index) and defaults from the axis.  The canonical name
+    doubles as the wire format: ``mesh:{axis}:{n}:{spec}``.
+
+    Decoding keeps ``impl_index`` 0 (the reference implementation): the
+    substitution engine replaces the site's span with a shard_map'd run of
+    that same span when the host has >= ``n`` devices; otherwise the
+    destination is cost-only and :func:`modeled_cost_s` charges per-shard
+    transfers plus a modeled collective term."""
+
+    name: str = ""
+    axis: str = "data"
+    n: int = 2
+    spec: str = ""
+
+    def __post_init__(self) -> None:
+        if self.axis not in ("data", "model"):
+            raise ValueError(f"mesh axis must be 'data' or 'model', "
+                             f"got {self.axis!r}")
+        if self.n < 1:
+            raise ValueError(f"mesh size must be >= 1, got {self.n}")
+        spec = self.spec or ("batch" if self.axis == "data" else "feature")
+        if spec not in ("batch", "feature") and not (
+                spec.startswith("dim") and spec[3:].isdigit()):
+            raise ValueError(f"mesh spec must be 'batch', 'feature' or "
+                             f"'dimN', got {spec!r}")
+        object.__setattr__(self, "spec", spec)
+        object.__setattr__(self, "name", f"mesh:{self.axis}:{self.n}:{spec}")
+        if self.active_power_w <= 0:
+            object.__setattr__(self, "active_power_w", MESH_DEVICE_POWER_W)
+
+    @property
+    def device_count(self) -> int:
+        return self.n
+
+    @property
+    def shard_dim(self) -> int:
+        """Which dimension the spec shards: 0 (batch), -1 (feature), or K."""
+        if self.spec == "batch":
+            return 0
+        if self.spec == "feature":
+            return -1
+        return int(self.spec[3:])
+
+    def available(self) -> bool:
+        """Whether this host can genuinely build the mesh."""
+        return probed_device_count() >= self.n
+
+    @property
+    def is_cost_only(self) -> bool:
+        return not self.available()
+
+    @property
+    def placement_tag(self) -> Optional[str]:
+        # mesh placement always changes the phenotype (sharded execution or
+        # modeled charge), even when the decoded impl map is the reference
+        return self.name
+
+    @classmethod
+    def from_wire(cls, wire: str) -> "MeshDestination":
+        parts = wire.split(":")
+        if len(parts) not in (3, 4) or parts[0] != "mesh":
+            raise ValueError(f"not a mesh wire string: {wire!r} "
+                             f"(want 'mesh:<axis>:<n>[:<spec>]')")
+        try:
+            n = int(parts[2])
+        except ValueError:
+            raise ValueError(f"mesh size not an int in {wire!r}") from None
+        return cls(axis=parts[1], n=n, spec=parts[3] if len(parts) == 4 else "")
+
+
+CPU = Device("cpu", executable=True, impl_index=0,
+             active_power_w=65.0)
+GPU = Device("gpu", executable=True, impl_index=1,
+             active_power_w=250.0)
 #: FPGA stub: no backend yet — reference execution plus a modeled cost of a
 #: PCIe-attached reconfigurable card (fixed DMA/launch latency, cheap trips,
 #: low board power: the paper's power-saving destination).
-FPGA_STUB = Destination("fpga_stub", executable=False, impl_index=0,
-                        launch_overhead_s=2e-4, per_trip_s=5e-8,
-                        active_power_w=30.0)
+FPGA_STUB = Device("fpga_stub", executable=False, impl_index=0,
+                   launch_overhead_s=2e-4, per_trip_s=5e-8,
+                   active_power_w=30.0)
 #: variant destinations: same accelerator, different *implementation* of the
 #: site (the kernel-substitution alphabet — a gene picks which code runs).
-GPU_FUSED = Destination("gpu_fused", executable=True, impl_index=1,
-                        active_power_w=250.0)
-GPU_PALLAS = Destination("gpu_pallas", executable=True, impl_index=2,
-                         active_power_w=220.0)
+GPU_FUSED = Device("gpu_fused", executable=True, impl_index=1,
+                   active_power_w=250.0)
+GPU_PALLAS = Device("gpu_pallas", executable=True, impl_index=2,
+                    active_power_w=220.0)
 
 _DESTINATIONS: dict[str, Destination] = {
     d.name: d for d in (CPU, GPU, FPGA_STUB, GPU_FUSED, GPU_PALLAS)
@@ -97,15 +254,53 @@ def register_destination(dest: Destination, replace: bool = False) -> None:
 
 
 def get_destination(name: str) -> Destination:
-    try:
-        return _DESTINATIONS[name]
-    except KeyError:
-        raise KeyError(f"unknown destination {name!r}; registered: "
-                       f"{sorted(_DESTINATIONS)}") from None
+    dest = _DESTINATIONS.get(name)
+    if dest is not None:
+        return dest
+    if name.startswith("mesh:"):
+        # mesh wire strings are an open alphabet: parse and cache on demand
+        # (under the canonical name AND the alias spelled without a spec)
+        try:
+            dest = MeshDestination.from_wire(name)
+        except ValueError as e:
+            raise KeyError(f"bad mesh destination {name!r}: {e}") from None
+        _DESTINATIONS.setdefault(dest.name, dest)
+        _DESTINATIONS.setdefault(name, dest)
+        return dest
+    raise KeyError(f"unknown destination {name!r}; registered: "
+                   f"{sorted(_DESTINATIONS)}")
 
 
 def destination_names() -> tuple[str, ...]:
     return tuple(sorted(_DESTINATIONS))
+
+
+#: mesh sizes the frontends propose when the host has the devices for them.
+MESH_PROPOSAL_SIZES: tuple[int, ...] = (2, 4, 8)
+
+
+def mesh_proposals(axes: Sequence[str] = ("data",),
+                   sizes: Sequence[int] = MESH_PROPOSAL_SIZES,
+                   device_count: Optional[int] = None) -> tuple[str, ...]:
+    """Mesh destination names this host can genuinely execute (n <= devices).
+
+    Returns () on single-device hosts so CI alphabets, fingerprints and
+    committed baselines stay byte-stable; explicit mesh names in
+    ``OffloadConfig.destinations`` still work anywhere (cost-modeled)."""
+    ndev = probed_device_count() if device_count is None else device_count
+    return tuple(MeshDestination(axis=axis, n=n).name
+                 for axis in axes for n in sizes if 2 <= n <= ndev)
+
+
+def with_mesh_destinations(base: Sequence[str],
+                           axes: Sequence[str] = ("data",),
+                           sizes: Sequence[int] = MESH_PROPOSAL_SIZES,
+                           device_count: Optional[int] = None
+                           ) -> tuple[str, ...]:
+    """``base`` alphabet extended with this host's executable mesh genes."""
+    base = tuple(base)
+    return base + tuple(m for m in mesh_proposals(axes, sizes, device_count)
+                        if m not in base)
 
 
 # ---------------------------------------------------------------------------
@@ -241,13 +436,39 @@ def _trip_product(graph: RegionGraph, region: Region) -> int:
     return trips
 
 
+def site_modeled_cost_s(graph: RegionGraph, region: Region,
+                        dest: Destination) -> float:
+    """Deterministic modeled seconds for parking one region on ``dest``.
+
+    Stub devices charge their launch + per-trip model; mesh destinations
+    charge per-shard transfers plus a modeled collective for the axis
+    (:func:`repro.core.transfer_planner.modeled_mesh_cost_s`), with the
+    region's def/use sets standing in for byte volumes (1.0 each — the
+    same unit-bytes convention the transfer objective uses)."""
+    trips = _trip_product(graph, region)
+    if isinstance(dest, MeshDestination):
+        from repro.core import transfer_planner as tp
+        return tp.modeled_mesh_cost_s(
+            h2d_bytes=float(len(region.uses)),
+            d2h_bytes=float(len(region.defs)),
+            trips=trips, axis=dest.axis, n=dest.n)
+    return dest.launch_overhead_s + trips * dest.per_trip_s
+
+
 def modeled_cost_s(graph: RegionGraph, coding: GeneCoding,
-                   values: Sequence[int]) -> float:
+                   values: Sequence[int],
+                   mesh_executed: bool = False) -> float:
     """Deterministic modeled time for genes on cost-only destinations.
 
     Charged on top of the measured time of the chromosome (whose cost-only
     regions executed their reference path), so patterns that park work on a
     stub device pay that device's modeled latency in the fitness.
+
+    Mesh genes charge the mesh cost model unless ``mesh_executed`` — the
+    flag a frontend sets when its measured path genuinely decodes mesh
+    destinations through shard_map (the jaxpr engine on a multi-device
+    host), in which case the measurement already contains the real cost.
+    An unavailable mesh (``is_cost_only``) charges the model regardless.
     """
     total = 0.0
     claimed = coding.claimed_members(values)
@@ -255,9 +476,10 @@ def modeled_cost_s(graph: RegionGraph, coding: GeneCoding,
         if site.region in claimed:
             continue                 # the block adapter computes this region
         dest = get_destination(coding.destinations[int(v)])
-        if dest.executable:
+        if isinstance(dest, MeshDestination):
+            if mesh_executed and not dest.is_cost_only:
+                continue             # really ran sharded: measured, not modeled
+        elif not dest.is_cost_only:
             continue
-        region = graph.by_name(site.region)
-        total += (dest.launch_overhead_s
-                  + _trip_product(graph, region) * dest.per_trip_s)
+        total += site_modeled_cost_s(graph, graph.by_name(site.region), dest)
     return total

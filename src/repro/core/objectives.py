@@ -32,9 +32,13 @@ import math
 from typing import Callable, Optional, Sequence
 
 from repro.core.ga import Evaluation
-from repro.core.genes import GeneCoding, _trip_product, get_destination
+# DEFAULT_ACTIVE_POWER_W lives with the Destination hierarchy now;
+# re-exported here because it is this module's historical home.
+from repro.core.genes import (DEFAULT_ACTIVE_POWER_W, GeneCoding,
+                              MeshDestination, _trip_product, get_destination,
+                              site_modeled_cost_s)
 from repro.core.ir import RegionGraph
-from repro.core.transfer_planner import plan_transfers
+from repro.core.transfer_planner import collective_factor, plan_transfers
 
 __all__ = ["OBJECTIVES", "annotate_objectives", "make_objective_fn",
            "modeled_energy_j", "nvml_power_w", "objective_values",
@@ -43,10 +47,6 @@ __all__ = ["OBJECTIVES", "annotate_objectives", "make_objective_fn",
 #: the canonical objective order: index 0 is always latency (the GA's
 #: patience/history axis and the single-objective fallback).
 OBJECTIVES: tuple[str, ...] = ("latency", "energy", "transfer")
-
-#: watts charged for executable work whose destination carries no
-#: ``active_power_w`` of its own (unregistered/legacy destinations).
-DEFAULT_ACTIVE_POWER_W = 65.0
 
 _nvml_watts: Optional[float] = None
 _nvml_probed = False
@@ -72,16 +72,18 @@ def nvml_power_w() -> Optional[float]:
 
 
 def destination_power_w(name: str) -> float:
-    """Active watts prior for one destination.  NVML (when present) overrides
-    the prior for executable accelerator destinations — measured board power
-    beats a table — while the reference path and cost-only stubs keep their
-    modeled priors (NVML says nothing about them)."""
+    """Active watts prior for one destination: ``Destination.watts()`` — the
+    per-device prior times the device count, so an n-mesh draws n boards'
+    worth.  NVML (when present) overrides the per-device prior for
+    accelerator destinations — measured board power beats a table — while
+    the reference path and cost-only stubs keep their modeled priors (NVML
+    says nothing about them)."""
     dest = get_destination(name)
-    prior = dest.active_power_w or DEFAULT_ACTIVE_POWER_W
-    if dest.executable and dest.impl_index > 0:
+    prior = dest.watts()
+    if not dest.is_cost_only and dest.impl_index > 0:
         measured = nvml_power_w()
         if measured is not None and measured > 0:
-            return measured
+            return measured * dest.device_count
     return prior
 
 
@@ -114,11 +116,14 @@ def modeled_energy_j(graph: RegionGraph, coding: GeneCoding,
         if site.region in claimed:
             continue                      # the block adapter's work is
                                           # counted by the block gene's site
-        if not dest.executable:
-            site_s = dest.launch_overhead_s + trips * dest.per_trip_s
+        if dest.is_cost_only:
+            # stub devices and unavailable meshes: the modeled seconds
+            # (already folded into time_s by the destination-cost fitness
+            # wrapper) bill at the destination's full draw — per-device
+            # watts × device count for meshes (ISSUE: energy = watts × n)
+            site_s = site_modeled_cost_s(graph, region, dest)
             stub_s_total += site_s
-            stub_j += site_s * (dest.active_power_w
-                                or DEFAULT_ACTIVE_POWER_W)
+            stub_j += site_s * dest.watts()
             continue
         weight += trips
         watt_weight += trips * destination_power_w(dest.name)
@@ -133,18 +138,36 @@ def static_transfer_bytes(graph: RegionGraph, coding: GeneCoding,
     """Transfer volume of one chromosome: planner transfers weighted by
     per-variable bytes and dynamic trip products (per-iteration transfers
     pay every trip — the round-trip penalty).  Same accounting as the
-    surrogate's ``bytes`` feature, exposed as an objective."""
+    surrogate's ``bytes`` feature, exposed as an objective.
+
+    Mesh placements change the accounting in two directions: each host<->
+    device transfer splits across the mesh's n links (``Transfer.shards``
+    divides its volume — the per-link bytes are what the PCIe round-trip
+    penalty prices), while the axis's collective adds
+    ``collective_factor(axis, n)`` times the region's output bytes per
+    trip.  Sharding a transfer-heavy region can therefore *win* this axis
+    over a single device — the trade-off the Pareto front exposes."""
     bits = tuple(int(v) for v in bits)
     impl = dict(base_impl or {})
     impl.update(coding.decode(bits))
-    plan = plan_transfers(graph, impl, hoist=True)
+    dests = coding.destinations_of(bits)
+    plan = plan_transfers(graph, impl, hoist=True, destinations=dests)
     vb = var_bytes or {}
     total = 0.0
     for t in plan.transfers:
         trips = 1
         if t.per_iteration:
             trips = _trip_product(graph, graph.by_name(t.at_region))
-        total += trips * float(vb.get(t.var, 1.0))
+        total += trips * float(vb.get(t.var, 1.0)) / max(t.shards, 1)
+    claimed = coding.claimed_members(bits)
+    for site in coding.sites:
+        dest = get_destination(dests[site.region])
+        if not isinstance(dest, MeshDestination) or site.region in claimed:
+            continue
+        region = graph.by_name(site.region)
+        out_bytes = sum(float(vb.get(v, 1.0)) for v in region.defs)
+        total += (_trip_product(graph, region)
+                  * collective_factor(dest.axis, dest.n) * out_bytes)
     return total
 
 

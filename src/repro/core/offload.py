@@ -14,8 +14,10 @@ and drives the same pipeline for all of them:
      -> evaluate through the batching engine (cache, dedup, screening,
         workers / process pool)  -> verify  -> one unified OffloadResult.
 
-``plan_python_offload`` / ``plan_module_offload`` (repro.core.planner) and
-``loop_offload_pass`` are thin shims over this module.
+The one-liner path is :func:`plan`: ``plan(target, inputs)`` builds an
+:class:`Offloader` with default config and returns its
+:class:`OffloadResult` (the successor of the retired ``plan_python_offload``
+/ ``plan_module_offload`` / ``loop_offload_pass`` shims).
 """
 from __future__ import annotations
 
@@ -32,9 +34,9 @@ from repro.core.evaluator import (Evaluator, ProcessPool, last_rank_corr,
 from repro.core.journal import Journal
 from repro.core.frontends.registry import (FitnessBundle, OffloadConfig,
                                            decoded_pattern, detect_frontend,
-                                           get_frontend)
+                                           get_frontend, resolve_alphabet)
 from repro.core.ga import Evaluation, GAConfig, GAResult, run_ga
-from repro.core.genes import (DEFAULT_ALPHABET, GeneCoding, coding_from_graph,
+from repro.core.genes import (GeneCoding, coding_from_graph,
                               get_destination, modeled_cost_s)
 from repro.core.ir import RegionGraph
 from repro.core.transfer_planner import TransferPlan, plan_transfers
@@ -42,8 +44,8 @@ from repro.core.variants import generic_plan_report
 from repro.obs import trace as obs_trace
 
 __all__ = ["OffloadConfig", "OffloadResult", "Offloader", "PlanContext",
-           "SeedBank", "ga_search", "phenotype_key", "plan_offload",
-           "search_fingerprint"]
+           "SeedBank", "ga_search", "phenotype_key", "plan", "plan_offload",
+           "resolve_alphabet", "search_fingerprint"]
 
 
 def search_fingerprint(graph: RegionGraph, coding: Optional[GeneCoding] = None,
@@ -59,7 +61,7 @@ def search_fingerprint(graph: RegionGraph, coding: Optional[GeneCoding] = None,
 
 
 # ---------------------------------------------------------------------------
-# GA search stage (shared with the legacy loop_offload_pass shim)
+# GA search stage
 # ---------------------------------------------------------------------------
 
 
@@ -67,15 +69,18 @@ def phenotype_key(coding: GeneCoding,
                   resolver: Optional[Callable[[str, Any], Any]] = None
                   ) -> Callable[[tuple], Any]:
     """Canonicalize a chromosome to its *phenotype*: the decoded
-    region -> implementation map plus any cost-only destination assignment.
+    region -> implementation map plus any placement-tagged destination
+    assignment (``Destination.placement_tag``).
 
     Chromosomes that decode to the same program (clamped ``impl_index`` on
     regions with short implementation menus, alphabet entries aliasing the
     same impl) are measured once per *program*, not once per bit string —
-    the ROADMAP's phenotype-dedup.  Cost-only destinations decode to the
-    reference impl but charge a modeled cost, so their assignment is part
-    of the key: parking a gene on a stub is a different phenotype than
-    leaving it on the reference path.
+    the ROADMAP's phenotype-dedup.  Destinations whose assignment changes
+    the phenotype beyond the decoded impl map carry a placement tag:
+    cost-only stubs (reference impl + a modeled charge) and mesh
+    destinations (reference impl, but sharded execution or a modeled mesh
+    charge), so parking a gene there is a different phenotype than leaving
+    it on the reference path.
 
     ``resolver`` folds the frontend's *bind results* into the key
     (ROADMAP's resolution-fallback slice): ``resolver(region, impl_id)``
@@ -107,13 +112,13 @@ def phenotype_key(coding: GeneCoding,
         # parked on them charges nothing (modeled_cost_s skips them), so
         # they must not split phenotypes either
         claimed = coding.claimed_members(bits)
-        stubs = tuple((s.region, dests[int(v)].name)
-                      for s, v in zip(coding.sites, bits)
-                      if not dests[int(v)].executable
-                      and s.region not in claimed)
+        tags = tuple((s.region, dests[int(v)].placement_tag)
+                     for s, v in zip(coding.sites, bits)
+                     if dests[int(v)].placement_tag is not None
+                     and s.region not in claimed)
         return (tuple((s.region, str(resolve(s.region, impl[s.region])))
                       for s in coding.sites),
-                stubs)
+                tags)
 
     return key
 
@@ -164,7 +169,10 @@ def ga_search(graph: RegionGraph, fitness_fn: Callable[[tuple], Evaluation],
 
     cfg = ga_cfg or GAConfig()
     if coding is None:
-        coding = coding_from_graph(graph, exclude=exclude)
+        # bare ga_search has no config/frontend in scope: the precedence
+        # helper resolves to the default alphabet (one rule everywhere)
+        coding = coding_from_graph(graph, exclude=exclude,
+                                   destinations=resolve_alphabet(None))
     multi = len(tuple(cfg.objectives)) > 1 or objective_fn is not None
     if multi and objective_fn is None:
         objective_fn = objmod.make_objective_fn(graph, coding,
@@ -522,11 +530,13 @@ class _DestinationCostFitness:
     the compile-overlap path still applies."""
 
     def __init__(self, graph: RegionGraph, coding: GeneCoding,
-                 inner: Callable):
+                 inner: Callable, mesh_executed: bool = False):
         self._graph, self._coding, self._inner = graph, coding, inner
+        self._mesh_executed = mesh_executed
 
     def _charge(self, ev: Evaluation) -> Evaluation:
-        pen = modeled_cost_s(self._graph, self._coding, ev.bits)
+        pen = modeled_cost_s(self._graph, self._coding, ev.bits,
+                             mesh_executed=self._mesh_executed)
         if pen > 0 and math.isfinite(ev.time_s):
             ev = Evaluation(ev.bits, ev.time_s + pen, ev.valid,
                             {**ev.detail, "modeled_cost_s": pen})
@@ -545,14 +555,25 @@ class _TwoPhaseDestinationCostFitness(_DestinationCostFitness):
 
 
 def _with_destination_costs(graph: RegionGraph, coding: GeneCoding,
-                            fitness_fn: Callable) -> Callable:
-    """Charge cost-only destinations' modeled time on top of measurements."""
-    if all(get_destination(d).executable for d in coding.destinations):
+                            fitness_fn: Callable,
+                            mesh_executed: bool = False) -> Callable:
+    """Charge modeled destination time on top of measurements: cost-only
+    stubs always, mesh genes unless the frontend's measured path genuinely
+    decodes them to shard_map execution (``mesh_executed``, from
+    :attr:`FitnessBundle.mesh_executed`)."""
+    dests = [get_destination(d) for d in coding.destinations]
+
+    def may_charge(d) -> bool:
+        if d.placement_tag is None:
+            return False               # plain executable device: measured
+        return not (mesh_executed and not d.is_cost_only)
+
+    if not any(may_charge(d) for d in dests):
         return fitness_fn
     cls = _TwoPhaseDestinationCostFitness \
         if hasattr(fitness_fn, "prepare") and hasattr(fitness_fn, "measure") \
         else _DestinationCostFitness
-    return cls(graph, coding, fitness_fn)
+    return cls(graph, coding, fitness_fn, mesh_executed=mesh_executed)
 
 
 @dataclass
@@ -619,10 +640,7 @@ class Offloader:
             with obs_trace.span("prepare.make_fitness"):
                 bundle: FitnessBundle = fe.make_fitness(graph, target,
                                                         inputs, cfg)
-            if cfg.destinations is not None:   # explicit config always wins
-                destinations = tuple(cfg.destinations)
-            else:                              # else the frontend's proposal
-                destinations = tuple(bundle.destinations or DEFAULT_ALPHABET)
+            destinations = resolve_alphabet(cfg, bundle.destinations)
             coding = coding_from_graph(graph, exclude=bundle.claimed,
                                        destinations=destinations)
             log(f"graph: {graph.summary()} gene_length={coding.length} "
@@ -691,7 +709,8 @@ class Offloader:
         graph, bundle, coding = ctx.graph, ctx.bundle, ctx.coding
 
         fitness = cfg.fitness_fn or bundle.fitness_factory(coding)
-        fitness = _with_destination_costs(graph, coding, fitness)
+        fitness = _with_destination_costs(graph, coding, fitness,
+                                          mesh_executed=bundle.mesh_executed)
 
         ga_cfg = ga or cfg.ga
         if bundle.serial_only and (ga_cfg.workers > 1
@@ -718,9 +737,9 @@ class Offloader:
             raise ValueError(
                 "GAConfig.pool cannot be used through Offloader.plan: the "
                 "factory-built worker fitness cannot match the pipeline-"
-                "composed fitness. Drive ga_search/loop_offload_pass "
-                "directly with a factory that reproduces your fitness, or "
-                "use thread workers (GAConfig.workers) here")
+                "composed fitness. Drive ga_search directly with a factory "
+                "that reproduces your fitness, or use thread workers "
+                "(GAConfig.workers) here")
 
         # --- GA population warm starts ---------------------------------
         seeds: list[tuple] = [tuple(int(v) for v in s) for s in extra_seeds]
@@ -784,11 +803,23 @@ class Offloader:
             report=report, details=dict(bundle.context))
 
 
-def plan_offload(target: Any, inputs: Optional[dict] = None,
-                 config: Optional[OffloadConfig] = None,
-                 **config_kwargs) -> OffloadResult:
-    """Convenience wrapper: ``plan_offload(src, inputs, ga=GAConfig(...))``."""
+def plan(target: Any, inputs: Optional[dict] = None,
+         config: Optional[OffloadConfig] = None,
+         **config_kwargs) -> OffloadResult:
+    """The module-level one-liner: ``plan(src, inputs, ga=GAConfig(...))``.
+
+    Builds an :class:`Offloader` around an :class:`OffloadConfig` (either
+    passed whole via ``config=`` or assembled from keyword fields) and runs
+    the full pipeline — the convenience path that replaced the retired
+    ``plan_python_offload`` / ``plan_module_offload`` shims.  Frontend
+    detection, alphabet resolution (:func:`resolve_alphabet`), seeding,
+    search, and verification all behave exactly as :meth:`Offloader.plan`.
+    """
     if config is not None and config_kwargs:
         raise ValueError("pass either config= or keyword fields, not both")
     cfg = config or OffloadConfig(**config_kwargs)
     return Offloader(cfg).plan(target, inputs)
+
+
+#: historical alias of :func:`plan` — same signature, same behavior.
+plan_offload = plan

@@ -114,6 +114,31 @@ def _span_io(eqns: Sequence, used_later: Callable) -> tuple[tuple, tuple]:
     return tuple(ins), tuple(outs)
 
 
+#: call-like primitives whose inner jaxpr can be inlined during per-shard
+#: re-interpretation.  Loop primitives (scan/while/cond) stay bound — their
+#: body shapes are part of the loop semantics, not just trace residue.
+_INLINE_CALL_PRIMS = {"pjit", "custom_jvp_call", "custom_vjp_call", "remat",
+                      "checkpoint", "closed_call", "core_call"}
+
+
+def _inline_closed(eqn):
+    """The inner ClosedJaxpr of a call-like equation, or None.  Used by the
+    mesh adapter to interpret call bodies with per-shard shapes instead of
+    re-binding the call (whose stored jaxpr is specialized to the global
+    trace shapes)."""
+    if eqn.primitive.name not in _INLINE_CALL_PRIMS:
+        return None
+    for k in ("jaxpr", "call_jaxpr"):
+        j = eqn.params.get(k)
+        if j is None:
+            continue
+        if hasattr(j, "jaxpr"):                  # already a ClosedJaxpr
+            return j
+        if hasattr(j, "eqns"):                   # raw Jaxpr: close it
+            return jcore.ClosedJaxpr(j, ())
+    return None
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -147,6 +172,7 @@ class SubstitutionEngine:
         self._sites = self._resolve_sites()
         self._reference: Any = None
         self._resolved: dict = {}      # (region, requested) -> resolution
+        self._mesh_resolved: dict = {}  # (region, mesh name) -> (adapter, why)
 
     # -- site resolution ----------------------------------------------------
 
@@ -244,11 +270,153 @@ class SubstitutionEngine:
         return resolve_variant(call_site, requested, registry=self.registry,
                                backend=self.backend)
 
+    # -- mesh destinations --------------------------------------------------
+
+    def _mesh_adapter(self, site: SiteBinding, dest
+                      ) -> tuple[Optional[Callable], str]:
+        """-> (shard_map'd span adapter or None, why).  Memoized: the
+        decision depends only on (site, mesh destination) for the engine's
+        lifetime — avals and the device set are fixed."""
+        key = (site.region, dest.name)
+        hit = self._mesh_resolved.get(key)
+        if hit is not None:
+            return hit
+        self._mesh_resolved[key] = out = self._mesh_adapter_uncached(site,
+                                                                     dest)
+        return out
+
+    def _mesh_adapter_uncached(self, site: SiteBinding, dest
+                               ) -> tuple[Optional[Callable], str]:
+        """Build the genuine mesh execution of a site: the span's own
+        equations re-interpreted under ``shard_map`` on an n-device mesh.
+
+        The sharding heuristic is deliberately conservative and shape-
+        checked: the destination's spec names a dimension (batch = leading,
+        feature = trailing), every output must carry the same extent on it
+        (a reduction over the sharded dim cannot recombine by
+        concatenation), inputs that carry it are sharded and the rest
+        replicated.  Anything the heuristic cannot place — or that
+        shard_map rejects at trace time — falls back to the normal variant
+        path with the reason reported; a placement that type-checks but
+        computes wrong partials is caught by the search's numeric
+        verification and discarded as an invalid chromosome (the paper's
+        environment-adaptive trial-and-error)."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_destination_mesh
+        from repro.runtime.pspec import shard_map_compat
+
+        if any(isinstance(v, jcore.DropVar) for v in site.out_vars):
+            return None, "site has dropped outputs"
+        out_shapes = [tuple(getattr(v.aval, "shape", ()))
+                      for v in site.out_vars]
+        if not out_shapes:
+            return None, "site has no outputs"
+        dim = dest.shard_dim
+
+        def dim_of(shape: tuple) -> Optional[int]:
+            d = dim + len(shape) if dim < 0 else dim
+            return d if 0 <= d < len(shape) else None
+
+        d0 = dim_of(out_shapes[0])
+        if d0 is None:
+            return None, "output lacks the sharded dimension"
+        extent = out_shapes[0][d0]
+        if extent == 0 or extent % dest.n != 0:
+            return None, (f"output dim {extent} not divisible by "
+                          f"n={dest.n}")
+        for shape in out_shapes:
+            d = dim_of(shape)
+            if d is None or shape[d] != extent:
+                return None, "outputs disagree on the sharded dimension"
+
+        def spec_for(shape: tuple):
+            d = dim_of(shape)
+            if d is not None and shape[d] == extent:
+                parts: list = [None] * len(shape)
+                parts[d] = dest.axis
+                return P(*parts)
+            return P()
+
+        in_specs = tuple(spec_for(tuple(getattr(v.aval, "shape", ())))
+                         for v in site.in_vars)
+        out_specs = tuple(spec_for(s) for s in out_shapes)
+        if all(sp == P() for sp in in_specs):
+            return None, "no input carries the sharded dimension"
+
+        eqns = tuple(self.closed.jaxpr.eqns[site.span[0]:site.span[1]])
+        in_vars, out_vars = tuple(site.in_vars), tuple(site.out_vars)
+
+        def span_fn(*ins):
+            # Re-interpret the span with *per-shard* inputs.  Nested call
+            # primitives (pjit, custom_jvp_call, ...) must be inlined rather
+            # than bound: their stored jaxprs are specialized to the global
+            # trace shapes and would re-impose them on the shards, while
+            # their member equations are shape-polymorphic.
+            def eval_eqns(eqns_, env):
+                def read(v):
+                    return v.val if isinstance(v, jcore.Literal) else env[v]
+
+                for eqn in eqns_:
+                    inner = _inline_closed(eqn)
+                    if inner is not None \
+                            and len(inner.jaxpr.invars) == len(eqn.invars):
+                        ienv: dict = dict(zip(inner.jaxpr.constvars,
+                                              inner.consts))
+                        ienv.update(zip(inner.jaxpr.invars,
+                                        [read(v) for v in eqn.invars]))
+                        eval_eqns(inner.jaxpr.eqns, ienv)
+                        outs = [v.val if isinstance(v, jcore.Literal)
+                                else ienv[v] for v in inner.jaxpr.outvars]
+                    else:
+                        subfuns, bind_params = \
+                            eqn.primitive.get_bind_params(eqn.params)
+                        ans = eqn.primitive.bind(
+                            *subfuns, *[read(v) for v in eqn.invars],
+                            **bind_params)
+                        outs = ans if eqn.primitive.multiple_results \
+                            else [ans]
+                    for v, a in zip(eqn.outvars, outs):
+                        if not isinstance(v, jcore.DropVar):
+                            env[v] = a
+
+            env: dict = dict(zip(in_vars, ins))
+            eval_eqns(eqns, env)
+            return tuple(env[v] for v in out_vars)
+
+        try:
+            mesh = make_destination_mesh(dest.n, dest.axis)
+            sharded = shard_map_compat(span_fn, mesh=mesh,
+                                       in_specs=in_specs,
+                                       out_specs=out_specs)
+            got = jax.eval_shape(
+                sharded, *[jax.ShapeDtypeStruct(v.aval.shape, v.aval.dtype)
+                           for v in in_vars])
+        except Exception as e:  # noqa: BLE001 — any trace-time rejection
+            return None, f"shard_map build failed: {type(e).__name__}: {e}"
+        for g, v in zip(got, out_vars):
+            if (tuple(g.shape) != tuple(v.aval.shape)
+                    or g.dtype != v.aval.dtype):
+                return None, "sharded span changes output shape/dtype"
+        return sharded, (f"shard_map over {dest.n}x{dest.axis} "
+                         f"(spec {dest.spec})")
+
     # -- substitution -------------------------------------------------------
 
-    def substitute(self, impl: dict) -> SubstitutedCallable:
+    def substitute(self, impl: dict,
+                   destinations: Optional[dict] = None
+                   ) -> SubstitutedCallable:
         """``impl``: region -> implementation id ("ref", a variant name, or
-        the legacy "kernel" auto choice).  Returns the runnable program."""
+        the legacy "kernel" auto choice).  Returns the runnable program.
+
+        ``destinations`` (region -> destination name, from
+        :meth:`GeneCoding.destinations_of`) routes mesh-assigned sites
+        through :meth:`_mesh_adapter`: on hosts with enough devices the
+        site's span genuinely runs under shard_map; otherwise (or when the
+        heuristic rejects the shapes) the site falls back to the normal
+        variant resolution with the reason reported."""
+        from repro.core.genes import get_destination, probed_device_count
+
         report = SubstitutionReport()
         actions: dict[int, tuple[SiteBinding, Callable]] = {}
         skip_until: dict[int, int] = {}
@@ -266,9 +434,30 @@ class SubstitutionEngine:
                     site.region, site.pattern, requested, "ref",
                     f"claimed by block {owner}"))
                 continue
-            adapter, chosen, why = self._resolve_variant(site, requested)
-            report.choices.append(SubstitutionChoice(
-                site.region, site.pattern, requested, chosen, why))
+            dname = (destinations or {}).get(site.region)
+            if dname and dname.startswith("mesh:"):
+                mesh_dest = get_destination(dname)
+                if mesh_dest.is_cost_only:
+                    adapter, chosen, why = self._resolve_variant(site,
+                                                                 requested)
+                    why = (f"mesh {mesh_dest.name!r} unavailable "
+                           f"({probed_device_count()} device(s) < "
+                           f"{mesh_dest.n}): modeled cost charged; {why}")
+                else:
+                    adapter, mesh_why = self._mesh_adapter(site, mesh_dest)
+                    if adapter is not None:
+                        chosen, why = mesh_dest.name, mesh_why
+                    else:
+                        adapter, chosen, why = self._resolve_variant(
+                            site, requested)
+                        why = (f"mesh {mesh_dest.name!r} rejected "
+                               f"({mesh_why}); {why}")
+                report.choices.append(SubstitutionChoice(
+                    site.region, site.pattern, mesh_dest.name, chosen, why))
+            else:
+                adapter, chosen, why = self._resolve_variant(site, requested)
+                report.choices.append(SubstitutionChoice(
+                    site.region, site.pattern, requested, chosen, why))
             if adapter is not None:
                 actions[site.span[0]] = (site, adapter)
                 skip_until[site.span[0]] = site.span[1]

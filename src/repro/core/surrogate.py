@@ -43,8 +43,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-from repro.core.genes import (GeneCoding, _trip_product, get_destination,
-                              modeled_cost_s)
+from repro.core.genes import (GeneCoding, MeshDestination, _trip_product,
+                              get_destination, modeled_cost_s)
 from repro.core.ir import RegionGraph
 from repro.core.transfer_planner import plan_transfers
 
@@ -114,6 +114,10 @@ class FeatureExtractor:
     * ``block_claimed``  — regions claimed by active block genes: their own
       genes are inert, so the effective search space is smaller than the
       chromosome length suggests
+    * ``mesh_genes``     — genes placed on a mesh destination
+    * ``mesh_devices``   — total devices those mesh genes span (Σ n)
+    * ``mesh_model_axis``— mesh genes on the ``model`` axis (whose doubled
+      collective makes them systematically dearer than ``data`` placements)
     * ``dest{k}``        — genes per non-reference alphabet value (variant
       impl-index counts: how many sites run alphabet entry k)
     * ``site{i}@{k}``    — per-site one-hot: site i on alphabet value k
@@ -135,7 +139,8 @@ class FeatureExtractor:
                       for s in coding.sites}
         self.feature_names: tuple[str, ...] = tuple(
             ["prior", "h2d", "d2h", "bytes", "round_trips", "hoisted",
-             "offload_trips", "stub_cost", "block_active", "block_claimed"]
+             "offload_trips", "stub_cost", "block_active", "block_claimed",
+             "mesh_genes", "mesh_devices", "mesh_model_axis"]
             + [f"dest{k}" for k in range(1, coding.arity)]
             + [f"site{i}@{k}" for i in range(coding.length)
                for k in range(1, coding.arity)])
@@ -149,7 +154,8 @@ class FeatureExtractor:
         coding, graph = self.coding, self.graph
         impl = dict(self.base_impl)
         impl.update(coding.decode(bits))
-        plan = plan_transfers(graph, impl, hoist=True)
+        plan = plan_transfers(graph, impl, hoist=True,
+                              destinations=coding.destinations_of(bits))
         n_h2d = n_d2h = n_hoist = 0
         total_bytes = 0.0
         round_trips = 0.0
@@ -164,16 +170,24 @@ class FeatureExtractor:
             if t.per_iteration:
                 trips = _trip_product(graph, graph.by_name(t.at_region))
                 round_trips += trips
-            total_bytes += trips * float(self.var_bytes.get(t.var, 1.0))
+            total_bytes += (trips * float(self.var_bytes.get(t.var, 1.0))
+                            / max(t.shards, 1))
         claimed = coding.claimed_members(bits)
         offload_trips = sum(
             self._trip[s.region] for s, v in zip(coding.sites, bits)
-            if int(v) != 0 and self._dests[int(v)].executable
+            if int(v) != 0 and not self._dests[int(v)].is_cost_only
             and s.region not in claimed)
         n_block = sum(1 for s in coding.sites
                       if s.members and impl.get(s.region) != s.ref_impl)
         stub = modeled_cost_s(graph, coding, bits) \
-            if any(not d.executable for d in self._dests) else 0.0
+            if any(d.placement_tag is not None for d in self._dests) else 0.0
+        mesh_genes = mesh_devices = mesh_model = 0.0
+        for s, v in zip(coding.sites, bits):
+            d = self._dests[int(v)]
+            if isinstance(d, MeshDestination) and s.region not in claimed:
+                mesh_genes += 1.0
+                mesh_devices += float(d.n)
+                mesh_model += 1.0 if d.axis == "model" else 0.0
         dest_counts = [sum(1 for v in bits if int(v) == k)
                        for k in range(1, coding.arity)]
         onehot = [1.0 if int(v) == k else 0.0
@@ -182,7 +196,8 @@ class FeatureExtractor:
             [float(self.prior(bits)), float(n_h2d), float(n_d2h),
              total_bytes,
              round_trips, float(n_hoist), float(offload_trips), stub,
-             float(n_block), float(len(claimed))]
+             float(n_block), float(len(claimed)),
+             mesh_genes, mesh_devices, mesh_model]
             + [float(c) for c in dest_counts] + onehot)
         self._memo[bits] = vec
         return vec

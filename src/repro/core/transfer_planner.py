@@ -28,6 +28,10 @@ class Transfer:
     at_region: str          # program point (region whose entry hosts it)
     hoisted_from: Optional[str] = None   # loop it was pulled out of
     per_iteration: bool = False
+    #: mesh fan-out: the transfer splits across this many parallel device
+    #: links (1 = a scalar device).  Byte-volume consumers divide by it —
+    #: each link carries 1/shards of the variable.
+    shards: int = 1
 
 
 @dataclass
@@ -95,20 +99,39 @@ def _alt_index(alternatives: tuple, impl_id) -> Optional[int]:
 
 
 def plan_transfers(graph: RegionGraph, impl: dict[str, str],
-                   hoist: bool = True) -> TransferPlan:
+                   hoist: bool = True,
+                   destinations: Optional[dict[str, str]] = None
+                   ) -> TransferPlan:
     """impl: region -> an implementation id.  A region computes on the
     accelerator when its id sits at position >= 1 of the region's own
     ``alternatives`` menu (position 0 is the reference path); ids outside
     the menu fall back to the global :data:`DEVICE_IMPLS` name set, or the
     boolean True (a flag-valued knob on its accelerated setting — matched
     by identity so an integer impl id 1 can never alias it).  Regions
-    marked ``meta["schedule_knob"]`` never count as device placements."""
+    marked ``meta["schedule_knob"]`` never count as device placements.
+
+    ``destinations`` (region -> destination name, from
+    :meth:`GeneCoding.destinations_of`) refines the per-site decision with
+    the Destination API: a region assigned to a mesh destination counts as
+    a device placement regardless of its decoded impl (mesh genes decode to
+    the reference implementation), and its transfers carry
+    ``shards = mesh.n`` — each of the n links moves one shard."""
+
+    def _mesh_shards(r: Region) -> int:
+        """0 = not mesh-assigned; otherwise the mesh's device count."""
+        name = (destinations or {}).get(r.name)
+        if not name or not name.startswith("mesh:"):
+            return 0
+        from repro.core.genes import get_destination
+        return get_destination(name).device_count
 
     def on_device(r: Region) -> bool:
+        if r.meta.get("schedule_knob"):
+            return False
+        if _mesh_shards(r):
+            return True
         impl_id = impl.get(r.name)
         if impl_id is None:
-            return False
-        if r.meta.get("schedule_knob"):
             return False
         idx = _alt_index(r.alternatives, impl_id)
         if idx is not None:
@@ -116,7 +139,7 @@ def plan_transfers(graph: RegionGraph, impl: dict[str, str],
         return impl_id is True or impl_id in DEVICE_IMPLS
 
     plan = TransferPlan()
-    device_vars: set = set()      # vars whose current value lives on device
+    device_vars: dict = {}        # var -> shard count of its resident copy
     host_dirty: set = set()       # vars (re)written by host since last upload
 
     def walk(regions: list[Region]):
@@ -128,6 +151,7 @@ def plan_transfers(graph: RegionGraph, impl: dict[str, str],
     def _visit(r: Region):
         children = graph.children(r.name)
         if on_device(r):
+            shards = _mesh_shards(r) or 1
             for v in sorted(r.uses):
                 if v in device_vars and v not in host_dirty:
                     continue  # already resident — hoisted/cached
@@ -135,21 +159,23 @@ def plan_transfers(graph: RegionGraph, impl: dict[str, str],
                 plan.transfers.append(Transfer(
                     v, "h2d", target,
                     hoisted_from=r.parent if (hoist and target != r.name) else None,
-                    per_iteration=not (hoist and target != r.name) and r.parent is not None))
-                device_vars.add(v)
+                    per_iteration=not (hoist and target != r.name) and r.parent is not None,
+                    shards=shards))
+                device_vars[v] = shards
                 host_dirty.discard(v)
-            device_vars.update(r.defs)
             for v in r.defs:
+                device_vars[v] = shards
                 host_dirty.discard(v)
         else:
             # host region: device-resident vars it reads must come back
-            for v in sorted(r.uses & device_vars):
+            for v in sorted(r.uses & device_vars.keys()):
                 plan.transfers.append(Transfer(
                     v, "d2h", r.name,
-                    per_iteration=r.parent is not None))
+                    per_iteration=r.parent is not None,
+                    shards=device_vars.get(v, 1)))
             host_dirty.update(r.defs)
             for v in r.defs:
-                device_vars.discard(v)
+                device_vars.pop(v, None)
             for c in children:
                 _visit(c)
 
@@ -172,3 +198,47 @@ def plan_transfers(graph: RegionGraph, impl: dict[str, str],
 
     walk([r for r in graph.regions])
     return plan
+
+
+# ---------------------------------------------------------------------------
+# mesh cost model (deterministic priors for MeshDestination genes)
+# ---------------------------------------------------------------------------
+
+#: per-link host<->device bandwidth prior (PCIe-class, bytes/s) — each of a
+#: mesh's n links moves its own shard, so h2d/d2h volume divides by n.
+MESH_LINK_BYTES_PER_S = 12e9
+#: intra-mesh collective bandwidth prior (NVLink/ICI-class, bytes/s).
+MESH_COLLECTIVE_BYTES_PER_S = 50e9
+#: fixed per-launch mesh dispatch cost, charged once per device per trip.
+MESH_LAUNCH_OVERHEAD_S = 5e-5
+
+
+def collective_factor(axis: str, n: int) -> float:
+    """Modeled collective volume as a multiple of the region's output bytes.
+
+    The ring bound: an all-gather (data axis, assembling sharded outputs)
+    moves (n-1)/n of the tensor per device; a model-axis placement pays a
+    reduce-scatter *and* an all-gather to recombine partials — twice that.
+    """
+    if n <= 1:
+        return 0.0
+    base = (n - 1) / n
+    return base * (2.0 if axis == "model" else 1.0)
+
+
+def modeled_mesh_cost_s(h2d_bytes: float, d2h_bytes: float, trips: int,
+                        axis: str, n: int) -> float:
+    """Deterministic modeled seconds for running a region on an n-mesh.
+
+    Per-shard transfers (volume / n over the per-link bandwidth) + the
+    axis's collective term over output bytes + a per-device launch
+    overhead, all scaled by the static trip estimate.  This is the mesh
+    analogue of the fpga_stub launch/per-trip model: what
+    :func:`repro.core.genes.modeled_cost_s` charges when a mesh gene is
+    not genuinely executed on this host."""
+    if n <= 0:
+        return 0.0
+    per_trip = ((h2d_bytes + d2h_bytes) / max(n, 1) / MESH_LINK_BYTES_PER_S
+                + collective_factor(axis, n) * d2h_bytes
+                / MESH_COLLECTIVE_BYTES_PER_S)
+    return trips * per_trip + n * MESH_LAUNCH_OVERHEAD_S

@@ -191,9 +191,14 @@ def generic_plan_report(coding, values, base_impl: Optional[dict] = None,
             why = (f"impl_index {dest.impl_index} clamped to {impl!r} "
                    f"({len(impls)} impls)")
         is_ref = impl == s.ref_impl or str(impl) in _REF_IMPLS
-        if not dest.executable:
+        if dest.placement_tag is not None:
+            # stub devices and mesh placements: the decode is the reference
+            # path, the destination name is what the gene actually chose
             requested = dest.name
-            why = f"cost-only destination {dest.name!r} runs the reference path"
+            why = (f"cost-only destination {dest.name!r} runs the reference "
+                   f"path" if dest.is_cost_only else
+                   f"mesh destination {dest.name!r} (sharded execution is "
+                   f"the frontend's to realize)")
         elif is_ref:
             requested, why = "ref", why or "requested"
         report.choices.append(SubstitutionChoice(

@@ -10,6 +10,8 @@ state (the dry-run sets XLA_FLAGS before any jax initialization).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
 
@@ -24,3 +26,16 @@ def make_host_mesh(*, model: int = 1):
     n = len(jax.devices())
     model = max(1, min(model, n))
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+@functools.lru_cache(maxsize=None)
+def make_destination_mesh(n: int, axis: str = "data"):
+    """The mesh behind one ``MeshDestination`` gene: ``n`` devices on a
+    single named axis.  Cached per (n, axis) — the device set is fixed for
+    the process, and the substitution engine asks for the same mesh once
+    per sharded site."""
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(f"mesh destination wants {n} devices, "
+                         f"host has {len(devices)}")
+    return jax.make_mesh((n,), (axis,))

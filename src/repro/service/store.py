@@ -120,6 +120,22 @@ class PlanRecord:
             return float("nan")
         return self.baseline_time_s / self.best_time_s
 
+    def mesh_destinations(self) -> dict:
+        """region -> :class:`~repro.core.genes.MeshDestination` for every
+        gene the stored winner placed on a mesh.  Destinations are wire
+        names (Destination v2), so mesh placements round-trip through the
+        JSONL schema with no extra fields — this just parses them back."""
+        from repro.core.genes import MeshDestination, get_destination
+
+        out = {}
+        for region, v in zip(self.sites, self.bits):
+            idx = int(v)
+            if 0 <= idx < len(self.destinations):
+                dest = get_destination(self.destinations[idx])
+                if isinstance(dest, MeshDestination):
+                    out[region] = dest
+        return out
+
     def to_json(self) -> dict:
         rec = dataclasses.asdict(self)
         rec["bits"] = [int(v) for v in self.bits]

@@ -34,8 +34,11 @@ try:
 except ValueError:
     pass
 
+# mesh wire names are first-class alphabet entries (Destination v2): the
+# properties must hold with them mixed in
 ALPHA_POOL = ("cpu", "gpu", "fpga_stub", "gpu_fused", "gpu_pallas", "xstub",
-              "xdev0", "xdev1", "xdev2", "xdev3", "xdev4")
+              "xdev0", "xdev1", "xdev2", "xdev3", "xdev4",
+              "mesh:data:4:batch", "mesh:model:2:feature")
 
 
 def _sites(extra_counts):
@@ -116,7 +119,8 @@ def test_phenotype_key_matches_decode_equivalence(alphabet, extras, data):
         return (tuple(sorted(coding.decode(values).items())),
                 tuple((s.region, alphabet[v])
                       for s, v in zip(coding.sites, values)
-                      if not get_destination(alphabet[v]).executable))
+                      if get_destination(alphabet[v]).placement_tag
+                      is not None))
 
     assert (key(v1) == key(v2)) == (pheno(v1) == pheno(v2))
 
@@ -289,3 +293,109 @@ def test_block_claiming_property_members_always_ref(data):
 def test_map_destination_value_examples(value, rec, expect):
     coding = coding_from_graph(_graph())     # binary cpu/gpu
     assert _map_destination_value(value, rec, coding) == expect
+
+
+# ---------------------------------------------------------------------------
+# mesh destinations (Destination v2)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_wire_roundtrip():
+    from repro.core.genes import Destination, MeshDestination
+
+    d = MeshDestination(axis="data", n=4)
+    assert d.name == d.wire() == "mesh:data:4:batch"
+    assert d.device_count == 4 and d.shard_dim == 0
+    assert MeshDestination.from_wire(d.wire()) == d
+    assert Destination.from_wire(d.wire()) == d       # base-class entry too
+    # model axis defaults to a feature-dim spec
+    m = MeshDestination(axis="model", n=2)
+    assert m.name == "mesh:model:2:feature" and m.shard_dim == -1
+    assert get_destination("mesh:model:2:feature") == m
+    # explicit dim specs parse
+    k = MeshDestination.from_wire("mesh:data:2:dim1")
+    assert k.shard_dim == 1
+
+
+@pytest.mark.parametrize("wire", [
+    "mesh:diag:2:batch",        # unknown axis
+    "mesh:data:0:batch",        # no devices
+    "mesh:data:two:batch",      # non-integer n
+    "mesh:data:2:cols",         # unknown spec
+    "mesh:data",                # too few fields
+])
+def test_mesh_bad_wire_raises(wire):
+    from repro.core.genes import MeshDestination
+
+    with pytest.raises(ValueError):
+        MeshDestination.from_wire(wire)
+    with pytest.raises(KeyError):
+        get_destination(wire)
+
+
+def test_mesh_gene_decodes_to_ref_and_tags_phenotype():
+    coding = coding_from_graph(_graph(),
+                               destinations=("cpu", "gpu",
+                                             "mesh:data:4:batch"))
+    # a mesh gene never invents an implementation: the decoded impl map is
+    # the reference path (the frontend realizes sharding, or the cost model
+    # charges it)
+    decoded = coding.decode((2, 2))
+    assert decoded == {"two": "ref", "three": "ref"}
+    key = phenotype_key(coding)
+    # ...but placement changes the phenotype: all-ref, stub-parked and
+    # mesh-placed chromosomes are three different programs
+    assert key((0, 0)) != key((2, 0))
+    assert key((2, 0)) != key((2, 2))
+
+
+def test_mesh_modeled_cost_charged_unless_executed():
+    from repro.core import genes
+    from repro.core.genes import modeled_cost_s, probed_device_count
+
+    graph = _graph()
+    coding = coding_from_graph(graph,
+                               destinations=("cpu", "gpu",
+                                             "mesh:data:4:batch"))
+    mesh_bits = (2, 2)
+    # on a single-device host the mesh is cost-only: positive modeled charge
+    assert probed_device_count() < 4
+    assert modeled_cost_s(graph, coding, mesh_bits) > 0.0
+    assert modeled_cost_s(graph, coding, (0, 0)) == 0.0
+    # a fitness that genuinely shard_maps (mesh_executed=True) on a host
+    # that has the devices is not double-charged
+    old = genes._PROBED_DEVICE_COUNT
+    genes._PROBED_DEVICE_COUNT = 8
+    try:
+        assert modeled_cost_s(graph, coding, mesh_bits,
+                              mesh_executed=True) == 0.0
+        # modeled-only fitness still pays, even with the devices present
+        assert modeled_cost_s(graph, coding, mesh_bits) > 0.0
+    finally:
+        genes._PROBED_DEVICE_COUNT = old
+
+
+def test_mesh_proposals_respect_device_count():
+    from repro.core.genes import (VARIANT_ALPHABET, mesh_proposals,
+                                  with_mesh_destinations)
+
+    assert mesh_proposals(device_count=1) == ()
+    assert mesh_proposals(device_count=4) == ("mesh:data:2:batch",
+                                              "mesh:data:4:batch")
+    assert mesh_proposals(axes=("data", "model"), device_count=2) == \
+        ("mesh:data:2:batch", "mesh:model:2:feature")
+    # with_mesh_destinations extends an alphabet without duplicates
+    ext = with_mesh_destinations(VARIANT_ALPHABET, device_count=4)
+    assert ext[:len(VARIANT_ALPHABET)] == VARIANT_ALPHABET
+    assert ext == with_mesh_destinations(ext, device_count=4)[:len(ext)]
+    # single-device host: alphabet unchanged (CI fingerprints stay stable)
+    assert with_mesh_destinations(VARIANT_ALPHABET, device_count=1) == \
+        VARIANT_ALPHABET
+
+
+def test_mesh_watts_scale_with_device_count():
+    from repro.core.genes import MESH_DEVICE_POWER_W, MeshDestination
+
+    d = MeshDestination(axis="data", n=4)
+    assert d.watts() == 4 * MESH_DEVICE_POWER_W
+    assert get_destination("cpu").watts() > 0.0

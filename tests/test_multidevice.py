@@ -96,3 +96,123 @@ def test_sharded_paths_match_reference_on_8_devices():
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "MULTIDEVICE_OK" in res.stdout, (res.stdout[-2000:], res.stderr[-3000:])
+
+
+_MESH_GA_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import Evaluation, GAConfig, OffloadConfig, Offloader
+    from repro.core.frontends.registry import decoded_pattern
+    from repro.core.genes import probed_device_count
+    from repro.core.objectives import OBJECTIVES
+    from repro.service import PlanStore, record_from_result
+
+    assert jax.device_count() == 8
+    assert probed_device_count() == 8
+
+    def app(x, w1, w2):
+        h = jnp.tanh(x @ w1)
+        g = jax.nn.relu(h @ w2)
+        y = g * 0.5 + h * 0.1
+        return jnp.tanh(y @ w1) + y
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(64, 64)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(64, 64)) * 0.1, jnp.float32)
+    args = (x, w1, w2)
+    ref = np.asarray(app(*args))
+
+    cfg = OffloadConfig(
+        ga=GAConfig(population=10, generations=4, seed=0,
+                    objectives=OBJECTIVES),
+        options={"example_args": args}, repeats=1)
+    off = Offloader(cfg)
+    ctx = off.prepare(app)
+
+    # the frontend proposed this host's real meshes alongside the variants
+    alpha = ctx.coding.destinations
+    mesh_names = [d for d in alpha if d.startswith("mesh:")]
+    assert mesh_names == ["mesh:data:2:batch", "mesh:data:4:batch",
+                          "mesh:data:8:batch"], alpha
+    assert ctx.bundle.mesh_executed
+
+    # deterministic fitness that still GENUINELY executes every chromosome:
+    # decode -> substitute (mesh genes become shard_map spans on the real
+    # 8-device mesh) -> run -> compare against the reference.  Latency is
+    # then a deterministic function of what actually ran, so the search and
+    # its Pareto front are reproducible.
+    engine = ctx.bundle.context["engine"]
+    coding = ctx.coding
+    mesh_ran = set()
+
+    def fitness(values):
+        values = tuple(values)
+        impl = decoded_pattern(coding, values, {})
+        sub = engine.substitute(
+            impl, destinations=coding.destinations_of(values))
+        out = jax.jit(sub.fn)(*args)
+        ok = bool(np.allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5))
+        t = 1.0
+        for c in sub.report.choices:
+            if c.chosen.startswith("mesh:"):
+                mesh_ran.add(c.chosen)
+                t -= 0.10                      # genuinely sharded: fastest
+            elif c.chosen != "ref":
+                t -= 0.04                      # single-device variant
+        return Evaluation(values, max(t, 0.05), ok)
+
+    ctx.config.fitness_fn = fitness
+    res = off.search(ctx)
+    assert mesh_ran, "no chromosome ever reached shard_map execution"
+
+    def is_mesh(ev):
+        return any(n.startswith("mesh:")
+                   for n in coding.destinations_of(ev.bits).values())
+
+    front = res.front
+    mesh_points = [ev for ev in front if is_mesh(ev)]
+    single_points = [ev for ev in front if not is_mesh(ev)]
+    assert mesh_points, [ev.bits for ev in front]
+    assert single_points, [ev.bits for ev in front]
+
+    # the winning mesh plan's artifact matches the single-device reference
+    best_mesh = min(mesh_points, key=lambda ev: ev.time_s)
+    art = off.apply(ctx, best_mesh.bits)
+    got = np.asarray(jax.jit(art.fn)(*args))
+    assert np.allclose(got, ref, rtol=1e-4, atol=1e-5)
+    assert any(c.chosen.startswith("mesh:") and "shard_map" in c.why
+               for c in art.report.choices), art.report.choices
+
+    # store -> load -> rehydrate -> serve, with no new search
+    rec = record_from_result(res, ctx.fingerprint)
+    rec = dataclasses.replace(rec, bits=tuple(best_mesh.bits))
+    import tempfile
+    store = PlanStore(tempfile.mkdtemp(prefix="mesh_plan_store_"))
+    store.put(rec)
+    loaded = store.load(ctx.fingerprint)
+    assert loaded.mesh_destinations(), loaded.destinations
+    art2 = store.rehydrate(loaded, app, config=cfg)
+    got2 = np.asarray(jax.jit(art2.fn)(*args))
+    assert np.allclose(got2, ref, rtol=1e-4, atol=1e-5)
+    print("MESH_GA_OK")
+""")
+
+
+@pytest.mark.slow
+def test_mesh_ga_search_on_8_devices_matches_reference():
+    """The PR-10 acceptance loop: on a forced-8-device host the GA searches
+    placement x parallelism (mesh genes alongside variants), the front
+    carries mesh and single-device points, the winning mesh plan's outputs
+    match the single-device reference, and the PlanStore round-trips it
+    into a servable artifact without a new search."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _MESH_GA_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "MESH_GA_OK" in res.stdout, (res.stdout[-2000:],
+                                        res.stderr[-3000:])

@@ -3,9 +3,10 @@
 One parametrized contract runs across every registered frontend: graph
 invariants, plan round-trip through ``Offloader.plan`` with a unified
 ``OffloadResult``, serial==parallel reproducibility at fixed seed, and
-multi-destination gene decode.  Plus the satellite surfaces: deprecation
-shims, ``GAConfig.pool`` process-pool selection, surrogate rank-correlation
-reporting, and the similarity seed bank.
+multi-destination gene decode.  Plus the satellite surfaces: the ``plan()``
+module-level wrapper, alphabet resolution, ``GAConfig.pool`` process-pool
+selection, surrogate rank-correlation reporting, and the similarity seed
+bank.
 """
 import math
 import warnings
@@ -16,13 +17,13 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (EXTENDED_ALPHABET, Evaluation, GAConfig,
-                        OffloadConfig, OffloadResult, Offloader, Region,
-                        RegionGraph, coding_from_graph, detect_frontend,
-                        frontend_names, get_frontend, modeled_cost_s,
-                        plan_offload, run_ga)
+from repro.core import (DEFAULT_ALPHABET, EXTENDED_ALPHABET, Evaluation,
+                        GAConfig, OffloadConfig, OffloadResult, Offloader,
+                        Region, RegionGraph, coding_from_graph,
+                        detect_frontend, frontend_names, get_frontend,
+                        modeled_cost_s, plan, plan_offload, resolve_alphabet,
+                        run_ga)
 from repro.core.ga import GAResult
-from repro.core.loop_offload import loop_offload_pass
 from repro.core.offload import SeedBank, _pattern_db_seed, ga_search
 from repro.core.pattern_db import default_db
 
@@ -282,23 +283,50 @@ def test_destination_cost_steers_search_away_from_stub():
 
 
 # ---------------------------------------------------------------------------
-# satellites: shims, process pool, rank correlation, seed bank
+# satellites: plan() wrapper, alphabet resolution, process pool,
+# rank correlation, seed bank
 # ---------------------------------------------------------------------------
 
 
-def test_deprecated_shims_warn_and_work():
-    from repro.core import plan_python_offload
-    from repro.core.frontends.ast_frontend import PyProgram
-    from repro.core.planner import PythonPlanResult
+def test_plan_wrapper_assembles_config_from_kwargs():
+    # the module-level one-liner that replaced the retired planner shims
+    res = plan(_ir_graph(), fitness_fn=_det_fitness,
+               ga=GAConfig(population=6, generations=2, seed=0))
+    assert isinstance(res, OffloadResult)
+    assert res.frontend == "ir"
+    assert set(res.pattern) >= {s.region for s in res.coding.sites}
+    # a whole config works too, and both at once is an error
+    res2 = plan(_ir_graph(), config=OffloadConfig(
+        fitness_fn=_det_fitness,
+        ga=GAConfig(population=6, generations=2, seed=0)))
+    assert res2.best.bits == res.best.bits
+    with pytest.raises(ValueError, match="not both"):
+        plan(_ir_graph(), config=OffloadConfig(), repeats=1)
 
-    p = PyProgram(PY_SRC, consts=PY_CONSTS)
-    with pytest.warns(DeprecationWarning):
-        res = plan_python_offload(
-            p, _py_inputs(), repeats=1,
-            ga_cfg=GAConfig(population=6, generations=2, seed=0))
-    assert isinstance(res, PythonPlanResult)
-    assert res.final_time_s <= res.baseline_time_s * 1.5
-    assert set(res.impl) >= {s.region for s in res.loops.coding.sites}
+
+def test_resolve_alphabet_explicit_config_wins():
+    cfg = OffloadConfig(destinations=EXTENDED_ALPHABET)
+    assert resolve_alphabet(cfg, ("cpu", "gpu")) == EXTENDED_ALPHABET
+
+
+def test_resolve_alphabet_falls_back_to_frontend_proposal():
+    assert resolve_alphabet(OffloadConfig(), ("cpu", "gpu_fused")) == \
+        ("cpu", "gpu_fused")
+    assert resolve_alphabet(None, ("cpu", "gpu_fused")) == \
+        ("cpu", "gpu_fused")
+
+
+def test_resolve_alphabet_defaults_when_nothing_given():
+    assert resolve_alphabet(None) == DEFAULT_ALPHABET
+    assert resolve_alphabet(OffloadConfig(), None) == DEFAULT_ALPHABET
+
+
+def test_resolve_alphabet_validates_names():
+    with pytest.raises(KeyError):
+        resolve_alphabet(OffloadConfig(destinations=("cpu", "nope")))
+    # mesh wire names parse on demand and are valid alphabet entries
+    assert resolve_alphabet(None, ("cpu", "gpu", "mesh:data:4:batch")) == \
+        ("cpu", "gpu", "mesh:data:4:batch")
 
 
 def test_gaconfig_pool_runs_search_in_processes():
@@ -350,16 +378,6 @@ def test_surrogate_rank_corr_reported_by_search():
                       GAConfig(population=8, generations=4, seed=1))
     corr = ga.surrogate_rank_corr
     assert math.isfinite(corr) and -1.0 <= corr <= 1.0
-
-
-def test_loop_offload_pass_shim_warns_and_matches_ga_search():
-    g = _ir_graph()
-    with pytest.warns(DeprecationWarning, match="ga_search"):
-        res = loop_offload_pass(g, _det_fitness,
-                                GAConfig(population=8, generations=4, seed=1))
-    _, ga = ga_search(g, _det_fitness,
-                      GAConfig(population=8, generations=4, seed=1))
-    assert res.ga.best.bits == ga.best.bits
 
 
 def test_seed_bank_neighbor_warm_start(tmp_path):
@@ -486,3 +504,21 @@ def test_run_ga_seed_injection_measures_seed_first():
     run_ga(4, fit, GAConfig(population=6, generations=1, seed=0),
            seeds=[(1, 0, 1, 0)])
     assert (1, 0, 1, 0) in measured
+
+
+def test_seed_bank_roundtrips_mesh_alphabets(tmp_path):
+    # mesh wire names are ordinary destination names to the bank: a record
+    # over a mesh-bearing alphabet seeds the same alphabet verbatim, and
+    # cross-alphabet mapping stays name-faithful when the name is present
+    g = _ir_graph()
+    mesh_alpha = ("cpu", "gpu", "mesh:data:4:batch")
+    mesh_coding = coding_from_graph(g, destinations=mesh_alpha)
+    bank = SeedBank(str(tmp_path))
+    bank.record(g, mesh_coding, (2, 0, 1))
+    assert bank.neighbor_seeds(g, mesh_coding) == [(2, 0, 1)]
+    # a wider alphabet containing the same mesh name keeps the placement
+    wide = coding_from_graph(
+        g, destinations=("cpu", "gpu", "gpu_fused", "mesh:data:4:batch"))
+    assert bank.neighbor_seeds(g, wide) == [(3, 0, 1)]
+    # an alphabet without it degrades to the primary accelerator slot
+    assert bank.neighbor_seeds(g, coding_from_graph(g)) == [(1, 0, 1)]

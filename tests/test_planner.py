@@ -9,7 +9,7 @@ from repro.core.frontends import module_frontend
 from repro.core.frontends.ast_frontend import PyProgram
 from repro.core.ga import GAConfig
 from repro.core.genes import coding_from_graph
-from repro.core.planner import plan_python_offload
+from repro.core.offload import plan
 from repro.models.plan import ExecPlan
 
 SRC = """
@@ -37,18 +37,17 @@ def test_python_offload_end_to_end(rng):
     p = PyProgram(SRC, consts=consts)
     inputs = dict(a=rng.random((16, 16)), b=rng.random((16, 16)),
                   x=rng.random(16))
-    with pytest.warns(DeprecationWarning):   # legacy shim coverage
-        res = plan_python_offload(
-            p, inputs, ga_cfg=GAConfig(population=6, generations=3, seed=0),
-            repeats=1)
+    res = plan(p, inputs, ga=GAConfig(population=6, generations=3, seed=0),
+               repeats=1)
     # block pass found and kept the matmul replacement
     assert any(b.pattern == "matmul" for b in res.block.offloads)
     # final plan beats the all-interpreted baseline
-    assert res.final_time_s < res.baseline_time_s
+    assert res.best.time_s < res.baseline.time_s
     assert res.speedup > 2.0
-    # claimed block regions are excluded from the GA gene
-    claimed = set(res.lib_calls)
-    assert all(s.region not in claimed for s in res.loops.coding.sites)
+    # block regions kept as lib calls are excluded from the GA gene
+    claimed = {r for r, impl in res.pattern.items() if impl == "lib"}
+    assert claimed
+    assert all(s.region not in claimed for s in res.coding.sites)
 
 
 def test_module_graph_sites_per_family():

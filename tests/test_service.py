@@ -697,3 +697,30 @@ def test_no_ttl_configured_means_no_sweep(tmp_path):
         svc.stop_refinement()
         assert svc.stats.evictions == 0
         assert svc.store.load(fp) is not None
+
+
+def test_store_roundtrips_mesh_destinations(tmp_path):
+    # mesh placements are wire names in the alphabet, so a mesh plan rides
+    # the JSONL schema unchanged: store -> load -> parsed MeshDestination
+    from repro.core.genes import MeshDestination
+
+    alphabet = ("cpu", "gpu", "mesh:data:4:batch")
+    off = Offloader(_ir_config(destinations=alphabet))
+    ctx = off.prepare(_ir_graph())
+    res = off.search(ctx)
+    rec = record_from_result(res, ctx.fingerprint)
+    import dataclasses
+    mesh_bits = tuple(2 if i == 0 else 0
+                      for i in range(len(rec.sites)))
+    rec = dataclasses.replace(rec, bits=mesh_bits)
+
+    store = PlanStore(str(tmp_path))
+    store.put(rec)
+    loaded = store.load(ctx.fingerprint)
+    assert loaded.destinations == alphabet
+    parsed = loaded.mesh_destinations()
+    assert parsed == {rec.sites[0]: MeshDestination(axis="data", n=4)}
+    assert parsed[rec.sites[0]].wire() == "mesh:data:4:batch"
+    # the stored plan still drives the program: rehydrate checks coding
+    # compatibility against the live context (no new search)
+    store.check(loaded, ctx)

@@ -452,3 +452,64 @@ def test_invalid_variant_result_is_rejected_by_verifier(rng):
     res = Offloader(cfg).plan(noncausal_app)
     assert res.verification["verified"]
     assert res.pattern[matched[0]] == "ref"
+
+
+# ---------------------------------------------------------------------------
+# mesh destinations: genuine shard_map execution and cost-only fallback
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_destination_executes_span_under_shard_map(rng):
+    # n=1 is a degenerate but *genuine* mesh: available on any host, so the
+    # full route — gene name -> _mesh_adapter -> shard_map span -> numerics —
+    # runs in-process on single-device CI
+    fn, args, pat = _rmsnorm_case(rng, 16, 8)
+    engine = _engine_for(fn, args)
+    region = _matched_region(engine, pat)
+    sub = engine.substitute({region: "ref"},
+                            destinations={region: "mesh:data:1:batch"})
+    choice = next(c for c in sub.report.choices if c.region == region)
+    assert choice.requested == "mesh:data:1:batch"
+    assert choice.chosen == "mesh:data:1:batch"
+    assert "shard_map" in choice.why
+    v = verify(fn(*args), sub(*args))
+    assert v.ok, v
+
+
+def test_mesh_unavailable_falls_back_to_variant_with_reason(rng):
+    # single-device host, 8-way mesh: cost-only — the site takes the normal
+    # variant path and the report says why
+    fn, args, pat = _rmsnorm_case(rng, 16, 8)
+    engine = _engine_for(fn, args)
+    region = _matched_region(engine, pat)
+    sub = engine.substitute({region: "fused_jnp"},
+                            destinations={region: "mesh:data:8:batch"})
+    choice = next(c for c in sub.report.choices if c.region == region)
+    assert choice.requested == "mesh:data:8:batch"
+    assert "unavailable" in choice.why and "modeled cost" in choice.why
+    assert choice.chosen == "fused_jnp"
+    v = verify(fn(*args), sub(*args))
+    assert v.ok, v
+
+
+def test_mesh_shape_rejection_falls_back_with_reason(rng):
+    # batch extent 15 does not divide n=1? it does — use an indivisible
+    # mesh instead: extent 15 on a 1-device mesh is fine, so force the
+    # reject through a scalar-output span (no sharded dimension)
+    def scalar_app(x, w):
+        return jnp.sum(jnp.tanh(x @ w) ** 2) + jnp.sum(x * x) * 0.5
+
+    x = _arr(rng, 8, 8)
+    w = _arr(rng, 8, 8, scale=0.1)
+    graph = jf.build_graph(scalar_app, x, w)
+    jf.annotate_variants(graph, default_db())
+    regions = [r.name for r in graph.offloadable()]
+    assert regions
+    engine = SubstitutionEngine(scalar_app, (x, w), graph)
+    sub = engine.substitute({regions[0]: "ref"},
+                            destinations={regions[0]: "mesh:data:1:batch"})
+    choice = next(c for c in sub.report.choices if c.region == regions[0])
+    assert "rejected" in choice.why
+    assert choice.chosen == "ref"
+    v = verify(scalar_app(x, w), sub(x, w))
+    assert v.ok, v
